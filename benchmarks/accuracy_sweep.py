@@ -1,0 +1,92 @@
+"""Paper Fig. 5 + 6 analogue: accuracy vs relative quantization scale.
+
+K-standalone (BlockQuant vs ChannelQuant), V-standalone (TokenQuant), and
+the combined sweep — measured as next-token top-1 agreement with the
+uncompressed-cache model and ΔCE, on the tiny LM trained on real text
+(DESIGN.md §6 accuracy-proxy note).  The deliverable is the *turning point*
+phenomenology: accuracy flat, then cliff.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.models import model as M
+
+K_SCALES = [0.02, 0.05, 0.08, 0.12, 0.2, 0.35, 0.5]
+V_SCALES = [0.05, 0.1, 0.15, 0.25, 0.4, 0.6]
+N_EVAL_SEQ = 8
+PREFIX = 64
+DECODE = 32
+
+
+def _eval_agreement(cfg_ref, cfg_q, params, data) -> tuple[float, float]:
+    """(top-1 agreement, ΔCE) of compressed vs raw decode over text."""
+    jax.clear_caches()  # bound the executable cache across configs
+    batch = data.batch_at(777)
+    toks = batch["tokens"][:N_EVAL_SEQ]
+    agree, dce = [], []
+    for cfg in (cfg_ref, cfg_q):
+        prefill = jax.jit(lambda p, b: M.prefill(p, cfg, b, common.SEQ * 2,
+                                                 q_chunk=64, kv_chunk=64))
+        decode = jax.jit(lambda p, t, pos, st: M.decode_step(p, cfg, t, pos, st))
+        _, state = prefill(params, {"tokens": jnp.asarray(toks[:, :PREFIX])})
+        preds, lls = [], []
+        cur = jnp.asarray(toks[:, PREFIX])
+        pos = PREFIX
+        for t in range(DECODE):
+            lg, state = decode(params, cur, jnp.asarray(pos, jnp.int32), state)
+            logp = jax.nn.log_softmax(lg.astype(jnp.float32), -1)
+            preds.append(np.asarray(jnp.argmax(lg, -1)))
+            nxt = jnp.asarray(toks[:, PREFIX + t + 1])
+            lls.append(float(jnp.take_along_axis(logp, nxt[:, None], 1).mean()))
+            cur = nxt
+            pos += 1
+        if cfg is cfg_ref:
+            ref_preds, ref_ce = np.stack(preds), -np.mean(lls)
+        else:
+            q_preds, q_ce = np.stack(preds), -np.mean(lls)
+    return float((ref_preds == q_preds).mean()), float(q_ce - ref_ce)
+
+
+def run() -> list[tuple[str, float, str]]:
+    cfg, params, data = common.get_tiny_lm()
+    raw = dataclasses.replace(cfg, cache_layout="raw")
+    rows = []
+
+    # --- K standalone (V exact): BlockQuant (ours) ---
+    for rel in K_SCALES:
+        # V at 8-bit (rel=1/255) ~= exact: isolates K's effect (Fig. 5 left)
+        q = dataclasses.replace(cfg, cache_layout="packed", rel_scale_k=rel,
+                                rel_scale_v=1 / 255)
+        agree, dce = _eval_agreement(raw, q, params, data)
+        rows.append((f"fig5_k_block_rel{rel}", 0.0,
+                     f"agree={agree:.4f};dce={dce:+.4f}"))
+
+    # --- V standalone (K ~exact) ---
+    for rel in V_SCALES:
+        q = dataclasses.replace(cfg, cache_layout="packed", rel_scale_v=rel,
+                                rel_scale_k=1 / 255)  # K at 8-bit ~= exact
+        agree, dce = _eval_agreement(raw, q, params, data)
+        rows.append((f"fig5_v_token_rel{rel}", 0.0,
+                     f"agree={agree:.4f};dce={dce:+.4f}"))
+
+    # --- combined at the paper's fixed K:V ratio (Fig. 6) ---
+    for rel_k in (0.02, 0.05, 0.08, 0.12):
+        rel_v = rel_k * 3  # paper fixes the K:V ratio from Fig. 5 turning points
+        q = dataclasses.replace(cfg, cache_layout="packed",
+                                rel_scale_k=rel_k, rel_scale_v=rel_v)
+        agree, dce = _eval_agreement(raw, q, params, data)
+        rows.append((f"fig6_combined_k{rel_k}_v{rel_v:.2f}", 0.0,
+                     f"agree={agree:.4f};dce={dce:+.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,111 @@
+"""Shared benchmark substrate: one tiny byte-level LM trained on real text,
+whose harvested KV tensors drive the accuracy/ratio experiments (the CPU-
+scale stand-in for the paper's Llama2/Ministral + CoQA/GSM8K setup — see
+DESIGN.md §6 accuracy-proxy note)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.data.pipeline import TextCorpus
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train import step as step_lib
+from repro.train.trainer import Trainer, TrainerConfig
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+CKPT = ART / "tiny_lm"
+
+TINY = ModelConfig(
+    name="tiny-byte-lm", family="dense", n_layers=4, d_model=256,
+    vocab_size=256, n_heads=8, n_kv_heads=4, head_dim=32, d_ff=512,
+    cache_block=32, rel_scale_k=0.05, rel_scale_v=0.15)
+
+SEQ = 128
+STEPS = 300
+
+
+def get_tiny_lm(steps: int = STEPS, force: bool = False):
+    """Train (or load) the tiny LM. Returns (cfg, params, corpus)."""
+    data = TextCorpus(seq_len=SEQ, global_batch=8, max_bytes=2 << 20)
+    params_shape, _ = step_lib.shapes_and_axes(TINY)
+    if not force and store.latest_step(CKPT) is not None:
+        params, _ = store.restore(CKPT, params_shape)
+        return TINY, params, data
+    scfg = step_lib.TrainStepConfig(
+        remat=False, q_chunk=SEQ, kv_chunk=SEQ,
+        opt=adamw.AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=steps))
+    trainer = Trainer(TINY, make_host_mesh(), scfg,
+                      TrainerConfig(total_steps=steps, ckpt_every=0,
+                                    log_every=50, ckpt_dir=str(CKPT / "_train")),
+                      data)
+    out = trainer.run()
+    print(f"[common] tiny LM trained: {out['final_step']} steps, "
+          f"loss {out['last_loss']:.3f}")
+    params = jax.tree.map(lambda x: x, trainer.state[0])
+    store.save(CKPT, steps, params, {"loss": out["last_loss"]})
+    return TINY, params, data
+
+
+def harvest_kv(cfg, params, data, n_tokens: int = 8192, seed_step: int = 1000):
+    """Run the model over text and capture one layer's pre-cache K/V
+    ([ctx, heads, head_dim]) — the statistics source for ratio benchmarks."""
+    from repro.models import attention
+
+    B = max(1, n_tokens // SEQ)
+    batch = data.batch_at(seed_step)
+    toks = jnp.asarray(batch["tokens"][:B])
+
+    captured = {}
+
+    def capture_layer(params_blocks, x, positions):
+        block_p = jax.tree.map(lambda p: p[cfg.n_layers // 2], params_blocks)
+        from repro.models import layers as L
+
+        h = L.rms_norm(x, block_p["ln_attn"], cfg.norm_eps)
+        q, k, v = attention.qkv_project(block_p["attn"], cfg, h, positions)
+        return k, v
+
+    x = M._embed_input(params, cfg, {"tokens": toks})
+    positions = jnp.arange(toks.shape[1])[None, :]
+    # run the stack up to the middle layer to get realistic activations
+    half = cfg.n_layers // 2
+    for i in range(half):
+        block_p = jax.tree.map(lambda p: p[i], params["blocks"])
+        x = attention.attn_block_train(block_p, cfg, x, positions,
+                                       q_chunk=SEQ, kv_chunk=SEQ)
+        from repro.models import layers as L
+
+        hh = L.rms_norm(x, block_p["ln_mlp"], cfg.norm_eps)
+        x = x + L.mlp(block_p["mlp"], hh)
+    k, v = capture_layer(params["blocks"], x, positions)
+    # [B, S, Hkv, Dh] -> [B*S, Hkv, Dh]
+    k = k.reshape(-1, cfg.n_kv_heads, cfg.resolved_head_dim)
+    v = v.reshape(-1, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return np.asarray(k), np.asarray(v)
+
+
+class Timer:
+    """Median-of-repeats wall timer for jitted callables (CPU)."""
+
+    def __init__(self, warmup: int = 2, repeats: int = 5):
+        self.warmup, self.repeats = warmup, repeats
+
+    def us(self, fn, *args) -> float:
+        for _ in range(self.warmup):
+            jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts) * 1e6)

@@ -1,0 +1,65 @@
+"""Paper Fig. 10 + 11 analogue: fused decompress+matvec vs the plain
+(uncompressed) attention matvec — the "beats cuBLAS at long context because
+it moves fewer bytes" claim.
+
+On CPU we report measured relative times AND the modeled TPU HBM-traffic
+ratio.  Fig. 11's 'equivalent decompression throughput' = raw-cache bytes
+divided by the fused kernel's time, normalized by the plain kernel's
+bytes/time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import cache as C
+from repro.kernels import ops
+
+CTX = [2048, 4096, 8192, 16384]
+B, Hkv, G, D, T = 4, 4, 2, 64, 64
+
+
+def run() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(1)
+    timer = common.Timer()
+    rows = []
+    for S in CTX:
+        kv = rng.standard_t(4, (2, B, Hkv, S, D)).astype(np.float32)
+        k, v = jnp.asarray(kv[0]), jnp.asarray(kv[1])
+        q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
+
+        spec_p = C.CacheSpec(layout="packed", block_size=T, max_seq=S,
+                             rel_scale_k=0.05, rel_scale_v=0.15)
+        spec_r = dataclasses.replace(spec_p, layout="raw")
+        cache_p = C.prefill(spec_p, k, v)
+        cache_r = C.prefill(spec_r, k, v)
+
+        fused = jax.jit(lambda c, qq: ops.cache_decode_attention(c, qq, impl="xla"))
+        plain = jax.jit(C.attend)
+        t_fused = timer.us(fused, cache_p, q)
+        t_plain = timer.us(plain, cache_r, q)
+
+        # modeled TPU HBM bytes: packed read vs raw bf16 read
+        NB = S // T
+        packed = (NB * (spec_p.words_k(D) + spec_p.words_v(D)) * 4
+                  + NB * (2 * D + 2 * T) * 2) * B * Hkv
+        raw = 2 * B * Hkv * S * D * 2
+        err = float(jnp.max(jnp.abs(fused(cache_p, q) - plain(cache_r, q))))
+        eq_tput_rel = (raw / t_fused) / (raw / t_plain)
+        rows.append((
+            f"fig10_ctx{S}", t_fused,
+            f"plain_us={t_plain:.0f};speedup_cpu={t_plain / t_fused:.2f};"
+            f"hbm_packed_MB={packed / 1e6:.1f};hbm_raw_MB={raw / 1e6:.1f};"
+            f"hbm_reduction={raw / packed:.2f};"
+            f"fig11_eq_decomp_rel={eq_tput_rel:.2f};maxerr={err:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,111 @@
+"""Paper Fig. 9 analogue: single fused kernel (decompress + matvec) vs the
+multi-kernel pipeline (decode → dequantize → matvec), across context lengths
+and quantization scales.
+
+Two measurements per point:
+  * measured CPU wall time of the jitted XLA paths (RELATIVE comparison —
+    absolute numbers are CPU, not TPU);
+  * the modeled HBM bytes each path moves on TPU (the quantity that decides
+    the paper's Fig. 9 on real hardware): the fused path reads packed words
+    once; the multi-kernel path reads packed words, writes decompressed bf16
+    to HBM, then reads it back for the matvec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import bitpack, cache as C
+from repro.kernels import ops, ref
+
+CTX = [2048, 4096, 8192, 16384]
+REL = [(0.05, 0.15), (0.12, 0.3)]
+B, Hkv, G, D, T = 4, 4, 2, 64, 64
+
+
+def _mk_cache(rng, spec, S):
+    k = jnp.asarray(rng.standard_t(4, (B, Hkv, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_t(4, (B, Hkv, S, D)).astype(np.float32))
+    return C.prefill(spec, k, v)
+
+
+def _multi_kernel(cache):
+    """The standalone pipeline: decompress to 'HBM' (materialized array),
+    then attend over the raw tensors — two extra full passes."""
+    spec = cache.spec
+
+    @jax.jit
+    def run(c, q):
+        kd = C._decompress_k(c)  # materialized (global-memory writeback)
+        vd = C._decompress_v(c)
+        B_, H_, NB, T_, D_ = kd.shape
+        kr = kd.reshape(B_, H_, NB * T_, D_)
+        vr = vd.reshape(B_, H_, NB * T_, D_)
+        # plus the raw buffer
+        kr = jnp.concatenate([kr, c.k_buf], axis=2)
+        vr = jnp.concatenate([vr, c.v_buf], axis=2)
+        mask = jnp.arange(kr.shape[2]) < (jnp.minimum(c.n_flushed, spec.n_blocks)
+                                          * spec.block_size + c.buf_len)
+        s = jnp.einsum("bhgd,bhsd->bhgs",
+                       q.reshape(B, Hkv, G, D).astype(jnp.float32),
+                       kr.astype(jnp.float32)) / np.sqrt(D)
+        s = jnp.where(mask[None, None, None], s, -1e9)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgs,bhsd->bhgd", w, vr.astype(jnp.float32))
+        return o.reshape(B, Hkv * G, D)
+
+    return run
+
+
+def _hbm_bytes(spec: C.CacheSpec, S: int, fused: bool) -> int:
+    """Modeled bytes the packed part moves per decode step on TPU."""
+    NB = S // spec.block_size
+    words = NB * (spec.words_k(D) + spec.words_v(D)) * 4 * B * Hkv
+    scales = NB * (2 * D + 2 * spec.block_size) * 2 * B * Hkv
+    packed_read = words + scales
+    if fused:
+        return packed_read  # consumed in VMEM/registers
+    decompressed = 2 * B * Hkv * NB * spec.block_size * D * 2  # bf16 K+V
+    return packed_read + 2 * decompressed  # write back + read for matvec
+
+
+def run() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    timer = common.Timer()
+    rows = []
+    for rel_k, rel_v in REL:
+        for S in CTX:
+            spec = C.CacheSpec(layout="packed", block_size=T, max_seq=S,
+                               rel_scale_k=rel_k, rel_scale_v=rel_v)
+            cache = _mk_cache(rng, spec, S)
+            q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
+
+            fused = jax.jit(lambda c, qq: ops.cache_decode_attention(
+                c, qq, impl="xla"))
+            multi = _multi_kernel(cache)
+            t_fused = timer.us(fused, cache, q)
+            t_multi = timer.us(multi, cache, q)
+            o1, o2 = fused(cache, q), multi(cache, q)
+            err = float(jnp.max(jnp.abs(o1 - o2)))
+            by_f = _hbm_bytes(spec, S, True)
+            by_m = _hbm_bytes(spec, S, False)
+            raw_bytes = 2 * B * Hkv * S * D * 2
+            # equivalent decompression throughput: raw bytes / fused time
+            eq_tput = raw_bytes / (t_fused * 1e-6) / 1e9
+            rows.append((
+                f"fig9_ctx{S}_k{rel_k}", t_fused,
+                f"multi_us={t_multi:.0f};speedup={t_multi / t_fused:.2f};"
+                f"hbm_fused_MB={by_f / 1e6:.1f};hbm_multi_MB={by_m / 1e6:.1f};"
+                f"hbm_ratio={by_m / by_f:.2f};"
+                f"eq_decomp_GBps_cpu={eq_tput:.2f};allclose={err < 5e-2}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,71 @@
+"""Paper Fig. 7 analogue: K compression ratio vs quantization scale —
+KVComp (BlockQuant + Huffman) vs ChannelQuant + Huffman vs KIVI fixed-bit.
+
+Harvested KV from the trained tiny LM provides real language statistics.
+The paper's claims to reproduce: +32% avg / +41% max ratio over KIVI at
+iso-accuracy, and that BlockQuant's ratio at its turning point beats
+ChannelQuant's at its own turning point.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import huffman, quant
+from repro.core.codec import KVCompCodec, huffman_ratio, kivi_ratio, packed_ratio
+
+# paper Fig. 5 turning points (validated for our model by accuracy_sweep)
+BLOCK_SCALES = [0.02, 0.04, 0.05, 0.06, 0.08, 0.12]
+CHANNEL_SCALES = [0.1, 0.2, 0.25, 0.3, 0.4]
+
+
+def run() -> list[tuple[str, float, str]]:
+    cfg, params, data = common.get_tiny_lm()
+    k, v = common.harvest_kv(cfg, params, data, n_tokens=8192)
+    k = jnp.asarray(k)
+    rows = []
+
+    for rel in BLOCK_SCALES:
+        q = quant.quantize_k_block(k, rel, 64)
+        book = huffman.build_codebook(np.asarray(huffman.histogram(q.codes)))
+        r = huffman_ratio(q, book, (64, k.shape[-1]))
+        rp = packed_ratio(q, 64 * k.shape[-1])
+        err = float(jnp.max(jnp.abs(q.dequantize().reshape(k.shape) - k)))
+        rows.append((f"fig7_kvcomp_block_rel{rel}", 0.0,
+                     f"ratio={r.ratio:.3f};packed_ratio={rp.ratio:.3f};"
+                     f"bits={r.bits_per_value:.3f};maxerr={err:.4f}"))
+
+    for rel in CHANNEL_SCALES:
+        q = quant.quantize_k_channel(k, rel)
+        book = huffman.build_codebook(np.asarray(huffman.histogram(q.codes)))
+        r = huffman_ratio(q, book, (64, k.shape[-1]))
+        err = float(jnp.max(jnp.abs(q.dequantize().reshape(k.shape) - k)))
+        rows.append((f"fig7_channelquant_rel{rel}", 0.0,
+                     f"ratio={r.ratio:.3f};bits={r.bits_per_value:.3f};maxerr={err:.4f}"))
+
+    for bits in (2, 4):
+        q = quant.kivi_quantize_k(k, bits, 32)
+        r = kivi_ratio(q, bits)
+        err = float(jnp.max(jnp.abs(q.dequantize().reshape(k.shape) - k)))
+        rows.append((f"fig7_kivi_{bits}bit", 0.0,
+                     f"ratio={r.ratio:.3f};bits={r.bits_per_value:.3f};maxerr={err:.4f}"))
+
+    # Headline: iso-accuracy comparison.  Decode-agreement (accuracy_sweep +
+    # the calibration in EXPERIMENTS.md §Accuracy) puts KVComp rel=0.05 and
+    # KIVI-4bit in the same ~97% agreement band, KIVI-2bit well below it.
+    q_ours = quant.quantize_k_block(k, 0.05, 64)
+    book = huffman.build_codebook(np.asarray(huffman.histogram(q_ours.codes)))
+    r_ours = huffman_ratio(q_ours, book, (64, k.shape[-1]))
+    for bits in (4, 2):
+        r_kivi = kivi_ratio(quant.kivi_quantize_k(k, bits, 32), bits)
+        gain = (r_ours.ratio / r_kivi.ratio - 1) * 100
+        rows.append((f"fig7_headline_rel0.05_vs_kivi{bits}", 0.0,
+                     f"gain_pct={gain:.1f};iso_accuracy={'yes' if bits == 4 else 'no(kivi2 below band)'}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

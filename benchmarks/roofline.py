@@ -1,0 +1,53 @@
+"""§Roofline source: reads the dry-run artifacts and prints the per-cell
+three-term roofline table (compute/memory/collective seconds per step,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "pod") -> list[dict]:
+    d = ART / mesh
+    if not d.exists():
+        return []
+    return sorted((json.loads(p.read_text()) for p in d.glob("*.json")),
+                  key=lambda r: (r["arch"], r["shape"]))
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for rec in load_cells("pod"):
+        name = f"roofline_{rec['arch']}_{rec['shape']}"
+        if rec["status"] == "skipped":
+            rows.append((name, 0.0, f"skipped:{rec['reason'][:40]}"))
+            continue
+        if rec["status"] != "ok" or "roofline" not in rec:
+            rows.append((name, 0.0, rec["status"]))
+            continue
+        r = rec["roofline"]
+        mem = rec["memory"]
+        ratio = rec.get("useful_flops_ratio")
+        rows.append((
+            name,
+            max(r["compute_s"], r.get("memory_analytic_s", 0), r["collective_s"]) * 1e6,
+            f"bottleneck={r['bottleneck']};c={r['compute_s']:.4f};"
+            f"m_hlo={r['memory_s']:.4f};m_analytic={r.get('memory_analytic_s', 0):.4f};"
+            f"x={r['collective_s']:.4f};useful_flops={ratio:.3f};"
+            f"args_GB={mem['argument_bytes'] / 1e9:.2f};temp_GB={mem['temp_bytes'] / 1e9:.2f}"
+            if ratio is not None else "no-analysis"))
+    # multipod pass/fail summary
+    mp = load_cells("multipod")
+    ok = sum(r["status"] == "ok" for r in mp)
+    sk = sum(r["status"] == "skipped" for r in mp)
+    fl = sum(r["status"] == "failed" for r in mp)
+    rows.append(("dryrun_multipod_summary", 0.0, f"ok={ok};skipped={sk};failed={fl}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

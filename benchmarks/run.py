@@ -1,0 +1,82 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+
+    PYTHONPATH=src python -m benchmarks.run                # everything
+    PYTHONPATH=src python -m benchmarks.run --only ratio_k # one figure
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+SUITES = [
+    ("accuracy_sweep", "paper Fig. 5/6: accuracy vs rel quant scale"),
+    ("ratio_k", "paper Fig. 7: K ratio vs KIVI/ChannelQuant"),
+    ("ratio_v", "paper Fig. 8: V ratio vs ctx length"),
+    ("fused_vs_multi", "paper Fig. 9: fused vs multi-kernel"),
+    ("fused_vs_matvec", "paper Fig. 10/11: fused vs plain matvec"),
+    ("roofline", "dry-run roofline table"),
+]
+
+
+def run_one(mod_name: str) -> int:
+    """Run one suite in-process (used by the per-suite subprocess)."""
+    mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+    for name, us, derived in mod.run():
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    ap.add_argument("--in-process", action="store_true",
+                    help="run suites in this process (default: one fresh "
+                         "subprocess per suite — jitted-executable caches "
+                         "otherwise accumulate past this container's RAM)")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived", flush=True)
+    failures = 0
+    for mod_name, desc in SUITES:
+        if want and mod_name not in want:
+            continue
+        t0 = time.time()
+        if args.in_process:
+            try:
+                run_one(mod_name)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"{mod_name}_FAILED,0,{type(e).__name__}:{e}", flush=True)
+        else:
+            code = (
+                "from benchmarks.run import run_one; "
+                f"run_one({mod_name!r})"
+            )
+            env = dict(os.environ)
+            env.setdefault("PYTHONPATH", "src")
+            r = subprocess.run([sys.executable, "-c", code], env=env,
+                               stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+                               text=True)
+            sys.stdout.write("\n".join(
+                l for l in r.stdout.splitlines() if "," in l and not l.startswith("#")
+            ) + ("\n" if r.stdout else ""))
+            sys.stdout.flush()
+            if r.returncode != 0:
+                failures += 1
+                print(f"{mod_name}_FAILED,0,subprocess_exit_{r.returncode}", flush=True)
+        print(f"# {mod_name} ({desc}) took {time.time() - t0:.1f}s",
+              file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end serving driver (the paper's deployment scenario): train a
+small LM, then serve batched requests with raw vs KIVI vs KVComp-packed KV
+caches — comparing generated text, cache memory, and decode throughput.
+
+    PYTHONPATH=src python examples/serve_compressed.py
+"""
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.models import model as M
+from repro.serve.engine import Engine, EngineConfig, Request, cache_memory_report
+
+
+def main():
+    cfg, params, data = common.get_tiny_lm()
+    prompts = [data.batch_at(900 + i)["tokens"][0][:64].astype(np.int32)
+               for i in range(4)]
+
+    results = {}
+    for layout in ("raw", "packed", "kivi"):
+        c = dataclasses.replace(cfg, cache_layout=layout)
+        eng = Engine(c, params, EngineConfig(bucket=64, max_batch=4, max_seq=256),
+                     q_chunk=64, kv_chunk=64)
+        t0 = time.monotonic()
+        outs = eng.generate([Request(prompt=p, max_new_tokens=24)
+                             for p in prompts])
+        dt = time.monotonic() - t0
+        _, state = M.prefill(params, c, {"tokens": np.stack(prompts)}, 256,
+                             q_chunk=64, kv_chunk=64)
+        rep = cache_memory_report(c, state)
+        results[layout] = (outs, dt, rep)
+        tput = sum(24 / r.gen_s for r in outs)
+        print(f"[{layout:6s}] kv_cache={rep['kv_bytes']:>9,}B  "
+              f"wall={dt:5.2f}s  decode={tput:6.1f} tok/s")
+
+    raw_toks = [r.tokens for r in results["raw"][0]]
+    for layout in ("packed", "kivi"):
+        toks = [r.tokens for r in results[layout][0]]
+        agree = np.mean([(a == b).mean() for a, b in zip(raw_toks, toks)])
+        saved = 1 - results[layout][2]["kv_bytes"] / results["raw"][2]["kv_bytes"]
+        print(f"{layout:6s} vs raw: token agreement {agree:5.1%}, "
+              f"cache memory saved {saved:5.1%}")
+
+    # show a decoded sample (byte-level -> printable text)
+    txt = bytes(int(t) for t in raw_toks[0]).decode("utf8", errors="replace")
+    print(f"sample continuation (raw): {txt!r}")
+    txt = bytes(int(t) for t in results["packed"][0][0].tokens).decode(
+        "utf8", errors="replace")
+    print(f"sample continuation (kvcomp): {txt!r}")
+
+
+if __name__ == "__main__":
+    main()

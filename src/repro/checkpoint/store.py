@@ -1,0 +1,180 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout (one directory per step)::
+
+    ckpt_dir/
+      step_000120.tmp/        # written first
+        manifest.msgpack      # tree structure, shapes, dtypes, step, meta
+        arrays/<leaf-id>.bin  # raw little-endian bytes per leaf
+      step_000120/            # atomic rename after fsync — commit marker
+
+Fault-tolerance properties:
+  * a crash mid-write leaves only a ``.tmp`` dir (ignored on restore);
+  * ``restore`` resharding: arrays are loaded host-side and ``device_put``
+    against the *current* mesh's shardings, so a job restarted on a
+    different device count resumes seamlessly (elastic restart);
+  * ``AsyncCheckpointer`` snapshots to host memory synchronously (cheap)
+    and writes in a background thread, overlapping I/O with the next steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)$")
+
+
+def _leaf_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return leaves, treedef
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _np_view(x: np.ndarray) -> tuple[np.ndarray, str]:
+    """bfloat16-safe byte view (ml_dtypes arrays round-trip via uint16)."""
+    dt = str(x.dtype)
+    if dt == "bfloat16":
+        return x.view(np.uint16), "bfloat16"
+    return x, dt
+
+
+def save(ckpt_dir: str | Path, step: int, tree, meta: dict | None = None) -> Path:
+    """Synchronous sharded save with atomic commit."""
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f"step_{step:06d}.tmp"
+    final = ckpt_dir / f"step_{step:06d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    (tmp / "arrays").mkdir(parents=True)
+
+    leaves, _ = _leaf_paths(tree)
+    manifest = {"step": step, "meta": meta or {}, "leaves": []}
+    for i, (path, leaf) in enumerate(leaves):
+        host = np.asarray(jax.device_get(leaf))
+        view, dt = _np_view(host)
+        fname = f"{i:05d}.bin"
+        (tmp / "arrays" / fname).write_bytes(view.tobytes())
+        manifest["leaves"].append({
+            "path": _path_str(path), "file": fname,
+            "shape": list(host.shape), "dtype": dt,
+        })
+    (tmp / "manifest.msgpack").write_bytes(msgpack.packb(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(m.group(1)) for p in ckpt_dir.iterdir()
+             if (m := _STEP_RE.search(p.name)) and not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, tree_like, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``tree_like``; reshard onto
+    ``shardings`` (a matching tree of NamedSharding) if given — this is the
+    elastic-restart path."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:06d}"
+    manifest = msgpack.unpackb((d / "manifest.msgpack").read_bytes())
+
+    leaves, treedef = _leaf_paths(tree_like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = [s for _, s in _leaf_paths(shardings)[0]]
+
+    out = []
+    for i, (path, leaf) in enumerate(leaves):
+        key = _path_str(path)
+        ent = by_path[key]
+        raw = (d / "arrays" / ent["file"]).read_bytes()
+        if ent["dtype"] == "bfloat16":
+            arr = np.frombuffer(raw, np.uint16).reshape(ent["shape"])
+            arr = arr.view(jnp.bfloat16.dtype)
+        else:
+            arr = np.frombuffer(raw, np.dtype(ent["dtype"])).reshape(ent["shape"])
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(tree_like), out), manifest
+
+
+def gc_old(ckpt_dir: str | Path, keep: int = 3) -> None:
+    """Keep the newest ``keep`` committed checkpoints; drop stale .tmp dirs."""
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return
+    committed = sorted(
+        (p for p in ckpt_dir.iterdir() if _STEP_RE.search(p.name)
+         and not p.name.endswith(".tmp")),
+        key=lambda p: int(_STEP_RE.search(p.name).group(1)))
+    for p in committed[:-keep] if keep else committed:
+        shutil.rmtree(p)
+    for p in ckpt_dir.iterdir():
+        if p.name.endswith(".tmp"):
+            shutil.rmtree(p)
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host synchronously, write in a daemon thread."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_error: Exception | None = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def save(self, step: int, tree, meta: dict | None = None):
+        self.wait()  # one in-flight write at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            try:
+                save(self.ckpt_dir, step, host_tree, meta)
+                gc_old(self.ckpt_dir, self.keep)
+            except Exception as e:  # noqa: BLE001
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()

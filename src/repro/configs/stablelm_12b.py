@@ -1,0 +1,16 @@
+"""StableLM-2-12B [hf:stabilityai; hf] — dense GQA, head_dim 160."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=160,
+    d_ff=13824,
+    vocab_size=100352,
+    rope_theta=1e4,
+)

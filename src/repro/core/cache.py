@@ -1,0 +1,379 @@
+"""Compressed KV-cache manager (paper §3.2.1, §3.2.3) — jit/pjit-friendly.
+
+This is the serving-side realization of KVComp: a per-layer cache that keeps
+its main storage *compressed* (block-quantized + bit-packed) and a small raw
+append buffer.  Newly generated KV vectors accumulate in the buffer; when it
+fills one compression block, the block is quantized, packed, and written into
+the packed store at a deterministic slot (the atomic-free Block Offsets Array
+of DESIGN.md §2 degenerates to ``slot = n_flushed % NB`` because the packed
+path uses uniform per-block widths → offsets are affine in the block index).
+
+Faithfulness notes
+------------------
+* The raw tail buffer doubles as KIVI's "residual window": the most recent
+  ``block_size`` tokens are always exact.
+* K uses BlockQuant (per block × head × channel min/max), V uses TokenQuant
+  (per token × head) — the paper's granularities.
+* Sliding-window models (Mixtral) evict whole blocks via a ring over the
+  block axis — "block-aligned eviction composes with compression".
+* Attention consumes codes with the *algebraic fusion* identity
+  ``q·(m + s∘c) = (q·m) + (q∘s)·c`` so dequantization folds into the matvec
+  (the XLA analogue of cache-resident decompression; the Pallas kernel in
+  ``repro.kernels.fused_kv_attn`` does the same per VMEM tile).
+
+All lengths are uniform across the batch (the engine pads/aligns requests —
+see ``repro.serve.engine``); ``n_flushed`` and ``buf_len`` are scalars so the
+whole structure scans cleanly over layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+
+Array = jax.Array
+
+NEG_INF = -1e9
+
+
+def bits_for_rel_scale(rel_scale: float) -> int:
+    """Static bit width that covers every code of an error-bounded quantizer:
+    max code = round(1/rel_scale)."""
+    return max(1, math.ceil(math.log2(round(1.0 / rel_scale) + 1)))
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Static (hashable — lives in the pytree aux) cache configuration."""
+
+    layout: str = "packed"  # raw | packed | kivi
+    block_size: int = 64
+    rel_scale_k: float = 0.05
+    rel_scale_v: float = 0.15
+    kivi_bits: int = 2
+    max_seq: int = 4096
+    window: int | None = None  # sliding-window size (tokens), None = full
+
+    @property
+    def bits_k(self) -> int:
+        if self.layout == "kivi":
+            return self.kivi_bits
+        return bits_for_rel_scale(self.rel_scale_k)
+
+    @property
+    def bits_v(self) -> int:
+        if self.layout == "kivi":
+            return self.kivi_bits
+        return bits_for_rel_scale(self.rel_scale_v)
+
+    @property
+    def n_blocks(self) -> int:
+        span = self.max_seq if self.window is None else min(self.window, self.max_seq)
+        return max(1, math.ceil(span / self.block_size))
+
+    def words_k(self, head_dim: int) -> int:
+        return bitpack.nostraddle_words(self.block_size * head_dim, self.bits_k)
+
+    def words_v(self, head_dim: int) -> int:
+        return bitpack.nostraddle_words(self.block_size * head_dim, self.bits_v)
+
+
+def _quant_block(x: Array, rel_scale: float, bits: int, unit_axes: tuple[int, ...], kivi: bool):
+    """Quantize one buffer block. x: [..., T, D] (f32). Returns codes u8 +
+    (min, step) with unit axes reduced."""
+    mn = jnp.min(x, axis=unit_axes, keepdims=True)
+    mx = jnp.max(x, axis=unit_axes, keepdims=True)
+    if kivi:
+        step = (mx - mn) / (2**bits - 1)
+    else:
+        step = rel_scale * (mx - mn)
+    safe = jnp.where(step > 0, step, 1.0)
+    codes = jnp.clip(jnp.round((x - mn) / safe), 0, 2**bits - 1).astype(jnp.uint8)
+    return codes, jnp.squeeze(mn, unit_axes), jnp.squeeze(step, unit_axes)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class LayerKVCache:
+    """One layer's cache.  Leading dims: [B, Hkv, ...].
+
+    Packed layouts:
+      k_store : u32 [B, Hkv, NB, Wk]       (bit-packed block codes)
+      k_min/k_step : bf16 [B, Hkv, NB, D]  (BlockQuant units)
+      v_store : u32 [B, Hkv, NB, Wv]
+      v_min/v_step : bf16 [B, Hkv, NB, T]  (TokenQuant units; T = block_size)
+    Raw layout:
+      k_store / v_store : bf16 [B, Hkv, NB, T, D]; min/step are dummies.
+    Shared:
+      k_buf / v_buf : bf16 [B, Hkv, T, D] — raw append buffer (residual window)
+      n_flushed : i32 [] — total blocks ever flushed (ring index for SWA)
+      buf_len   : i32 [] — valid entries in the buffer
+    """
+
+    k_store: Array
+    k_min: Array
+    k_step: Array
+    v_store: Array
+    v_min: Array
+    v_step: Array
+    k_buf: Array
+    v_buf: Array
+    n_flushed: Array
+    buf_len: Array
+    spec: CacheSpec
+
+    # -- pytree ---------------------------------------------------------------
+    # Keys are part of the flatten so path-based sharding rules
+    # (distributed.sharding.cache_shardings) can match leaves by name.
+    _FIELDS = ("k_store", "k_min", "k_step", "v_store", "v_min", "v_step",
+               "k_buf", "v_buf", "n_flushed", "buf_len")
+
+    def tree_flatten_with_keys(self):
+        leaves = [(jax.tree_util.GetAttrKey(f), getattr(self, f))
+                  for f in self._FIELDS]
+        return leaves, self.spec
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in self._FIELDS), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, leaves):
+        return cls(*leaves, spec=spec)
+
+    # -- helpers ----------------------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        return self.k_buf.shape[-1]
+
+    @property
+    def total_len(self) -> Array:
+        """Tokens visible to attention (window-capped for SWA)."""
+        nb = jnp.minimum(self.n_flushed, self.spec.n_blocks)
+        return nb * self.spec.block_size + self.buf_len
+
+
+def init_layer_cache(spec: CacheSpec, batch: int, n_kv_heads: int, head_dim: int,
+                     dtype=jnp.bfloat16) -> LayerKVCache:
+    B, H, T, D, NB = batch, n_kv_heads, spec.block_size, head_dim, spec.n_blocks
+    if spec.layout == "raw":
+        k_store = jnp.zeros((B, H, NB, T, D), dtype)
+        v_store = jnp.zeros((B, H, NB, T, D), dtype)
+        k_min = k_step = jnp.zeros((1,), dtype)
+        v_min = v_step = jnp.zeros((1,), dtype)
+    elif spec.layout in ("packed", "kivi"):
+        k_store = jnp.zeros((B, H, NB, spec.words_k(D)), jnp.uint32)
+        v_store = jnp.zeros((B, H, NB, spec.words_v(D)), jnp.uint32)
+        k_min = jnp.zeros((B, H, NB, D), dtype)
+        k_step = jnp.zeros((B, H, NB, D), dtype)
+        v_min = jnp.zeros((B, H, NB, T), dtype)
+        v_step = jnp.zeros((B, H, NB, T), dtype)
+    else:
+        raise ValueError(f"unknown layout {spec.layout}")
+    return LayerKVCache(
+        k_store=k_store, k_min=k_min, k_step=k_step,
+        v_store=v_store, v_min=v_min, v_step=v_step,
+        k_buf=jnp.zeros((B, H, T, D), dtype),
+        v_buf=jnp.zeros((B, H, T, D), dtype),
+        n_flushed=jnp.zeros((), jnp.int32),
+        buf_len=jnp.zeros((), jnp.int32),
+        spec=spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Block compression / decompression for the packed layouts
+# ---------------------------------------------------------------------------
+
+
+def _compress_kv_blocks(spec: CacheSpec, k: Array, v: Array):
+    """Compress [B, H, NB, T, D] raw blocks -> packed stores + scales."""
+    kivi = spec.layout == "kivi"
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # K: BlockQuant — min/max over the block's T tokens, per channel.
+    k_codes, k_mn, k_st = _quant_block(kf, spec.rel_scale_k, spec.bits_k, (-2,), kivi)
+    # V: TokenQuant — min/max over D, per token.
+    v_codes, v_mn, v_st = _quant_block(vf, spec.rel_scale_v, spec.bits_v, (-1,), kivi)
+    B, H, NB, T, D = k.shape
+    k_store = bitpack.pack_nostraddle(k_codes.reshape(B, H, NB, T * D), spec.bits_k)
+    v_store = bitpack.pack_nostraddle(v_codes.reshape(B, H, NB, T * D), spec.bits_v)
+    dt = jnp.bfloat16
+    return (k_store, k_mn.astype(dt), k_st.astype(dt),
+            v_store, v_mn.astype(dt), v_st.astype(dt))
+
+
+def _decompress_k(cache: LayerKVCache) -> Array:
+    """Packed K -> dequantized bf16 [B, H, NB, T, D] (XLA fallback path; the
+    Pallas kernel performs this per-tile without materializing to HBM)."""
+    spec = cache.spec
+    if spec.layout == "raw":
+        return cache.k_store
+    B, H, NB, _ = cache.k_store.shape
+    T, D = spec.block_size, cache.head_dim
+    codes = bitpack.unpack_nostraddle(cache.k_store, spec.bits_k, T * D).reshape(B, H, NB, T, D)
+    return (cache.k_min[:, :, :, None, :].astype(jnp.float32)
+            + codes.astype(jnp.float32) * cache.k_step[:, :, :, None, :].astype(jnp.float32)
+            ).astype(jnp.bfloat16)
+
+
+def _decompress_v(cache: LayerKVCache) -> Array:
+    spec = cache.spec
+    if spec.layout == "raw":
+        return cache.v_store
+    B, H, NB, _ = cache.v_store.shape
+    T, D = spec.block_size, cache.head_dim
+    codes = bitpack.unpack_nostraddle(cache.v_store, spec.bits_v, T * D).reshape(B, H, NB, T, D)
+    return (cache.v_min[:, :, :, :, None].astype(jnp.float32)
+            + codes.astype(jnp.float32) * cache.v_step[:, :, :, :, None].astype(jnp.float32)
+            ).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: bulk-compress a prompt's KV (paper Store stage, prefill phase)
+# ---------------------------------------------------------------------------
+
+
+def prefill(spec: CacheSpec, k: Array, v: Array, dtype=jnp.bfloat16) -> LayerKVCache:
+    """Build a cache from prompt KV [B, Hkv, S, D]; whole blocks are
+    compressed, the remainder lands in the raw buffer."""
+    B, H, S, D = k.shape
+    T, NB = spec.block_size, spec.n_blocks
+    n_full = S // T
+    cache = init_layer_cache(spec, B, H, D, dtype)
+    # Window models only retain the last NB blocks.
+    keep = min(n_full, NB)
+    if n_full:
+        kb = k[:, :, (n_full - keep) * T : n_full * T].reshape(B, H, keep, T, D)
+        vb = v[:, :, (n_full - keep) * T : n_full * T].reshape(B, H, keep, T, D)
+        if spec.layout == "raw":
+            slots = (jnp.arange(keep) + (n_full - keep)) % NB
+            cache.k_store = cache.k_store.at[:, :, slots].set(kb.astype(dtype))
+            cache.v_store = cache.v_store.at[:, :, slots].set(vb.astype(dtype))
+        else:
+            ks, kmn, kst, vs, vmn, vst = _compress_kv_blocks(spec, kb, vb)
+            slots = (jnp.arange(keep) + (n_full - keep)) % NB
+            cache.k_store = cache.k_store.at[:, :, slots].set(ks)
+            cache.k_min = cache.k_min.at[:, :, slots].set(kmn)
+            cache.k_step = cache.k_step.at[:, :, slots].set(kst)
+            cache.v_store = cache.v_store.at[:, :, slots].set(vs)
+            cache.v_min = cache.v_min.at[:, :, slots].set(vmn)
+            cache.v_step = cache.v_step.at[:, :, slots].set(vst)
+    rem = S - n_full * T
+    if rem:
+        cache.k_buf = cache.k_buf.at[:, :, :rem].set(k[:, :, n_full * T :].astype(dtype))
+        cache.v_buf = cache.v_buf.at[:, :, :rem].set(v[:, :, n_full * T :].astype(dtype))
+    cache.n_flushed = jnp.asarray(n_full, jnp.int32)
+    cache.buf_len = jnp.asarray(rem, jnp.int32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode-step append (paper §3.2.3 Natural Data Appending)
+# ---------------------------------------------------------------------------
+
+
+def append(cache: LayerKVCache, k_new: Array, v_new: Array) -> LayerKVCache:
+    """Append one token's KV [B, Hkv, D]; flush the buffer into a compressed
+    block when it fills.  Pure function — returns the updated cache."""
+    spec = cache.spec
+    T, NB = spec.block_size, spec.n_blocks
+    dt = cache.k_buf.dtype
+    pos = cache.buf_len
+    k_buf = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_buf, k_new[:, :, None, :].astype(dt), pos, axis=2)
+    v_buf = jax.lax.dynamic_update_slice_in_dim(
+        cache.v_buf, v_new[:, :, None, :].astype(dt), pos, axis=2)
+    will_flush = (pos + 1) == T
+
+    B, H, _, D = k_buf.shape
+    kb = k_buf[:, :, None]  # [B, H, 1, T, D]
+    vb = v_buf[:, :, None]
+    slot = jnp.where(will_flush, cache.n_flushed % NB, NB)  # NB = drop sentinel
+    if spec.layout == "raw":
+        k_store = cache.k_store.at[:, :, slot].set(kb[:, :, 0].astype(dt), mode="drop")
+        v_store = cache.v_store.at[:, :, slot].set(vb[:, :, 0].astype(dt), mode="drop")
+        k_min, k_step, v_min, v_step = cache.k_min, cache.k_step, cache.v_min, cache.v_step
+    else:
+        ks, kmn, kst, vs, vmn, vst = _compress_kv_blocks(spec, kb, vb)
+        k_store = cache.k_store.at[:, :, slot].set(ks[:, :, 0], mode="drop")
+        k_min = cache.k_min.at[:, :, slot].set(kmn[:, :, 0], mode="drop")
+        k_step = cache.k_step.at[:, :, slot].set(kst[:, :, 0], mode="drop")
+        v_store = cache.v_store.at[:, :, slot].set(vs[:, :, 0], mode="drop")
+        v_min = cache.v_min.at[:, :, slot].set(vmn[:, :, 0], mode="drop")
+        v_step = cache.v_step.at[:, :, slot].set(vst[:, :, 0], mode="drop")
+    return LayerKVCache(
+        k_store=k_store, k_min=k_min, k_step=k_step,
+        v_store=v_store, v_min=v_min, v_step=v_step,
+        k_buf=k_buf, v_buf=v_buf,
+        n_flushed=cache.n_flushed + will_flush.astype(jnp.int32),
+        buf_len=jnp.where(will_flush, 0, pos + 1),
+        spec=spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over the compressed cache (paper Fetch stage)
+# ---------------------------------------------------------------------------
+
+
+def attend(cache: LayerKVCache, q: Array, scale: float | None = None) -> Array:
+    """Single-token attention against the cache.
+
+    q : [B, H, D] with H = Hkv * G (GQA); returns [B, H, D].
+    Scores over the packed store use dequantize-then-dot in the XLA path;
+    invalid blocks/buffer tail are masked before a joint softmax across
+    (packed ∥ buffer).
+    """
+    spec = cache.spec
+    B, Hq, D = q.shape
+    Hkv = cache.k_buf.shape[1]
+    G = Hq // Hkv
+    T, NB = spec.block_size, spec.n_blocks
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+
+    k_deq = _decompress_k(cache).astype(jnp.float32)  # [B,Hkv,NB,T,D]
+    v_deq = _decompress_v(cache).astype(jnp.float32)
+    s_main = jnp.einsum("bhgd,bhntd->bhgnt", qg, k_deq) * scale
+    nb_valid = jnp.minimum(cache.n_flushed, NB)
+    block_ok = jnp.arange(NB) < nb_valid  # ring: any slot < nb_valid is live
+    s_main = jnp.where(block_ok[None, None, None, :, None], s_main, NEG_INF)
+
+    kb = cache.k_buf.astype(jnp.float32)
+    vb = cache.v_buf.astype(jnp.float32)
+    s_buf = jnp.einsum("bhgd,bhtd->bhgt", qg, kb) * scale
+    buf_ok = jnp.arange(T) < cache.buf_len
+    s_buf = jnp.where(buf_ok[None, None, None, :], s_buf, NEG_INF)
+
+    logits = jnp.concatenate([s_main.reshape(B, Hkv, G, NB * T), s_buf], axis=-1)
+    w = jax.nn.softmax(logits, axis=-1)
+    w_main = w[..., : NB * T].reshape(B, Hkv, G, NB, T)
+    w_buf = w[..., NB * T :]
+    out = jnp.einsum("bhgnt,bhntd->bhgd", w_main, v_deq)
+    out = out + jnp.einsum("bhgt,bhtd->bhgd", w_buf, vb)
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def reference_attend(k: Array, v: Array, q: Array, scale: float | None = None,
+                     window: int | None = None) -> Array:
+    """Oracle: exact attention over raw [B,Hkv,S,D] caches (for tests)."""
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32)) * scale
+    if window is not None and S > window:
+        keep = jnp.arange(S) >= (S - window)
+        s = jnp.where(keep[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,372 @@
+"""Canonical Huffman coding for quantization codes (paper §3.1.2, §3.3.1).
+
+The paper builds *shared per-layer codebooks* once during prefill (host side)
+and reuses them during decode.  We keep that split:
+
+* ``build_codebook`` — host-side (numpy + heapq) from a device histogram;
+  canonical, deterministic, length-limited to ``MAX_CODE_LEN`` bits.
+* ``CodeBook`` — lengths/codewords plus the *array-based tree* used by the
+  paper's branch-divergence-free decoder (children indices + is_symbol flags;
+  traditional pointers replaced by node-array indexes).
+* ``encode_block`` / ``decode_block`` — numpy oracles: one "stream" per row
+  (the per-thread unit in the paper), streams tightly bit-packed in order with
+  per-stream bit counts (u16) as metadata.
+* ``encode_block_jax`` / ``decode_block_jax`` — jit-friendly equivalents.
+  Encoding computes every symbol's bit offset with an exclusive cumsum (the
+  TPU-native replacement for the paper's CUB inclusive scan + global atomic:
+  offsets are fully deterministic, so no write races exist by construction).
+  Decoding is the paper's branchless tree walk, vectorized across streams
+  (one VPU lane plays the role of one CUDA thread).
+
+Bit order: LSB-first within little-endian u32 words — global bit position p
+lives at word ``p >> 5``, bit ``p & 31``.  Codewords are emitted
+first-transmitted-bit-in-LSB, so the encoder ORs ``code_lsb << (p & 31)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+N_SYMBOLS = 256
+MAX_CODE_LEN = 16
+# Worst-case encoded bits per symbol given the length limit.
+WORST_BITS_PER_SYMBOL = MAX_CODE_LEN
+
+
+# ---------------------------------------------------------------------------
+# Codebook construction (host side, runs once per layer at prefill)
+# ---------------------------------------------------------------------------
+
+
+def _huffman_lengths(hist: np.ndarray) -> np.ndarray:
+    """Code lengths from a histogram via the classic heap algorithm.
+
+    Deterministic: ties broken by a monotone sequence id.  Symbols with zero
+    count get length 0 (absent from the code).
+    """
+    hist = np.asarray(hist, dtype=np.int64)
+    present = np.nonzero(hist > 0)[0]
+    lengths = np.zeros(N_SYMBOLS, dtype=np.int32)
+    if len(present) == 0:
+        return lengths
+    if len(present) == 1:
+        lengths[present[0]] = 1
+        return lengths
+    # Heap of (count, uid, tree); tree is either a leaf symbol or (l, r).
+    uid = 0
+    heap: list[tuple[int, int, object]] = []
+    for s in present:
+        heap.append((int(hist[s]), uid, int(s)))
+        uid += 1
+    heapq.heapify(heap)
+    while len(heap) > 1:
+        c1, _, t1 = heapq.heappop(heap)
+        c2, _, t2 = heapq.heappop(heap)
+        heapq.heappush(heap, (c1 + c2, uid, (t1, t2)))
+        uid += 1
+    # Walk the tree to assign depths.
+    stack = [(heap[0][2], 0)]
+    while stack:
+        node, depth = stack.pop()
+        if isinstance(node, int):
+            lengths[node] = max(depth, 1)
+        else:
+            l, r = node
+            stack.append((l, depth + 1))
+            stack.append((r, depth + 1))
+    return lengths
+
+
+def _flatten_histogram(hist: np.ndarray) -> np.ndarray:
+    """Reduce skew so the longest Huffman code shortens (length limiting)."""
+    h = np.asarray(hist, dtype=np.int64)
+    out = np.where(h > 0, (h + 1) // 2, 0)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CodeBook:
+    """Canonical Huffman codebook + array-based decode tree.
+
+    Attributes
+    ----------
+    lengths : np.ndarray [256] int32 — code length per symbol (0 = absent).
+    codes_msb : np.ndarray [256] uint32 — canonical codeword, MSB-first.
+    codes_lsb : np.ndarray [256] uint32 — bit-reversed codeword (LSB-first
+        emission order), what the encoder actually ORs into the stream.
+    children : np.ndarray [n_nodes, 2] int32 — the paper's two-element child
+        index array; the stream bit selects children[idx, bit].
+    is_symbol : np.ndarray [n_nodes] int32 — 1 at leaves.
+    symbols : np.ndarray [n_nodes] int32 — decoded symbol at leaves (0 else).
+    """
+
+    lengths: np.ndarray
+    codes_msb: np.ndarray
+    codes_lsb: np.ndarray
+    children: np.ndarray
+    is_symbol: np.ndarray
+    symbols: np.ndarray
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.children.shape[0])
+
+    @property
+    def serialized_bits(self) -> int:
+        """Codebook transmission cost: 4 bits of length per symbol suffice
+        for MAX_CODE_LEN=16 (canonical codes are reconstructible from
+        lengths alone)."""
+        return N_SYMBOLS * 4
+
+    def expected_bits_per_symbol(self, hist: np.ndarray) -> float:
+        h = np.asarray(hist, dtype=np.float64)
+        tot = h.sum()
+        if tot == 0:
+            return 0.0
+        return float((h * self.lengths).sum() / tot)
+
+    def as_device_tables(self):
+        """Decode tables as jnp arrays (padded to MAX_NODES for static shape)."""
+        max_nodes = 2 * N_SYMBOLS
+        ch = np.zeros((max_nodes, 2), np.int32)
+        isym = np.zeros((max_nodes,), np.int32)
+        sym = np.zeros((max_nodes,), np.int32)
+        n = self.n_nodes
+        ch[:n] = self.children
+        isym[:n] = self.is_symbol
+        sym[:n] = self.symbols
+        return jnp.asarray(ch), jnp.asarray(isym), jnp.asarray(sym)
+
+    def as_encode_tables(self):
+        return jnp.asarray(self.codes_lsb), jnp.asarray(self.lengths.astype(np.uint32))
+
+
+def _reverse_bits(code: int, length: int) -> int:
+    out = 0
+    for _ in range(length):
+        out = (out << 1) | (code & 1)
+        code >>= 1
+    return out
+
+
+def _build_tree(lengths: np.ndarray, codes_msb: np.ndarray):
+    """Array-based tree: node 0 is the root; children[i] = [left, right]."""
+    children = [[0, 0]]
+    is_symbol = [0]
+    symbols = [0]
+    for s in range(N_SYMBOLS):
+        L = int(lengths[s])
+        if L == 0:
+            continue
+        code = int(codes_msb[s])
+        idx = 0
+        for b in range(L - 1, -1, -1):
+            bit = (code >> b) & 1
+            nxt = children[idx][bit]
+            if nxt == 0:
+                children.append([0, 0])
+                is_symbol.append(0)
+                symbols.append(0)
+                nxt = len(children) - 1
+                children[idx][bit] = nxt
+            idx = nxt
+        is_symbol[idx] = 1
+        symbols[idx] = s
+    return (
+        np.asarray(children, np.int32),
+        np.asarray(is_symbol, np.int32),
+        np.asarray(symbols, np.int32),
+    )
+
+
+def build_codebook(hist) -> CodeBook:
+    """Build a canonical, length-limited codebook from a histogram."""
+    hist = np.asarray(hist, dtype=np.int64)
+    if hist.shape != (N_SYMBOLS,):
+        raise ValueError(f"hist must have shape ({N_SYMBOLS},), got {hist.shape}")
+    work = hist.copy()
+    lengths = _huffman_lengths(work)
+    # Length-limit via histogram flattening (paper caps metadata at u16 bit
+    # counts; 16-bit codes keep the worst case bounded and the tree shallow).
+    for _ in range(64):
+        if lengths.max() <= MAX_CODE_LEN:
+            break
+        work = _flatten_histogram(work)
+        lengths = _huffman_lengths(work)
+    assert lengths.max() <= MAX_CODE_LEN, "length limiting failed to converge"
+
+    # Canonical code assignment: sort by (length, symbol).
+    codes_msb = np.zeros(N_SYMBOLS, np.uint32)
+    codes_lsb = np.zeros(N_SYMBOLS, np.uint32)
+    order = sorted(s for s in range(N_SYMBOLS) if lengths[s] > 0)
+    order.sort(key=lambda s: (lengths[s], s))
+    code = 0
+    prev_len = 0
+    for s in order:
+        L = int(lengths[s])
+        code <<= L - prev_len
+        codes_msb[s] = code
+        codes_lsb[s] = _reverse_bits(code, L)
+        code += 1
+        prev_len = L
+    children, is_symbol, symbols = _build_tree(lengths, codes_msb)
+    return CodeBook(
+        lengths=lengths,
+        codes_msb=codes_msb,
+        codes_lsb=codes_lsb,
+        children=children,
+        is_symbol=is_symbol,
+        symbols=symbols,
+    )
+
+
+def histogram(codes: Array) -> Array:
+    """Device-side histogram of uint8 codes (paper builds this on GPU)."""
+    return jnp.bincount(codes.reshape(-1).astype(jnp.int32), length=N_SYMBOLS)
+
+
+# ---------------------------------------------------------------------------
+# Numpy oracles (exact, used as the ground truth for every other impl)
+# ---------------------------------------------------------------------------
+
+
+def encode_block(codes: np.ndarray, book: CodeBook):
+    """Encode a 2D block, one stream per row, tightly bit-packed in order.
+
+    Returns (payload_words u32[...], nbits u16[S]).
+    """
+    codes = np.asarray(codes, np.uint8)
+    S, L = codes.shape
+    lengths = book.lengths
+    nbits = lengths[codes.astype(np.int64)].sum(axis=1).astype(np.uint16)
+    total = int(nbits.astype(np.int64).sum())
+    words = np.zeros((total + 31) // 32 or 1, np.uint32)
+    pos = 0
+    for s in range(S):
+        for j in range(L):
+            sym = int(codes[s, j])
+            cw = int(book.codes_lsb[sym])
+            ln = int(lengths[sym])
+            for b in range(ln):
+                if (cw >> b) & 1:
+                    words[(pos + b) >> 5] |= np.uint32(1 << ((pos + b) & 31))
+            pos += ln
+    return words, nbits
+
+
+def decode_block(words: np.ndarray, nbits: np.ndarray, book: CodeBook, n_per_stream: int):
+    """Branchless decode oracle — literal transcription of the paper's loop.
+
+    Walks each stream's bit range with:
+        idx       = children[idx, bit]
+        out[w]    = symbols[idx]          (always written)
+        w        += is_symbol[idx]        (advances only at leaves)
+        idx      &= ~(-is_symbol[idx])    (reset-to-root without a branch)
+    """
+    words = np.asarray(words, np.uint32)
+    nbits = np.asarray(nbits, np.int64)
+    S = len(nbits)
+    out = np.zeros((S, n_per_stream), np.uint8)
+    starts = np.concatenate([[0], np.cumsum(nbits)])[:-1]
+    for s in range(S):
+        idx = 0
+        w = 0
+        buf = np.zeros(n_per_stream + 1, np.int64)  # +1 slack: last write lands at w==n
+        for p in range(int(starts[s]), int(starts[s] + nbits[s])):
+            bit = (int(words[p >> 5]) >> (p & 31)) & 1
+            idx = int(book.children[idx, bit])
+            isym = int(book.is_symbol[idx])
+            buf[min(w, n_per_stream)] = book.symbols[idx] if isym else buf[min(w, n_per_stream)]
+            w += isym
+            idx &= ~(-isym)
+        out[s] = buf[:n_per_stream]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JAX implementations (jit-friendly; used inside the compression pipelines)
+# ---------------------------------------------------------------------------
+
+
+def encode_block_jax(codes: Array, codes_lsb: Array, lengths: Array, capacity_words: int):
+    """Vectorized encoder. codes: [S, L] uint8.
+
+    Every symbol's global bit offset is an exclusive cumsum of code lengths —
+    the deterministic replacement for the paper's inclusive scan + atomic
+    write-back index (DESIGN.md §2).  Each ≤16-bit codeword straddles at most
+    two u32 words; both contributions are scatter-added (bitwise disjoint, so
+    add ≡ or).
+
+    Returns (payload u32[capacity_words], nbits u16[S], total_bits i32).
+    """
+    S, L = codes.shape
+    flat = codes.reshape(-1).astype(jnp.int32)
+    ln = lengths[flat].astype(jnp.uint32)  # [S*L]
+    cw = codes_lsb[flat]  # [S*L] uint32, LSB-first
+    ends = jnp.cumsum(ln.astype(jnp.int32))
+    offs = ends - ln.astype(jnp.int32)  # exclusive cumsum
+    total_bits = ends[-1]
+    nbits = (
+        ends.reshape(S, L)[:, -1] - jnp.concatenate([jnp.zeros(1, jnp.int32), ends.reshape(S, L)[:-1, -1]])
+    ).astype(jnp.uint16)
+
+    word_idx = offs >> 5
+    bit_in = (offs & 31).astype(jnp.uint32)
+    # Low contribution: bits of cw that fit in the current word.
+    keep = jnp.uint32(32) - bit_in
+    mask_low = jnp.where(keep >= 32, jnp.uint32(0xFFFFFFFF), (jnp.uint32(1) << keep) - 1)
+    low = (cw & mask_low) << bit_in
+    # High contribution: remaining bits spill into the next word.
+    high = (cw >> (jnp.uint32(31) - bit_in)) >> 1  # == cw >> (32 - bit_in), safe at 0
+    payload = jnp.zeros((capacity_words,), jnp.uint32)
+    payload = payload.at[word_idx].add(low, mode="drop")
+    payload = payload.at[word_idx + 1].add(high, mode="drop")
+    return payload, nbits, total_bits
+
+
+def decode_block_jax(
+    payload: Array,
+    nbits: Array,
+    children: Array,
+    is_symbol: Array,
+    symbols: Array,
+    n_per_stream: int,
+    max_stream_bits: int,
+):
+    """Vectorized branchless decode: every stream walks the tree in lockstep.
+
+    One lane per stream; iteration p processes that stream's p-th bit.  Lanes
+    whose stream already ended are masked (is_symbol forced to 0), exactly as
+    padding behaves on the GPU.  Returns uint8 [S, n_per_stream].
+    """
+    S = nbits.shape[0]
+    nbits_i = nbits.astype(jnp.int32)
+    starts = jnp.cumsum(nbits_i) - nbits_i  # exclusive cumsum
+
+    def body(p, carry):
+        idx, w, out = carry
+        gpos = starts + p
+        bit = (payload[gpos >> 5] >> (gpos & 31).astype(jnp.uint32)) & 1
+        idx = children[idx, bit.astype(jnp.int32)]
+        active = (p < nbits_i).astype(jnp.int32)
+        isym = is_symbol[idx] * active
+        sym = symbols[idx].astype(jnp.uint8)
+        out = out.at[jnp.arange(S), jnp.minimum(w, n_per_stream - 1)].set(
+            jnp.where(isym == 1, sym, out[jnp.arange(S), jnp.minimum(w, n_per_stream - 1)])
+        )
+        w = w + isym
+        idx = idx * (1 - isym)  # reset to root at leaves (branchless)
+        return idx, w, out
+
+    idx0 = jnp.zeros((S,), jnp.int32)
+    w0 = jnp.zeros((S,), jnp.int32)
+    out0 = jnp.zeros((S, n_per_stream), jnp.uint8)
+    _, _, out = jax.lax.fori_loop(0, max_stream_bits, body, (idx0, w0, out0))
+    return out

@@ -1,0 +1,215 @@
+"""Error-bounded quantizers for KV-cache compression.
+
+Implements the paper's two quantization granularities (§3.1.1) plus the KIVI
+baseline (§4.1):
+
+* K cache — ``BlockQuant``: the cache ``[ctx, heads, head_dim]`` is split along
+  ``ctx`` into blocks of ``block_size`` tokens; within each (block, head,
+  channel) unit we compute min/max and quantize with
+  ``step = rel_scale * (max - min)``.
+* K cache — ``ChannelQuant``: KIVI-like, min/max per (head, channel) over the
+  whole segment (used as an ablation baseline; the paper's Fig. 5/7 compares
+  the two).
+* V cache — ``TokenQuant``: min/max per (token, head) over ``head_dim``.
+* ``kivi_quantize`` — the fixed-bit-width asymmetric baseline (b ∈ {2,4}).
+
+All quantizers share one numerical contract (property-tested):
+
+    step  = rel_scale * (max - min)           (error-bounded form), or
+    step  = (max - min) / (2^b - 1)           (fixed-bit form)
+    code  = clip(round((x - min)/step), 0, n_levels-1)  -> uint8
+    x_hat = min + code * step
+    |x - x_hat| <= step/2 + eps   whenever code is not clipped.
+
+Functions are pure jnp and jit-friendly; shapes are static. The "unit" axes
+over which min/max is taken are the last axes after a reshape, so one
+implementation serves every granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Number of representable code levels for the error-bounded (KVComp) path.
+# Codes are stored as uint8 -> at most 256 levels; rel_scale < 1/255 would
+# overflow and is clipped (the clip is part of the contract and is measured,
+# not hidden: see QuantStats.clip_fraction).
+N_LEVELS_U8 = 256
+
+GranularityK = Literal["block", "channel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Configuration of the KVComp quantizer.
+
+    rel_scale_k / rel_scale_v follow the paper's "relative quantization
+    scale" in [0, 1]: the actual step for each unit is
+    ``rel_scale * (max - min)`` of that unit.  Defaults are the paper's
+    turning points (Fig. 5): K BlockQuant 0.05, V TokenQuant 0.15.
+    """
+
+    block_size: int = 64
+    rel_scale_k: float = 0.05
+    rel_scale_v: float = 0.15
+    k_granularity: GranularityK = "block"
+    # KIVI baseline parameters.
+    kivi_bits: int = 2
+    kivi_group: int = 32
+    residual_window: int = 32  # recent tokens kept unquantized (KIVI-style)
+
+    def __post_init__(self):
+        if self.block_size <= 0:
+            raise ValueError(f"block_size must be positive, got {self.block_size}")
+        if not (0.0 < self.rel_scale_k <= 1.0) or not (0.0 < self.rel_scale_v <= 1.0):
+            raise ValueError("rel_scale must be in (0, 1]")
+        if self.kivi_bits not in (1, 2, 3, 4, 8):
+            raise ValueError(f"kivi_bits must be in {{1,2,3,4,8}}, got {self.kivi_bits}")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Quantized:
+    """A quantized tensor: integer codes + per-unit affine parameters.
+
+    ``codes`` has the same shape as the input; ``minval``/``step`` broadcast
+    against it (unit axes are size-1).
+    """
+
+    codes: Array  # uint8
+    minval: Array
+    step: Array
+
+    def dequantize(self, dtype=jnp.float32) -> Array:
+        return (self.minval + self.codes.astype(jnp.float32) * self.step).astype(dtype)
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.codes, self.minval, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def payload_bits_raw(self) -> int:
+        """Bits of the code payload at 8 bits/code (before entropy coding)."""
+        return int(self.codes.size) * 8
+
+    @property
+    def meta_bits(self) -> int:
+        """Bits of affine metadata (fp16 min + fp16 step per unit)."""
+        return (int(self.minval.size) + int(self.step.size)) * 16
+
+
+def _affine_quantize(x: Array, minval: Array, step: Array, n_levels: int) -> Array:
+    """Shared affine quantization core. Returns uint8 codes."""
+    # Guard zero-range units: step==0 means the unit is constant; codes are 0
+    # and dequant reproduces minval exactly.
+    safe_step = jnp.where(step > 0, step, 1.0)
+    q = jnp.round((x - minval) / safe_step)
+    q = jnp.clip(q, 0, n_levels - 1)
+    return q.astype(jnp.uint8)
+
+
+def _minmax(x: Array, axes: tuple[int, ...]) -> tuple[Array, Array]:
+    return jnp.min(x, axis=axes, keepdims=True), jnp.max(x, axis=axes, keepdims=True)
+
+
+def quantize_k_block(x: Array, rel_scale: float, block_size: int) -> Quantized:
+    """Paper's K BlockQuant.
+
+    x: [ctx, heads, head_dim] with ctx % block_size == 0.  Units are
+    (block, head, channel): min/max over the block_size tokens of each block.
+    """
+    ctx, heads, hd = x.shape
+    if ctx % block_size != 0:
+        raise ValueError(f"ctx={ctx} not a multiple of block_size={block_size}")
+    xb = x.reshape(ctx // block_size, block_size, heads, hd).astype(jnp.float32)
+    mn, mx = _minmax(xb, (1,))
+    step = rel_scale * (mx - mn)
+    codes = _affine_quantize(xb, mn, step, N_LEVELS_U8)
+    return Quantized(codes=codes, minval=mn, step=step)
+
+
+def quantize_k_channel(x: Array, rel_scale: float) -> Quantized:
+    """KIVI-like ChannelQuant over the whole segment (per head, channel)."""
+    xb = x.astype(jnp.float32)
+    mn, mx = _minmax(xb, (0,))
+    step = rel_scale * (mx - mn)
+    codes = _affine_quantize(xb, mn, step, N_LEVELS_U8)
+    return Quantized(codes=codes, minval=mn, step=step)
+
+
+def quantize_v_token(x: Array, rel_scale: float) -> Quantized:
+    """Paper's V TokenQuant: units are (token, head), min/max over head_dim.
+
+    x: [ctx, heads, head_dim].
+    """
+    xb = x.astype(jnp.float32)
+    mn, mx = _minmax(xb, (-1,))
+    step = rel_scale * (mx - mn)
+    codes = _affine_quantize(xb, mn, step, N_LEVELS_U8)
+    return Quantized(codes=codes, minval=mn, step=step)
+
+
+def kivi_quantize_k(x: Array, bits: int, group: int) -> Quantized:
+    """KIVI baseline for K: channel-wise asymmetric b-bit over token groups.
+
+    x: [ctx, heads, head_dim], ctx % group == 0. Units are (group, head,
+    channel); step is (max-min)/(2^b - 1) so the full range is representable.
+    """
+    ctx, heads, hd = x.shape
+    if ctx % group != 0:
+        raise ValueError(f"ctx={ctx} not a multiple of group={group}")
+    xb = x.reshape(ctx // group, group, heads, hd).astype(jnp.float32)
+    mn, mx = _minmax(xb, (1,))
+    n = (1 << bits)
+    step = (mx - mn) / (n - 1)
+    codes = _affine_quantize(xb, mn, step, n)
+    return Quantized(codes=codes, minval=mn, step=step)
+
+
+def kivi_quantize_v(x: Array, bits: int) -> Quantized:
+    """KIVI baseline for V: token-wise asymmetric b-bit."""
+    xb = x.astype(jnp.float32)
+    mn, mx = _minmax(xb, (-1,))
+    n = (1 << bits)
+    step = (mx - mn) / (n - 1)
+    codes = _affine_quantize(xb, mn, step, n)
+    return Quantized(codes=codes, minval=mn, step=step)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantStats:
+    """Diagnostics used by the benchmarks and the accuracy sweeps."""
+
+    max_abs_err: float
+    mean_abs_err: float
+    clip_fraction: float
+    code_entropy_bits: float  # empirical entropy of the code stream
+
+    @staticmethod
+    def measure(x: Array, q: Quantized) -> "QuantStats":
+        xf = jnp.asarray(x, jnp.float32).reshape(q.codes.shape)
+        err = jnp.abs(xf - q.dequantize())
+        # A code is clipped iff it sits at the top level but the ideal level
+        # is above it (bottom clipping cannot happen: x >= min).
+        safe_step = jnp.where(q.step > 0, q.step, 1.0)
+        ideal = jnp.round((xf - q.minval) / safe_step)
+        clipped = (ideal > q.codes.astype(jnp.float32)).mean()
+        hist = jnp.bincount(q.codes.reshape(-1).astype(jnp.int32), length=256)
+        p = hist / jnp.maximum(hist.sum(), 1)
+        ent = -jnp.sum(jnp.where(p > 0, p * jnp.log2(p), 0.0))
+        return QuantStats(
+            max_abs_err=float(err.max()),
+            mean_abs_err=float(err.mean()),
+            clip_fraction=float(clipped),
+            code_entropy_bits=float(ent),
+        )

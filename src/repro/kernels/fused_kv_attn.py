@@ -1,0 +1,171 @@
+"""Pallas TPU kernel: fused bit-unpack + dequantize + flash-decode attention.
+
+The TPU realization of the paper's cache-resident decompression (§3.3.2):
+packed u32 words stream HBM→VMEM once per block; unpacking (reshape/shift/
+mask — no gathers, thanks to the no-straddle layout), dequantization, and the
+attention matvec all happen inside the kernel on VMEM/VREG data.  The
+decompressed K/V tiles are never written back to HBM — exactly the paper's
+"decompressed data consumed in situ", with VMEM playing the role of GPU
+shared memory and the MXU taking the dot products.
+
+Grid: ``(B, Hkv, NB)``.  TPU grids execute sequentially with the last axis
+innermost, so VMEM scratch carries the flash-decoding running state
+``(m, l, acc)`` across the NB axis for each (batch, kv-head) pair — the same
+trick flash-decoding uses, here doubling as the decompression consumer.
+
+Block shapes keep the MXU happy when ``D`` and ``block_size`` are multiples
+of 128/8; odd head_dims (112, 160, 80 in the assigned archs) are padded by
+``ops.fused_decode_attention`` before the call.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import NEG_INIT
+
+Array = jax.Array
+
+
+def _unpack_tile(words: Array, bits: int, n_codes: int) -> Array:
+    """No-straddle unpack of a flat [W] u32 vector -> [n_codes] f32.
+
+    Pure reshape/shift/mask — lowers to VPU element-wise ops, no gathers.
+    """
+    cpw = 32 // bits
+    # iota is generated in-kernel (a captured host array would be a const).
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, cpw), 1) * jnp.uint32(bits)
+    vals = (words[:, None] >> shifts) & jnp.uint32((1 << bits) - 1)
+    return vals.reshape(-1)[:n_codes].astype(jnp.float32)
+
+
+def _kernel(
+    nb_valid_ref,  # scalar prefetch: i32 [1]
+    q_ref,         # [1, G, D]
+    ks_ref,        # [1, 1, 1, Wk] u32
+    kmn_ref,       # [1, 1, 1, D]
+    kst_ref,
+    vs_ref,        # [1, 1, 1, Wv] u32
+    vmn_ref,       # [1, 1, 1, T]
+    vst_ref,
+    acc_out,       # [1, G, D] f32
+    m_out,         # [1, G]
+    l_out,         # [1, G]
+    acc_s,         # VMEM scratch [G, D] f32
+    m_s,           # [G]
+    l_s,           # [G]
+    *,
+    bits_k: int,
+    bits_v: int,
+    block_size: int,
+    head_dim: int,
+    scale: float,
+    nb_total: int,
+):
+    n = pl.program_id(2)
+    T, D = block_size, head_dim
+
+    @pl.when(n == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+        m_s[...] = jnp.full_like(m_s, NEG_INIT)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    @pl.when(n < nb_valid_ref[0])
+    def _update():
+        # --- decompress K in situ (VMEM) ---
+        k_codes = _unpack_tile(ks_ref[0, 0, 0, :], bits_k, T * D).reshape(T, D)
+        k_mn = kmn_ref[0, 0, 0, :].astype(jnp.float32)
+        k_st = kst_ref[0, 0, 0, :].astype(jnp.float32)
+        kd = k_mn[None, :] + k_codes * k_st[None, :]  # [T, D]
+        # --- scores on the MXU ---
+        qg = q_ref[0].astype(jnp.float32)  # [G, D]
+        s = jax.lax.dot_general(qg, kd, (((1,), (1,)), ((), ()))) * scale  # [G, T]
+        # --- flash-decoding running softmax ---
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])  # [G, T]
+        # --- decompress V in situ and accumulate ---
+        v_codes = _unpack_tile(vs_ref[0, 0, 0, :], bits_v, T * D).reshape(T, D)
+        v_mn = vmn_ref[0, 0, 0, :].astype(jnp.float32)
+        v_st = vst_ref[0, 0, 0, :].astype(jnp.float32)
+        vd = v_mn[:, None] + v_codes * v_st[:, None]  # [T, D]
+        acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot(p, vd)
+        l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1)
+        m_s[...] = m_new
+
+    @pl.when(n == nb_total - 1)
+    def _emit():
+        acc_out[0] = acc_s[...]
+        m_out[0] = m_s[...]
+        l_out[0] = l_s[...]
+
+
+def fused_decode_attention_pallas(
+    q: Array,
+    k_store: Array, k_min: Array, k_step: Array,
+    v_store: Array, v_min: Array, v_step: Array,
+    nb_valid: Array,
+    *,
+    bits_k: int, bits_v: int, block_size: int,
+    scale: float | None = None,
+    interpret: bool = True,
+):
+    """Returns (acc [B,Hq,D] f32 unnormalized, m [B,Hq], l [B,Hq])."""
+    B, Hq, D = q.shape
+    Hkv, NB, Wk = k_store.shape[1], k_store.shape[2], k_store.shape[3]
+    Wv = v_store.shape[3]
+    G, T = Hq // Hkv, block_size
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _kernel,
+        bits_k=bits_k, bits_v=bits_v, block_size=T, head_dim=D,
+        scale=scale, nb_total=NB,
+    )
+    grid = (B, Hkv, NB)
+    out_shape = [
+        jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hq), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hq), jnp.float32),
+    ]
+# Index maps take the scalar-prefetch ref as a trailing arg.
+    in_specs = [
+        pl.BlockSpec((1, G, D), lambda b, h, n, nb: (b, h, 0)),
+        pl.BlockSpec((1, 1, 1, Wk), lambda b, h, n, nb: (b, h, n, 0)),
+        pl.BlockSpec((1, 1, 1, D), lambda b, h, n, nb: (b, h, n, 0)),
+        pl.BlockSpec((1, 1, 1, D), lambda b, h, n, nb: (b, h, n, 0)),
+        pl.BlockSpec((1, 1, 1, Wv), lambda b, h, n, nb: (b, h, n, 0)),
+        pl.BlockSpec((1, 1, 1, T), lambda b, h, n, nb: (b, h, n, 0)),
+        pl.BlockSpec((1, 1, 1, T), lambda b, h, n, nb: (b, h, n, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, G, D), lambda b, h, n, nb: (b, h, 0)),
+        pl.BlockSpec((1, G), lambda b, h, n, nb: (b, h)),
+        pl.BlockSpec((1, G), lambda b, h, n, nb: (b, h)),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[
+                pltpu.VMEM((G, D), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+            ],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(nb_valid.reshape(1).astype(jnp.int32), q, k_store, k_min, k_step, v_store, v_min, v_step)

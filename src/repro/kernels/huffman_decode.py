@@ -1,0 +1,161 @@
+"""Pallas kernel: the paper's branch-divergence-free Huffman decode (§3.3.1),
+optionally fused with the K-score dot product ("single kernel").
+
+This is the *faithful* port: one VPU lane plays one CUDA thread, walking the
+array-based Huffman tree one bit per iteration with the paper's branchless
+updates —
+
+    idx    = children[idx, bit]
+    out[w] = symbols[idx]              (position advances only at leaves)
+    w     += is_symbol[idx]
+    idx   *= 1 - is_symbol[idx]        (≡ idx &= ~(-is_symbol) reset-to-root)
+
+Every lane executes the identical instruction sequence; there is no data-
+dependent control flow anywhere in the loop, exactly as in the paper.
+
+DESIGN.md §2 records the hardware caveat: the per-lane gathers
+(``children[idx, bit]``, the masked output scatter, and ``q[w]`` in the fused
+variant) vectorize in interpret mode but are VPU-hostile on real TPU hardware;
+the production bandwidth path is ``fused_kv_attn`` over the no-straddle
+layout.  This kernel exists to validate the algorithm end-to-end and to
+measure the faithful single-kernel-vs-multi-kernel comparison (paper Fig. 9).
+
+Layout: one grid step decodes one 2D block — ``S`` streams (rows of
+``head_dim`` symbols) packed tightly in stream order inside the block's
+payload slot, with per-stream bit counts (the paper's u16 thread metadata).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _walk(payload, nbits, children, is_symbol, symbols, n_per_stream, max_bits, S):
+    """The branchless lockstep walk shared by both kernel variants.
+
+    Returns decoded codes [S, n_per_stream] float32.
+    """
+    nbits_i = nbits.astype(jnp.int32)
+    starts = jnp.cumsum(nbits_i) - nbits_i  # deterministic per-stream offsets
+    lane = jax.lax.broadcasted_iota(jnp.int32, (S, n_per_stream), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (S, n_per_stream), 1)
+
+    def body(p, carry):
+        idx, w, out = carry
+        gpos = starts + p  # [S]
+        word = payload[gpos >> 5]  # per-lane gather (interpret-mode)
+        bit = ((word >> (gpos & 31).astype(jnp.uint32)) & 1).astype(jnp.int32)
+        idx = children[idx, bit]
+        active = (p < nbits_i).astype(jnp.int32)
+        isym = is_symbol[idx] * active
+        sym = symbols[idx].astype(jnp.float32)
+        # Masked broadcast-write: lane s writes column w[s] iff at a leaf.
+        hit = (col == w[:, None]) & (isym[:, None] == 1)
+        out = jnp.where(hit, sym[:, None], out)
+        w = w + isym
+        idx = idx * (1 - isym)  # branchless reset-to-root
+        return idx, w, out
+
+    idx0 = jnp.zeros((S,), jnp.int32)
+    w0 = jnp.zeros((S,), jnp.int32)
+    out0 = jnp.zeros((S, n_per_stream), jnp.float32)
+    _, _, out = jax.lax.fori_loop(0, max_bits, body, (idx0, w0, out0))
+    del lane
+    return out
+
+
+def _decode_kernel(payload_ref, nbits_ref, ch_ref, isym_ref, sym_ref, out_ref,
+                   *, n_per_stream, max_bits, S):
+    codes = _walk(
+        payload_ref[0], nbits_ref[0], ch_ref[...], isym_ref[...], sym_ref[...],
+        n_per_stream, max_bits, S,
+    )
+    out_ref[0] = codes.astype(jnp.uint8)
+
+
+def _fused_scores_kernel(payload_ref, nbits_ref, ch_ref, isym_ref, sym_ref,
+                         kmn_ref, kst_ref, q_ref, out_ref,
+                         *, n_per_stream, max_bits, S, scale):
+    codes = _walk(
+        payload_ref[0], nbits_ref[0], ch_ref[...], isym_ref[...], sym_ref[...],
+        n_per_stream, max_bits, S,
+    )
+    # Cache-resident consumption: dequantize + dot in VMEM, emit scores only.
+    kd = kmn_ref[0][None, :] + codes * kst_ref[0][None, :]  # [S, D]
+    q = q_ref[...].astype(jnp.float32)  # [D]
+    out_ref[0] = (kd @ q) * scale
+
+
+def huffman_decode_pallas(
+    payload: Array,   # u32 [NBLK, Wslot] — per-block payload slots
+    nbits: Array,     # u16 [NBLK, S]
+    children: Array,  # i32 [MAXN, 2]
+    is_symbol: Array, # i32 [MAXN]
+    symbols: Array,   # i32 [MAXN]
+    n_per_stream: int,
+    max_bits: int,
+    interpret: bool = True,
+) -> Array:
+    """Decode every block -> uint8 [NBLK, S, n_per_stream]."""
+    NBLK, Wslot = payload.shape
+    S = nbits.shape[1]
+    MAXN = children.shape[0]
+    kernel = functools.partial(
+        _decode_kernel, n_per_stream=n_per_stream, max_bits=max_bits, S=S)
+    return pl.pallas_call(
+        kernel,
+        grid=(NBLK,),
+        in_specs=[
+            pl.BlockSpec((1, Wslot), lambda n: (n, 0)),
+            pl.BlockSpec((1, S), lambda n: (n, 0)),
+            pl.BlockSpec((MAXN, 2), lambda n: (0, 0)),
+            pl.BlockSpec((MAXN,), lambda n: (0,)),
+            pl.BlockSpec((MAXN,), lambda n: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, S, n_per_stream), lambda n: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((NBLK, S, n_per_stream), jnp.uint8),
+        interpret=interpret,
+    )(payload, nbits, children, is_symbol, symbols)
+
+
+def huffman_attn_scores_pallas(
+    payload: Array, nbits: Array,
+    children: Array, is_symbol: Array, symbols: Array,
+    k_min: Array,   # [NBLK, D]
+    k_step: Array,  # [NBLK, D]
+    q: Array,       # [D]
+    max_bits: int,
+    scale: float = 1.0,
+    interpret: bool = True,
+) -> Array:
+    """Fused single kernel: Huffman decode + dequant + K·q scores [NBLK, S]."""
+    NBLK, Wslot = payload.shape
+    S = nbits.shape[1]
+    D = q.shape[0]
+    MAXN = children.shape[0]
+    kernel = functools.partial(
+        _fused_scores_kernel, n_per_stream=D, max_bits=max_bits, S=S, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(NBLK,),
+        in_specs=[
+            pl.BlockSpec((1, Wslot), lambda n: (n, 0)),
+            pl.BlockSpec((1, S), lambda n: (n, 0)),
+            pl.BlockSpec((MAXN, 2), lambda n: (0, 0)),
+            pl.BlockSpec((MAXN,), lambda n: (0,)),
+            pl.BlockSpec((MAXN,), lambda n: (0,)),
+            pl.BlockSpec((1, D), lambda n: (n, 0)),
+            pl.BlockSpec((1, D), lambda n: (n, 0)),
+            pl.BlockSpec((D,), lambda n: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, S), lambda n: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((NBLK, S), jnp.float32),
+        interpret=interpret,
+    )(payload, nbits, children, is_symbol, symbols, k_min, k_step, q)

@@ -1,0 +1,104 @@
+"""Public jit'd kernel wrappers.
+
+``impl`` selects the execution path:
+  * ``"pallas"``    — the Pallas kernels (interpret mode on CPU; compiled
+                      Mosaic on real TPU).
+  * ``"xla"``       — the pure-jnp oracle (used by the distributed serve step
+                      and the multi-pod dry-run, where portability matters).
+  * ``"auto"``      — pallas on TPU backends, xla elsewhere.
+
+The wrappers also normalize layout quirks (odd head_dims are padded to the
+next multiple of 128 lanes before entering the MXU-shaped kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fused_kv_attn import fused_decode_attention_pallas
+
+Array = jax.Array
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return _default_impl()
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"impl must be auto|pallas|xla, got {impl}")
+    return impl
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits_k", "bits_v", "block_size", "scale", "impl", "interpret"),
+)
+def fused_decode_attention(
+    q: Array,
+    k_store: Array, k_min: Array, k_step: Array,
+    v_store: Array, v_min: Array, v_step: Array,
+    k_buf: Array, v_buf: Array,
+    nb_valid: Array, buf_len: Array,
+    *,
+    bits_k: int, bits_v: int, block_size: int,
+    scale: float | None = None,
+    impl: str = "auto",
+    interpret: bool = True,
+):
+    """Full decode attention over (packed store ∥ raw buffer) -> [B, Hq, D].
+
+    The packed part runs in the fused kernel (or its oracle); the small raw
+    buffer part runs in XLA and is merged with a two-part softmax combine.
+    """
+    impl = resolve_impl(impl)
+    D = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    kw = dict(bits_k=bits_k, bits_v=bits_v, block_size=block_size, scale=scale)
+    if impl == "pallas":
+        acc, m, l = fused_decode_attention_pallas(
+            q, k_store, k_min, k_step, v_store, v_min, v_step, nb_valid,
+            interpret=interpret, **kw)
+    else:
+        acc, m, l = ref.fused_decode_attention_ref(
+            q, k_store, k_min, k_step, v_store, v_min, v_step, nb_valid, **kw)
+    return ref.combine_with_buffer_ref(acc, m, l, q, k_buf, v_buf, buf_len, scale=scale)
+
+
+def cache_decode_attention(cache, q: Array, impl: str = "auto", interpret: bool = True):
+    """Convenience: fused decode attention straight from a LayerKVCache."""
+    spec = cache.spec
+    if spec.layout == "raw":
+        raise ValueError("fused kernel requires a packed/kivi layout")
+    return fused_decode_attention(
+        q,
+        cache.k_store, cache.k_min, cache.k_step,
+        cache.v_store, cache.v_min, cache.v_step,
+        cache.k_buf, cache.v_buf,
+        jnp.minimum(cache.n_flushed, spec.n_blocks), cache.buf_len,
+        bits_k=spec.bits_k, bits_v=spec.bits_v, block_size=spec.block_size,
+        impl=impl, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rel_scale", "bits", "token_wise", "impl", "interpret"))
+def quant_pack(
+    x: Array, *, rel_scale: float, bits: int, token_wise: bool,
+    impl: str = "auto", interpret: bool = True,
+):
+    """Store-stage compression of [NBLK, T, D] raw blocks."""
+    impl = resolve_impl(impl)
+    if impl == "pallas":
+        from repro.kernels.pack_encode import quant_pack_pallas
+
+        return quant_pack_pallas(x, rel_scale, bits, token_wise, interpret=interpret)
+    return ref.quant_pack_ref(x, rel_scale, bits, token_wise)

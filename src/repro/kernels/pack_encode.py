@@ -1,0 +1,85 @@
+"""Pallas kernel: Store-stage quantize + bit-pack (paper §3.2.2).
+
+One grid step compresses one 2D block: the raw [T, D] tile streams HBM→VMEM,
+min/max reduction, error-bounded quantization, and the no-straddle pack all
+run in VMEM, and only the packed u32 words + fp scales go back to HBM —
+the Store-stage mirror of cache-resident decompression.  The paper's
+inclusive-scan + atomic-offset machinery is unnecessary here because uniform
+per-block widths make every output offset affine in the block index
+(DESIGN.md §2).
+
+K blocks use BlockQuant units (min/max over the T tokens, per channel);
+V blocks use TokenQuant units (min/max over D, per token).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _pack_tile(codes: Array, bits: int, W: int) -> Array:
+    """No-straddle pack of flat [N] u32 codes -> [W] u32 words (in-VMEM)."""
+    cpw = 32 // bits
+    n = codes.shape[0]
+    pad = W * cpw - n
+    if pad:
+        codes = jnp.concatenate([codes, jnp.zeros((pad,), jnp.uint32)])
+    c = codes.reshape(W, cpw)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, cpw), 1) * jnp.uint32(bits)
+    return jnp.sum(c << shifts, axis=1).astype(jnp.uint32)
+
+
+def _kernel(x_ref, words_ref, mn_ref, st_ref, *, rel_scale, bits, token_wise, W):
+    x = x_ref[0].astype(jnp.float32)  # [T, D]
+    axis = 1 if token_wise else 0
+    mn = jnp.min(x, axis=axis)
+    mx = jnp.max(x, axis=axis)
+    step = rel_scale * (mx - mn)
+    safe = jnp.where(step > 0, step, 1.0)
+    if token_wise:
+        normalized = (x - mn[:, None]) / safe[:, None]
+    else:
+        normalized = (x - mn[None, :]) / safe[None, :]
+    codes = jnp.clip(jnp.round(normalized), 0, 2**bits - 1).astype(jnp.uint32)
+    words_ref[0] = _pack_tile(codes.reshape(-1), bits, W)
+    mn_ref[0] = mn
+    st_ref[0] = step
+
+
+def quant_pack_pallas(
+    x: Array,  # [NBLK, T, D] raw KV blocks
+    rel_scale: float,
+    bits: int,
+    token_wise: bool,
+    interpret: bool = True,
+):
+    """Returns (words u32 [NBLK, W], mn [NBLK, U], step [NBLK, U]) where
+    U = T for token_wise (V) else D (K)."""
+    NBLK, T, D = x.shape
+    cpw = 32 // bits
+    W = (T * D + cpw - 1) // cpw
+    U = T if token_wise else D
+    kernel = functools.partial(
+        _kernel, rel_scale=rel_scale, bits=bits, token_wise=token_wise, W=W)
+    return pl.pallas_call(
+        kernel,
+        grid=(NBLK,),
+        in_specs=[pl.BlockSpec((1, T, D), lambda n: (n, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, W), lambda n: (n, 0)),
+            pl.BlockSpec((1, U), lambda n: (n, 0)),
+            pl.BlockSpec((1, U), lambda n: (n, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NBLK, W), jnp.uint32),
+            jax.ShapeDtypeStruct((NBLK, U), jnp.float32),
+            jax.ShapeDtypeStruct((NBLK, U), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

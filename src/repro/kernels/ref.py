@@ -1,0 +1,148 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function mirrors one kernel's semantics exactly, built only from jnp ops
+already validated against numpy in ``repro.core``.  Kernel tests sweep shapes
+and dtypes and ``assert_allclose`` kernel-vs-oracle.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+
+Array = jax.Array
+
+NEG_INIT = -1e30  # finite "-inf" so flash combines never produce NaN
+
+
+def dequant_k(codes: Array, k_min: Array, k_step: Array) -> Array:
+    """codes [..., T, D], k_min/k_step [..., D] (BlockQuant units)."""
+    return k_min[..., None, :].astype(jnp.float32) + codes.astype(jnp.float32) * k_step[..., None, :].astype(jnp.float32)
+
+
+def dequant_v(codes: Array, v_min: Array, v_step: Array) -> Array:
+    """codes [..., T, D], v_min/v_step [..., T] (TokenQuant units)."""
+    return v_min[..., None].astype(jnp.float32) + codes.astype(jnp.float32) * v_step[..., None].astype(jnp.float32)
+
+
+def fused_decode_attention_ref(
+    q: Array,          # [B, Hq, D]
+    k_store: Array,    # u32 [B, Hkv, NB, Wk]
+    k_min: Array,      # [B, Hkv, NB, D]
+    k_step: Array,
+    v_store: Array,    # u32 [B, Hkv, NB, Wv]
+    v_min: Array,      # [B, Hkv, NB, T]
+    v_step: Array,
+    nb_valid: Array,   # i32 scalar
+    bits_k: int,
+    bits_v: int,
+    block_size: int,
+    scale: float | None = None,
+):
+    """Oracle for the fused unpack+dequant+flash-decode kernel.
+
+    Returns (acc [B,Hq,D] f32 — unnormalized, m [B,Hq], l [B,Hq]) so the
+    caller can combine with the raw-buffer part.
+    """
+    B, Hq, D = q.shape
+    Hkv, NB = k_store.shape[1], k_store.shape[2]
+    G, T = Hq // Hkv, block_size
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    kc = bitpack.unpack_nostraddle(k_store, bits_k, T * D).reshape(B, Hkv, NB, T, D)
+    vc = bitpack.unpack_nostraddle(v_store, bits_v, T * D).reshape(B, Hkv, NB, T, D)
+    kd = dequant_k(kc, k_min, k_step)  # [B,Hkv,NB,T,D]
+    vd = dequant_v(vc, v_min, v_step)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhntd->bhgnt", qg, kd) * scale
+    ok = (jnp.arange(NB) < nb_valid)[None, None, None, :, None]
+    s = jnp.where(ok, s, NEG_INIT)
+    s2 = s.reshape(B, Hkv, G, NB * T)
+    m = jnp.max(s2, axis=-1)
+    m = jnp.maximum(m, NEG_INIT)
+    p = jnp.exp(s2 - m[..., None]) * (jnp.repeat(ok[..., 0].reshape(1, 1, 1, NB), T, -1))
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgnt,bhntd->bhgd", p.reshape(B, Hkv, G, NB, T), vd)
+    return (
+        acc.reshape(B, Hq, D),
+        m.reshape(B, Hq),
+        l.reshape(B, Hq),
+    )
+
+
+def combine_with_buffer_ref(
+    acc: Array, m: Array, l: Array,  # from the main (packed) part
+    q: Array,                        # [B, Hq, D]
+    k_buf: Array, v_buf: Array,      # [B, Hkv, T, D]
+    buf_len: Array,                  # i32 scalar
+    scale: float | None = None,
+):
+    """Two-part softmax combine: packed-store partials + raw tail buffer."""
+    B, Hq, D = q.shape
+    Hkv, T = k_buf.shape[1], k_buf.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg, k_buf.astype(jnp.float32)) * scale
+    ok = (jnp.arange(T) < buf_len)[None, None, None, :]
+    s = jnp.where(ok, s, NEG_INIT)
+    mb = jnp.maximum(jnp.max(s, axis=-1), NEG_INIT)
+    pb = jnp.exp(s - mb[..., None]) * ok
+    lb = jnp.sum(pb, axis=-1)
+    accb = jnp.einsum("bhgt,bhtd->bhgd", pb, v_buf.astype(jnp.float32))
+    mb, lb, accb = mb.reshape(B, Hq), lb.reshape(B, Hq), accb.reshape(B, Hq, D)
+
+    M = jnp.maximum(m, mb)
+    a1 = jnp.exp(m - M)
+    a2 = jnp.exp(mb - M)
+    denom = l * a1 + lb * a2
+    out = (acc * a1[..., None] + accb * a2[..., None]) / jnp.maximum(denom, 1e-30)[..., None]
+    return out
+
+
+def quant_pack_ref(x: Array, rel_scale: float, bits: int, token_wise: bool):
+    """Oracle for the Store-stage kernel: quantize + no-straddle pack.
+
+    x: [NBLK, T, D].  token_wise=False -> K BlockQuant (units: block×channel);
+    True -> V TokenQuant (units: token).
+    Returns (words u32 [NBLK, W], mn, step).
+    """
+    xf = x.astype(jnp.float32)
+    axes = (-1,) if token_wise else (-2,)
+    mn = jnp.min(xf, axis=axes, keepdims=True)
+    mx = jnp.max(xf, axis=axes, keepdims=True)
+    step = rel_scale * (mx - mn)
+    safe = jnp.where(step > 0, step, 1.0)
+    codes = jnp.clip(jnp.round((xf - mn) / safe), 0, 2**bits - 1).astype(jnp.uint8)
+    NBLK, T, D = x.shape
+    words = bitpack.pack_nostraddle(codes.reshape(NBLK, T * D), bits)
+    return words, jnp.squeeze(mn, axes), jnp.squeeze(step, axes)
+
+
+def huffman_decode_ref(payload, nbits, children, is_symbol, symbols, n_per_stream, max_stream_bits):
+    """Oracle for the branchless-walk kernel: defer to the validated core impl."""
+    from repro.core import huffman
+
+    return huffman.decode_block_jax(
+        payload, nbits, children, is_symbol, symbols, n_per_stream, max_stream_bits
+    )
+
+
+def huffman_attn_scores_ref(
+    payload, nbits, children, is_symbol, symbols,
+    k_min, k_step, q, max_stream_bits,
+):
+    """Oracle for the fused Huffman-decode + dot-product kernel.
+
+    One stream per cached token (a [head_dim] K row).  Returns scores [S]:
+    score_s = dequant(decode(stream_s)) · q.
+    """
+    D = q.shape[-1]
+    codes = huffman_decode_ref(payload, nbits, children, is_symbol, symbols, D, max_stream_bits)
+    kd = k_min[None, :].astype(jnp.float32) + codes.astype(jnp.float32) * k_step[None, :].astype(jnp.float32)
+    return kd @ q.astype(jnp.float32)

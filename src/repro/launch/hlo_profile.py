@@ -1,0 +1,82 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+)
+
+"""HLO collective/dot profiler — the dry-run 'profiler' for §Perf.
+
+Parses a cell's loop-free analysis compile and prints the top collective ops
+(grouped by op kind × shape) and the top dots by FLOPs, so hillclimb
+hypotheses are grounded in the lowered IR rather than guesses.
+
+    python -m repro.launch.hlo_profile --arch qwen3_moe_30b_a3b --shape prefill_32k
+"""
+
+import argparse
+import collections
+import dataclasses
+import re
+
+from repro.launch import dryrun
+from repro.models import registry
+
+_DEF_RE = re.compile(r"^\s*%?([\w.\-]+) = ([a-z0-9]+)\[([0-9,]*)\][^ ]* ([a-z\-]+)\(")
+_DOT_DIMS = re.compile(r"dot\(|dot-general")
+
+
+def profile_cell(arch: str, shape_name: str, top: int = 12):
+    cfg = registry.get_config(arch)
+    mesh = dryrun.make_production_mesh(multi_pod=False)
+    c1, c2, d1, d2 = dryrun.analysis_depths(cfg)
+    if cfg.ssm_state:
+        c1 = dataclasses.replace(c1, ssm_chunk=2048)
+    kind = dryrun.SHAPES[shape_name]["kind"]
+    kw = dict(q_chunk=8192, kv_chunk=8192, unroll=True)
+    if kind == "train":
+        fn, (st, bs), (in_sh, out_sh) = dryrun.build_train_cell(
+            c1, shape_name, mesh, microbatches=1, **kw)
+        compiled, _ = dryrun.lower_compile(fn, (st, bs), in_sh, out_sh)
+    elif kind == "prefill":
+        fn, args, (in_sh, out_sh) = dryrun.build_cell(c1, shape_name, mesh, **kw)
+        compiled, _ = dryrun.lower_compile(fn, args, in_sh, out_sh)
+    else:
+        fn, args, (in_sh, out_sh) = dryrun.build_cell(c1, shape_name, mesh, unroll=True)
+        compiled, _ = dryrun.lower_compile(fn, args, in_sh, out_sh)
+
+    hlo = compiled.as_text()
+    coll = collections.Counter()
+    dots = collections.Counter()
+    for line in hlo.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, dt, dims, op = m.groups()
+        nbytes = dryrun._shape_bytes(dt, dims)
+        if op in dryrun.COLLECTIVES:
+            coll[(op, f"{dt}[{dims}]")] += nbytes
+        if op in ("dot", "dot-general") or "dot(" in line:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            dots[f"{dt}[{dims}]"] += n  # output elements ~ flops proxy
+    print(f"== {arch} {shape_name} (depth-{d1} analysis compile) ==")
+    print(f"-- top collectives by bytes (per device, one unit depth) --")
+    for (op, shp), b in coll.most_common(top):
+        print(f"  {b / 1e9:8.3f} GB  {op:20s} {shp[:80]}")
+    print(f"-- top dot outputs by elements --")
+    for shp, n in dots.most_common(top // 2):
+        print(f"  {n / 1e9:8.3f} Gelem  {shp[:80]}")
+    total = sum(coll.values())
+    print(f"total collective bytes: {total / 1e9:.2f} GB/device at depth {d1}")
+    return coll
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+    profile_cell(args.arch, args.shape, args.top)

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — required because the
+dry-run must set XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips (data, model).
+    Multi-pod: 2×16×16 = 512 chips (pod, data, model); the pod axis is the
+    DCN-connected outermost axis (pure DP + compressed grad all-reduce)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(max_devices: int | None = None):
+    """Elastic small mesh over whatever devices exist (tests, local runs)."""
+    n = len(jax.devices()) if max_devices is None else min(max_devices, len(jax.devices()))
+    # favor a model axis that divides n
+    for m in (8, 4, 2, 1):
+        if n % m == 0:
+            return jax.make_mesh(
+                (n // m, m), ("data", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    raise RuntimeError("no devices")

@@ -1,0 +1,83 @@
+"""Training launcher.
+
+CPU-runnable by default (reduced config, tiny mesh); the production path
+(--production) builds the full config against the 16×16 or 2×16×16 mesh —
+on this container that is only lowerable (see dryrun.py), on a real fleet it
+is the same code path.
+
+Examples:
+    python -m repro.launch.train --arch qwen3_1_7b --steps 50
+    python -m repro.launch.train --arch mamba2_1_3b --steps 30 --resume
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.data.pipeline import SyntheticCorpus, TextCorpus
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import registry
+from repro.optim import adamw
+from repro.train import step as step_lib
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_1_7b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (default on CPU)")
+    ap.add_argument("--production", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="cross-pod error-feedback int8 all-reduce")
+    ap.add_argument("--data", choices=["text", "synthetic"], default="text")
+    args = ap.parse_args()
+
+    if args.production:
+        cfg = registry.get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        cfg = registry.get_smoke_config(args.arch)
+        mesh = make_host_mesh()
+
+    if args.data == "text" and cfg.input_mode == "tokens":
+        cfg = dataclasses.replace(cfg, vocab_size=max(cfg.vocab_size, 256))
+        data = TextCorpus(seq_len=args.seq, global_batch=args.batch)
+        data.vocab_size = cfg.vocab_size
+    else:
+        data = SyntheticCorpus(seq_len=args.seq, global_batch=args.batch,
+                               vocab_size=cfg.vocab_size)
+
+    scfg = step_lib.TrainStepConfig(
+        remat=True,
+        microbatches=args.microbatches,
+        q_chunk=min(512, args.seq), kv_chunk=min(512, args.seq),
+        cross_pod_grad_compress=args.grad_compress,
+        opt=adamw.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                              total_steps=args.steps),
+    )
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, log_every=5)
+    trainer = Trainer(cfg, mesh, scfg, tcfg, data)
+    trainer.install_signal_handlers()
+    if args.resume:
+        resumed = trainer.maybe_resume()
+        print(f"resume: {'ok, from step ' + str(trainer.start_step) if resumed else 'no checkpoint'}")
+    summary = trainer.run()
+    print("summary:", summary)
+
+
+if __name__ == "__main__":
+    main()

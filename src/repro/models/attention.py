@@ -1,0 +1,229 @@
+"""Attention: GQA projections, chunked flash attention (train/prefill), and
+decode over the compressed KV cache (the paper's Fetch path).
+
+The train/prefill path is a memory-bounded two-level flash loop (scan over
+query chunks, inner scan over KV chunks with running max/denominator), which
+keeps peak activation memory at O(S·chunk) instead of O(S²) — required for
+the 32k-prefill shapes.  Causal and sliding-window masks are applied per
+chunk pair.
+
+Decode attends against a ``repro.core.cache.LayerKVCache`` (raw / KIVI /
+KVComp-packed) and appends the new token's KV — compression is on the hot
+path exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as kvcache
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+NEG = -1e9
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": layers.dense_init(ks[0], (d, H, Dh), dtype=dtype),
+        "wk": layers.dense_init(ks[1], (d, Hkv, Dh), dtype=dtype),
+        "wv": layers.dense_init(ks[2], (d, Hkv, Dh), dtype=dtype),
+        "wo": layers.dense_init(ks[3], (H, Dh, d), scale=(H * Dh) ** -0.5, dtype=dtype),
+    }
+    axes = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((Dh,), dtype)
+        params["k_norm"] = jnp.ones((Dh,), dtype)
+        axes["q_norm"] = ("head_dim",)
+        axes["k_norm"] = ("head_dim",)
+    return params, axes
+
+
+def qkv_project(params, cfg: ModelConfig, x: Array, positions: Array):
+    """x: [B, S, d] -> q [B,S,H,Dh], k/v [B,S,Hkv,Dh] (RoPE'd, qk-normed)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_project(params, attn_out: Array) -> Array:
+    return jnp.einsum("bshk,hkd->bsd", attn_out, params["wo"].astype(attn_out.dtype))
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (full-sequence: training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: Array, k: Array, v: Array,
+    *, causal: bool, window: int | None = None,
+    q_chunk: int = 512, kv_chunk: int = 512,
+    scale: float | None = None,
+    unroll: bool = False,
+) -> Array:
+    """q: [B, S, H, Dh]; k, v: [B, S, Hkv, Dh] (GQA broadcast inside).
+
+    Two-level scan keeps peak memory at O(B·H·q_chunk·kv_chunk).
+    """
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(Dh)
+    # Snap chunk sizes down to divisors of S (keeps the scan rectangular).
+    def _divisor(c):
+        c = min(c, S)
+        while S % c:
+            c -= 1
+        return c
+
+    q_chunk = _divisor(q_chunk)
+    kv_chunk = _divisor(kv_chunk)
+    nq, nk = S // q_chunk, S // kv_chunk
+
+    # [B, n, C, Hkv, G, Dh] query blocks; KV keep Hkv axis.
+    qb = q.reshape(B, nq, q_chunk, Hkv, G, Dh)
+    kb = k.reshape(B, nk, kv_chunk, Hkv, Dh)
+    vb = v.reshape(B, nk, kv_chunk, Hkv, Dh)
+    q_pos = jnp.arange(S).reshape(nq, q_chunk)
+    k_pos = jnp.arange(S).reshape(nk, kv_chunk)
+
+    def kv_step(qc, qp, carry, kc, vc, kp):
+        m, l, acc = carry
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        mask = jnp.ones((qp.shape[0], kp.shape[0]), bool)
+        if causal:
+            mask &= qp[:, None] >= kp[None, :]
+        if window is not None:
+            mask &= kp[None, :] > (qp[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        l = l * alpha + jnp.sum(p, axis=-1)
+        return m_new, l, acc
+
+    def q_block(qc, qp, j_lo, j_hi):
+        """Process one query chunk against kv chunks [j_lo, j_hi)."""
+        m = jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32)
+        l = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        acc = jnp.zeros((B, Hkv, G, q_chunk, Dh), jnp.float32)
+
+        def body(carry, ki):
+            kc, vc, kp = ki
+            return kv_step(qc, qp, carry, kc, vc, kp), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m, l, acc),
+            (kb[:, j_lo:j_hi].transpose(1, 0, 2, 3, 4),
+             vb[:, j_lo:j_hi].transpose(1, 0, 2, 3, 4),
+             k_pos[j_lo:j_hi]),
+            unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,Hkv,G,Cq,Dh]
+        return out.transpose(0, 3, 1, 2, 4)  # [B,Cq,Hkv,G,Dh]
+
+    if causal:
+        # TRIANGULAR schedule: query chunk i only visits kv chunks whose
+        # range intersects [max(0, (i+1)Cq - window), (i+1)Cq) — fully-masked
+        # chunk pairs are never materialized, halving causal attention FLOPs
+        # (and far more under a sliding window).  Static per-i slices keep
+        # everything shape-static (EXPERIMENTS.md #Perf H3, iteration 2).
+        outs = []
+        for i in range(nq):
+            hi_tok = (i + 1) * q_chunk
+            j_hi = -(-hi_tok // kv_chunk)  # ceil
+            j_lo = 0
+            if window is not None:
+                lo_tok = max(0, i * q_chunk - window + 1)
+                j_lo = lo_tok // kv_chunk
+            outs.append(q_block(qb[:, i], q_pos[i], j_lo, j_hi))
+        out = jnp.concatenate(outs, axis=1).reshape(B, S, H, Dh)
+        return out.astype(q.dtype)
+
+    def q_step(_, qi):
+        qc, qp = qi
+        return None, q_block(qc, qp, 0, nk)
+
+    _, outs = jax.lax.scan(q_step, None, (qb.transpose(1, 0, 2, 3, 4, 5), q_pos),
+                           unroll=unroll)
+    # outs: [nq, B, Cq, Hkv, G, Dh] -> [B, S, H, Dh]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, Dh)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full attention block (pre-norm attn + residual)
+# ---------------------------------------------------------------------------
+
+
+def init_attn_block(key, cfg: ModelConfig, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    attn_p, attn_a = init_attention(k1, cfg, dtype)
+    params = {"attn": attn_p, "ln_attn": jnp.ones((cfg.d_model,), dtype)}
+    axes = {"attn": attn_a, "ln_attn": ("embed",)}
+    return params, axes
+
+
+def attn_block_train(params, cfg: ModelConfig, x: Array, positions: Array,
+                     q_chunk: int = 512, kv_chunk: int = 512,
+                     unroll: bool = False) -> Array:
+    h = layers.rms_norm(x, params["ln_attn"], cfg.norm_eps)
+    q, k, v = qkv_project(params["attn"], cfg, h, positions)
+    o = flash_attention(
+        q, k, v, causal=cfg.causal and not cfg.encoder_only,
+        window=cfg.sliding_window, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        unroll=unroll)
+    return x + out_project(params["attn"], o)
+
+
+def attn_block_prefill(params, cfg: ModelConfig, x: Array, positions: Array,
+                       spec: kvcache.CacheSpec,
+                       q_chunk: int = 512, kv_chunk: int = 512,
+                       unroll: bool = False):
+    """Like train, but also builds this layer's compressed cache (Store)."""
+    h = layers.rms_norm(x, params["ln_attn"], cfg.norm_eps)
+    q, k, v = qkv_project(params["attn"], cfg, h, positions)
+    o = flash_attention(
+        q, k, v, causal=cfg.causal and not cfg.encoder_only,
+        window=cfg.sliding_window, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        unroll=unroll)
+    # KV layout for the cache: [B, Hkv, S, Dh]
+    cache = kvcache.prefill(spec, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    return x + out_project(params["attn"], o), cache
+
+
+def attn_block_decode(params, cfg: ModelConfig, x: Array, position: Array,
+                      cache: kvcache.LayerKVCache):
+    """One-token decode: append this token's KV (compress-on-overflow) and
+    attend over the compressed cache.  x: [B, 1, d]."""
+    h = layers.rms_norm(x, params["ln_attn"], cfg.norm_eps)
+    pos = position.reshape(1)  # scalar position broadcast as length-1 seq
+    q, k, v = qkv_project(params["attn"], cfg, h, pos[None, :])
+    cache = kvcache.append(cache, k[:, 0], v[:, 0])
+    # NB: append puts the token in the raw buffer, so attending *after*
+    # appending sees the current token too (self-attention includes self).
+    o = kvcache.attend(cache, q[:, 0])  # [B, H, Dh]
+    return x + out_project(params["attn"], o[:, None]), cache

@@ -1,0 +1,141 @@
+"""Shared neural building blocks (pure-function style, no framework).
+
+Parameters live in nested dicts of jnp arrays.  Every ``init_*`` returns
+``(params, axes)`` where ``axes`` mirrors the params tree with a tuple of
+*logical axis names* per array dimension — the distributed layer
+(``repro.distributed.sharding``) maps logical names to mesh axes per run
+mode (train=FSDP×TP, serve=TP), MaxText-style.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = fan_in**-0.5
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_norm_gated(x: Array, gate: Array, scale: Array, eps: float = 1e-5) -> Array:
+    """Mamba2's RMSNormGated: normalize(x * silu(gate)) * scale."""
+    xf = (x * jax.nn.silu(gate)).astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, Dh] (or [..., H, Dh] with scalar position).
+
+    positions broadcasts against the S axis.  Rotation pairs are
+    (x[..., :half], x[..., half:]) — the Llama convention.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = rope_frequencies(dh, theta)  # [half]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+    axes = {
+        "w_gate": ("embed", "mlp"),
+        "w_up": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"),
+    }
+    return params, axes
+
+
+def mlp(params, x: Array) -> Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, tie: bool, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    params = {"embed": embed_init(k1, (vocab, d_model), dtype)}
+    axes = {"embed": ("vocab", "embed")}
+    if not tie:
+        params["unembed"] = dense_init(k2, (d_model, vocab), dtype=dtype)
+        axes["unembed"] = ("embed", "vocab")
+    return params, axes
+
+
+def embed_tokens(params, ids: Array) -> Array:
+    return params["embed"][ids]
+
+
+def unembed(params, x: Array) -> Array:
+    from repro.distributed import sharding as shd
+
+    # Force the FSDP(d_model)-sharded table to be gathered (65 MB) rather
+    # than letting the partitioner contract over the sharded dim, which
+    # replicates full [B, S, V/shard] logits across the data axis
+    # (2x16.8 GB/device on yi-6b train_4k — EXPERIMENTS.md #Perf H3 it.1).
+    if "unembed" in params:
+        w = shd.constrain(params["unembed"], None, "model")
+        return x @ w
+    w = shd.constrain(params["embed"], "model", None)
+    return x @ w.T

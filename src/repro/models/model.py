@@ -1,0 +1,430 @@
+"""Model assembly: dense / MoE / SSM / hybrid / encoder-only, with
+scan-over-layers (stacked params keep the HLO small and compile times flat in
+depth) and three entry points per model:
+
+  * ``forward``      — full-sequence logits (training / evaluation)
+  * ``prefill``      — full-sequence forward that also builds each layer's
+                       compressed KV cache (paper Store stage) or SSM state
+  * ``decode_step``  — one-token step over the caches (paper Fetch stage)
+
+Params are nested dicts; ``init_params`` returns ``(params, axes)`` where
+``axes`` carries logical axis names for the distributed layer.  Stacked layer
+params get a leading "layers" logical axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as kvcache
+from repro.distributed import sharding as shd
+from repro.models import attention, layers, moe, ssm
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over n layers -> leading stacked axis."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(key)
+    axes = jax.tree.map(lambda a: ("layers", *a), axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return params, axes
+
+
+def _dense_block_init(cfg, dtype):
+    def f(k):
+        k1, k2 = jax.random.split(k)
+        ap, aa = attention.init_attn_block(k1, cfg, dtype)
+        mp, ma = layers.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+        return ({**ap, "mlp": mp, "ln_mlp": jnp.ones((cfg.d_model,), dtype)},
+                {**aa, "mlp": ma, "ln_mlp": ("embed",)})
+    return f
+
+
+def _moe_block_init(cfg, dtype):
+    def f(k):
+        return moe.init_moe_block(k, cfg, dtype)
+    return f
+
+
+def _mamba_block_init(cfg, dtype):
+    def f(k):
+        return ssm.init_mamba_block(k, cfg, dtype)
+    return f
+
+
+def _hybrid_counts(cfg: ModelConfig):
+    period = cfg.hybrid_period
+    n_attn = cfg.n_layers // period
+    n_periods = n_attn
+    tail = cfg.n_layers - n_periods * period
+    per_period_mamba = period - 1
+    return n_periods, per_period_mamba, tail
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    emb_p, emb_a = layers.init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                         cfg.tie_embeddings, dtype)
+    params["emb"], axes["emb"] = emb_p, emb_a
+    params["ln_f"] = jnp.ones((cfg.d_model,), dtype)
+    axes["ln_f"] = ("embed",)
+
+    if cfg.family == "dense":
+        params["blocks"], axes["blocks"] = _stack_init(
+            _dense_block_init(cfg, dtype), ks[1], cfg.n_layers)
+    elif cfg.family == "moe":
+        params["blocks"], axes["blocks"] = _stack_init(
+            _moe_block_init(cfg, dtype), ks[1], cfg.n_layers)
+    elif cfg.family == "ssm":
+        params["blocks"], axes["blocks"] = _stack_init(
+            _mamba_block_init(cfg, dtype), ks[1], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_periods, ppm, tail = _hybrid_counts(cfg)
+        mamba_p, mamba_a = _stack_init(
+            _mamba_block_init(cfg, dtype), ks[1], n_periods * ppm)
+        params["mamba"] = jax.tree.map(
+            lambda x: x.reshape(n_periods, ppm, *x.shape[1:]), mamba_p)
+        axes["mamba"] = jax.tree.map(lambda a: ("periods", *a), mamba_a,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        if tail:
+            params["mamba_tail"], axes["mamba_tail"] = _stack_init(
+                _mamba_block_init(cfg, dtype), ks[2], tail)
+        # ONE shared attention block (Zamba2's weight-shared attention).
+        sa_p, sa_a = _dense_block_init(cfg, dtype)(ks[3])
+        params["attn_shared"], axes["attn_shared"] = sa_p, sa_a
+    else:
+        raise ValueError(cfg.family)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# forward (training / evaluation)
+# ---------------------------------------------------------------------------
+
+
+def _embed_input(params, cfg: ModelConfig, batch) -> Array:
+    if cfg.input_mode == "tokens":
+        return layers.embed_tokens(params["emb"], batch["tokens"])
+    return batch["embeddings"]  # audio/vlm frontend stub: precomputed
+
+
+def _dense_body(cfg, q_chunk, kv_chunk, unroll=False):
+    def body(carry, block_p):
+        x, positions = carry
+        # pin [batch->data] activations: the partitioner otherwise drifts to
+        # replicated-batch layouts (and inconsistently across depths, which
+        # would also break the roofline extrapolation) — §Perf H3
+        x = shd.constrain(x, "__data__", None, None)
+        x = attention.attn_block_train(block_p, cfg, x, positions,
+                                       q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                       unroll=unroll)
+        h = layers.rms_norm(x, block_p["ln_mlp"], cfg.norm_eps)
+        x = x + layers.mlp(block_p["mlp"], h)
+        return (x, positions), None
+    return body
+
+
+def _moe_body(cfg, q_chunk, kv_chunk, unroll=False):
+    def body(carry, block_p):
+        x, positions, aux = carry
+        x = shd.constrain(x, "__data__", None, None)
+        x = attention.attn_block_train(block_p, cfg, x, positions,
+                                       q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                       unroll=unroll)
+        h = layers.rms_norm(x, block_p["ln_moe"], cfg.norm_eps)
+        y, a = moe.moe_apply(block_p["moe"], cfg, h)
+        return (x + y, positions, aux + a), None
+    return body
+
+
+def _attn_mlp_block(cfg, block_p, x, positions, q_chunk, kv_chunk, unroll=False):
+    x = attention.attn_block_train(block_p, cfg, x, positions,
+                                   q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                   unroll=unroll)
+    h = layers.rms_norm(x, block_p["ln_mlp"], cfg.norm_eps)
+    return x + layers.mlp(block_p["mlp"], h)
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = False,
+            q_chunk: int = 512, kv_chunk: int = 512, unroll: bool = False):
+    """Full-sequence forward. Returns (logits [B,S,V], aux dict)."""
+    x = _embed_input(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe"):
+        body = (_moe_body if cfg.family == "moe" else _dense_body)(
+            cfg, q_chunk, kv_chunk, unroll)
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        if cfg.family == "moe":
+            (x, _, aux), _ = jax.lax.scan(body, (x, positions, aux), params["blocks"],
+                                          unroll=unroll)
+        else:
+            (x, _), _ = jax.lax.scan(body, (x, positions), params["blocks"],
+                                     unroll=unroll)
+    elif cfg.family == "ssm":
+        def body(carry, block_p):
+            h = shd.constrain(carry, "__data__", None, None)
+            return ssm.mamba_block_train(block_p, cfg, h, unroll=unroll), None
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["blocks"], unroll=unroll)
+    elif cfg.family == "hybrid":
+        def period_body(carry, period_p):
+            x, positions = carry
+            x = shd.constrain(x, "__data__", None, None)
+
+            def mamba_body(h, bp):
+                return ssm.mamba_block_train(bp, cfg, h, unroll=unroll), None
+
+            x, _ = jax.lax.scan(mamba_body, x, period_p, unroll=unroll)
+            x = _attn_mlp_block(cfg, params["attn_shared"], x, positions,
+                                q_chunk, kv_chunk, unroll)
+            return (x, positions), None
+
+        if remat:
+            period_body = jax.checkpoint(period_body, prevent_cse=False)
+        (x, _), _ = jax.lax.scan(period_body, (x, positions), params["mamba"],
+                                 unroll=unroll)
+        if "mamba_tail" in params:
+            def tail_body(h, bp):
+                return ssm.mamba_block_train(bp, cfg, h, unroll=unroll), None
+            x, _ = jax.lax.scan(tail_body, x, params["mamba_tail"], unroll=unroll)
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = layers.unembed(params["emb"], x)
+    # Keep logits [batch->data, seq, vocab->model]: without this the SPMD
+    # partitioner may contract over the FSDP-sharded d_model dim and
+    # replicate full logits across the data axis (2x16.8 GB/device of
+    # all-gather+all-reduce on yi-6b train — EXPERIMENTS.md #Perf H3 it.1).
+    logits = shd.constrain(logits, "__data__", None, "model")
+    return logits, {"aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, max_seq: int) -> kvcache.CacheSpec:
+    return kvcache.CacheSpec(
+        layout=cfg.cache_layout,
+        block_size=cfg.cache_block,
+        rel_scale_k=cfg.rel_scale_k,
+        rel_scale_v=cfg.rel_scale_v,
+        kivi_bits=cfg.kivi_bits,
+        max_seq=max_seq,
+        window=cfg.sliding_window,
+    )
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Fresh (empty) decode state for all layers."""
+    spec = cache_spec(cfg, max_seq)
+
+    def stacked_cache(n):
+        one = kvcache.init_layer_cache(
+            spec, batch, cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n, *x.shape)), one)
+
+    if cfg.family in ("dense", "moe"):
+        return {"kv": stacked_cache(cfg.n_layers)}
+    if cfg.family == "ssm":
+        one = ssm.init_mamba_state(cfg, batch)
+        return {"ssm": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers, *x.shape)), one)}
+    if cfg.family == "hybrid":
+        n_periods, ppm, tail = _hybrid_counts(cfg)
+        one = ssm.init_mamba_state(cfg, batch)
+        state = {
+            "kv": stacked_cache(n_periods),
+            "ssm": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_periods, ppm, *x.shape)), one),
+        }
+        if tail:
+            state["ssm_tail"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (tail, *x.shape)), one)
+        return state
+    raise ValueError(cfg.family)
+
+
+def prefill(params, cfg: ModelConfig, batch, max_seq: int,
+            q_chunk: int = 512, kv_chunk: int = 512, unroll: bool = False):
+    """Process a prompt; returns (logits [B,S,V], decode_state)."""
+    x = _embed_input(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    spec = cache_spec(cfg, max_seq)
+
+    if cfg.family in ("dense", "moe"):
+        def body(carry, block_p):
+            x, positions = carry
+            x, cache = attention.attn_block_prefill(
+                block_p, cfg, x, positions, spec, q_chunk, kv_chunk, unroll)
+            if cfg.family == "moe":
+                h = layers.rms_norm(x, block_p["ln_moe"], cfg.norm_eps)
+                y, _ = moe.moe_apply(block_p["moe"], cfg, h)
+                x = x + y
+            else:
+                h = layers.rms_norm(x, block_p["ln_mlp"], cfg.norm_eps)
+                x = x + layers.mlp(block_p["mlp"], h)
+            return (x, positions), cache
+
+        (x, _), caches = jax.lax.scan(body, (x, positions), params["blocks"],
+                                      unroll=unroll)
+        state = {"kv": caches}
+    elif cfg.family == "ssm":
+        def body(carry, block_p):
+            out, st = ssm.mamba_block_prefill(block_p, cfg, carry, unroll=unroll)
+            return out, st
+        x, states = jax.lax.scan(body, x, params["blocks"], unroll=unroll)
+        state = {"ssm": states}
+    elif cfg.family == "hybrid":
+        def period_body(carry, period_p):
+            x, positions = carry
+
+            def mamba_body(h, bp):
+                out, st = ssm.mamba_block_prefill(bp, cfg, h, unroll=unroll)
+                return out, st
+
+            x, sstates = jax.lax.scan(mamba_body, x, period_p, unroll=unroll)
+            x, cache = attention.attn_block_prefill(
+                params["attn_shared"], cfg, x, positions, spec, q_chunk, kv_chunk,
+                unroll)
+            h = layers.rms_norm(x, params["attn_shared"]["ln_mlp"], cfg.norm_eps)
+            x = x + layers.mlp(params["attn_shared"]["mlp"], h)
+            return (x, positions), (sstates, cache)
+
+        (x, _), (sstates, caches) = jax.lax.scan(period_body, (x, positions),
+                                                 params["mamba"], unroll=unroll)
+        state = {"kv": caches, "ssm": sstates}
+        if "mamba_tail" in params:
+            def tail_body(h, bp):
+                out, st = ssm.mamba_block_prefill(bp, cfg, h, unroll=unroll)
+                return out, st
+            x, tstates = jax.lax.scan(tail_body, x, params["mamba_tail"], unroll=unroll)
+            state["ssm_tail"] = tstates
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = layers.unembed(params["emb"], x)
+    return logits, state
+
+
+def decode_step(params, cfg: ModelConfig, tokens, position, state,
+                unroll: bool = False):
+    """One decode step.  tokens: [B] ids (or [B, d] embeddings);
+    position: scalar i32 (current sequence length).  Returns (logits [B,V],
+    new state)."""
+    if cfg.input_mode == "tokens":
+        x = layers.embed_tokens(params["emb"], tokens[:, None])
+    else:
+        x = tokens[:, None, :]
+
+    if cfg.family in ("dense", "moe"):
+        def body(carry, xs):
+            x = carry
+            block_p, cache = xs
+            x, cache = attention.attn_block_decode(block_p, cfg, x, position, cache)
+            if cfg.family == "moe":
+                h = layers.rms_norm(x, block_p["ln_moe"], cfg.norm_eps)
+                y, _ = moe.moe_apply(block_p["moe"], cfg, h)
+                x = x + y
+            else:
+                h = layers.rms_norm(x, block_p["ln_mlp"], cfg.norm_eps)
+                x = x + layers.mlp(block_p["mlp"], h)
+            return x, cache
+
+        x, caches = jax.lax.scan(body, x, (params["blocks"], state["kv"]),
+                                 unroll=unroll)
+        new_state = {"kv": caches}
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            block_p, st = xs
+            out, st = ssm.mamba_block_decode(block_p, cfg, carry, st)
+            return out, st
+        x, states = jax.lax.scan(body, x, (params["blocks"], state["ssm"]),
+                                 unroll=unroll)
+        new_state = {"ssm": states}
+    elif cfg.family == "hybrid":
+        def period_body(carry, xs):
+            x = carry
+            period_p, sstates, cache = xs
+
+            def mamba_body(h, inner):
+                bp, st = inner
+                out, st = ssm.mamba_block_decode(bp, cfg, h, st)
+                return out, st
+
+            x, sstates = jax.lax.scan(mamba_body, x, (period_p, sstates),
+                                      unroll=unroll)
+            x, cache = attention.attn_block_decode(
+                params["attn_shared"], cfg, x, position, cache)
+            h = layers.rms_norm(x, params["attn_shared"]["ln_mlp"], cfg.norm_eps)
+            x = x + layers.mlp(params["attn_shared"]["mlp"], h)
+            return x, (sstates, cache)
+
+        x, (sstates, caches) = jax.lax.scan(
+            period_body, x, (params["mamba"], state["ssm"], state["kv"]),
+            unroll=unroll)
+        new_state = {"kv": caches, "ssm": sstates}
+        if "mamba_tail" in params:
+            def tail_body(h, xs):
+                bp, st = xs
+                out, st = ssm.mamba_block_decode(bp, cfg, h, st)
+                return out, st
+            x, tstates = jax.lax.scan(tail_body, x,
+                                      (params["mamba_tail"], state["ssm_tail"]),
+                                      unroll=unroll)
+            new_state["ssm_tail"] = tstates
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = layers.unembed(params["emb"], x[:, 0])
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, remat: bool = False,
+            q_chunk: int = 512, kv_chunk: int = 512, unroll: bool = False):
+    """Next-token cross entropy (tokens mode) or frame CE (encoder mode)."""
+    logits, aux = forward(params, cfg, batch, remat=remat,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk, unroll=unroll)
+    labels = batch["labels"]
+    lf = shd.constrain(logits.astype(jnp.float32), "__data__", None, "model")
+    # One-hot contraction instead of take_along_axis: with vocab sharded on
+    # the model axis, a gather forces the SPMD partitioner to all-reduce the
+    # FULL [B, S, V/shard] logits (16.8 GB/device on yi-6b train_4k); the
+    # one-hot sum reduces over the sharded vocab dim -> a [B, S] psum
+    # (EXPERIMENTS.md #Perf H3, iteration 1).
+    onehot = jax.nn.one_hot(labels, cfg.vocab_size, dtype=jnp.float32)
+    logit_at_label = jnp.sum(lf * onehot, axis=-1)
+    ll = logit_at_label - jax.nn.logsumexp(lf, axis=-1)
+    mask = batch.get("mask", jnp.ones_like(ll))
+    loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux["aux_loss"], {"ce": loss, **aux}

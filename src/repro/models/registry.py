@@ -1,0 +1,48 @@
+"""Architecture registry: maps ``--arch <id>`` to its ModelConfig (+ the
+reduced smoke variant) by importing ``repro.configs.<id>`` modules."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, reduced
+
+ARCHS = [
+    "mixtral_8x22b",
+    "qwen3_moe_30b_a3b",
+    "yi_6b",
+    "qwen3_1_7b",
+    "command_r_35b",
+    "stablelm_12b",
+    "chameleon_34b",
+    "hubert_xlarge",
+    "mamba2_1_3b",
+    "zamba2_7b",
+    # paper's own evaluation models (reduced-scale fidelity configs)
+    "llama2_7b",
+    "llama2_13b",
+    "ministral_8b",
+]
+
+ASSIGNED = ARCHS[:10]
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def canonical(name: str) -> str:
+    name = name.replace("-", "_").replace(".", "_")
+    if name in ARCHS:
+        return name
+    if name in _ALIAS:
+        return _ALIAS[name]
+    raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return getattr(mod, "SMOKE", None) or reduced(mod.CONFIG)

@@ -1,0 +1,260 @@
+"""Mamba2 (state-space duality) mixer — chunked SSD for training/prefill and
+constant-state recurrence for decode.
+
+The SSD chunked algorithm is expressed as batched matmuls (MXU-shaped):
+intra-chunk attention-like term + inter-chunk state recurrence (lax.scan).
+Decode keeps a fixed [B, H, N, P] state and a small causal-conv window —
+no KV cache at all, which is why mamba2 is listed "inapplicable" for the
+paper's technique in DESIGN.md §4 and runs long_500k natively.
+
+Shapes: d_inner = expand·d_model, P = ssm_head_dim, H = d_inner/P heads,
+N = ssm_state, G = ssm_groups (B/C shared per group).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    P = cfg.ssm_head_dim
+    H = di // P
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    conv_ch = di + 2 * G * N
+    return di, P, H, N, G, conv_ch
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di, P, H, N, G, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    params = {
+        "ln": jnp.ones((d,), dtype),
+        "in_proj": layers.dense_init(ks[0], (d, 2 * di + 2 * G * N + H), dtype=dtype),
+        "conv_w": layers.dense_init(ks[1], (cfg.ssm_conv, conv_ch), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "D": jnp.ones((H,), dtype),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": layers.dense_init(ks[2], (di, d), dtype=dtype),
+    }
+    axes = {
+        "ln": ("embed",),
+        "in_proj": ("embed", "ssm_proj"),
+        "conv_w": ("conv_k", "ssm_conv_ch"),
+        "conv_b": ("ssm_conv_ch",),
+        "A_log": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+    return params, axes
+
+
+def _split_proj(cfg: ModelConfig, proj: Array):
+    di, P, H, N, G, _ = _dims(cfg)
+    z, xBC, dt = jnp.split(proj, [di, 2 * di + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along S. xBC: [B, S, C]; w: [K, C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def ssd_scan(x: Array, a: Array, dt: Array, B: Array, C: Array, chunk: int,
+             h0: Array | None = None, unroll: bool = False):
+    """Core SSD: h_s = exp(a_s)·h_{s-1} + dt_s·B_s⊗x_s ;  y_s = C_s·h_s.
+
+    x : [b, S, H, P]      a : [b, S, H] (log decay = dt·A, negative)
+    dt: [b, S, H]         B, C : [b, S, G, N]
+    h0: optional [b, H, N, P] initial state.
+    Returns (y [b, S, H, P], h_final [b, H, N, P]).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    NC = S // Q
+    hpg = H // G
+
+    xc = x.reshape(b, NC, Q, H, P)
+    ac = a.reshape(b, NC, Q, H).astype(jnp.float32)
+    dtc = dt.reshape(b, NC, Q, H).astype(jnp.float32)
+    Bc = B.reshape(b, NC, Q, G, N).astype(jnp.float32)
+    Cc = C.reshape(b, NC, Q, G, N).astype(jnp.float32)
+
+    cum = jnp.cumsum(ac, axis=2)  # [b,NC,Q,H]
+    # --- intra-chunk (diagonal blocks) ---
+    # Gmat[b,c,g,i,j] = C_i · B_j ; broadcast group -> heads later.
+    Gmat = jnp.einsum("bcign,bcjgn->bcgij", Cc, Bc)
+    # L[b,c,h,i,j] = exp(cum_i - cum_j) for i >= j else 0.
+    # The mask must be applied INSIDE the exp: for masked (i < j) entries the
+    # exponent is positive and can overflow to inf, and grad-of-where would
+    # then produce inf*0 = NaN in the backward pass.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,c,i,j,h]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -1e30))
+    # weights W[b,c,i,j,h] = G[...(g(h))...] * L * dt_j
+    Gh = jnp.repeat(Gmat, hpg, axis=2)  # [b,c,H,i,j]
+    W = Gh.transpose(0, 1, 3, 4, 2) * L * dtc[:, :, None, :, :]  # [b,c,i,j,h]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", W, xc.astype(jnp.float32))
+
+    # --- per-chunk states: S_c = Σ_j exp(cum_Q - cum_j)·dt_j·B_j⊗x_j ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [b,c,Q,h]
+    Bh = jnp.repeat(Bc, hpg, axis=3).reshape(b, NC, Q, H, N)
+    S_c = jnp.einsum("bcjhn,bcjhp->bchnp", Bh,
+                     xc.astype(jnp.float32) * (dtc * decay_to_end)[..., None])
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [b,NC,H]
+
+    # --- inter-chunk recurrence ---
+    def step(h, inputs):
+        dec, s_c = inputs  # [b,H], [b,H,N,P]
+        h_new = h * dec[:, :, None, None] + s_c
+        return h_new, h  # emit PREVIOUS state (used by chunk c)
+
+    h_init = jnp.zeros((b, H, N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        step, h_init, (chunk_decay.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)),
+        unroll=unroll)
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # [b,NC,H,N,P]
+
+    # --- inter-chunk contribution ---
+    Ch = jnp.repeat(Cc, hpg, axis=3).reshape(b, NC, Q, H, N)
+    y_off = jnp.einsum("bcihn,bchnp->bcihp", Ch * jnp.exp(cum)[..., None], h_prev)
+
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_reference(x, a, dt, B, C, h0=None):
+    """O(S) sequential oracle for ssd_scan (tests)."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    hpg = H // G
+    Bh = jnp.repeat(B, hpg, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, hpg, axis=2).astype(jnp.float32)
+
+    def step(h, inp):
+        xs, as_, dts, Bs, Cs = inp  # [b,H,P],[b,H],[b,H],[b,H,N],[b,H,N]
+        h = h * jnp.exp(as_)[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", Bs, xs.astype(jnp.float32) * dts[..., None])
+        y = jnp.einsum("bhn,bhnp->bhp", Cs, h)
+        return h, y
+
+    h_init = jnp.zeros((b, H, N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h, ys = jax.lax.scan(
+        step, h_init,
+        (x.transpose(1, 0, 2, 3), a.astype(jnp.float32).transpose(1, 0, 2),
+         dt.astype(jnp.float32).transpose(1, 0, 2),
+         Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# full mixer (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def mamba_block_train(params, cfg: ModelConfig, u: Array, unroll: bool = False):
+    """u: [B, S, d] -> [B, S, d] (residual included)."""
+    di, P, H, N, G, conv_ch = _dims(cfg)
+    x_in = layers.rms_norm(u, params["ln"], cfg.norm_eps)
+    proj = x_in @ params["in_proj"].astype(x_in.dtype)
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"].astype(xBC.dtype),
+                                   params["conv_b"].astype(xBC.dtype)))
+    xs, Bs, Cs = jnp.split(xBC, [di, di + G * N], axis=-1)
+    b, S = u.shape[0], u.shape[1]
+    xh = xs.reshape(b, S, H, P)
+    Bh = Bs.reshape(b, S, G, N)
+    Ch = Cs.reshape(b, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # [H]
+    a = dt * A[None, None, :]
+    y, _ = ssd_scan(xh, a, dt, Bh, Ch, cfg.ssm_chunk, unroll=unroll)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, S, di).astype(u.dtype)
+    y = layers.rms_norm_gated(y, z, params["norm"], cfg.norm_eps)
+    return u + (y @ params["out_proj"].astype(u.dtype))
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, P, H, N, G, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_block_prefill(params, cfg: ModelConfig, u: Array, unroll: bool = False):
+    """Forward over the prompt, returning the decode state."""
+    di, P, H, N, G, conv_ch = _dims(cfg)
+    x_in = layers.rms_norm(u, params["ln"], cfg.norm_eps)
+    proj = x_in @ params["in_proj"].astype(x_in.dtype)
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC_conv = jax.nn.silu(_causal_conv(xBC, params["conv_w"].astype(xBC.dtype),
+                                        params["conv_b"].astype(xBC.dtype)))
+    xs, Bs, Cs = jnp.split(xBC_conv, [di, di + G * N], axis=-1)
+    b, S = u.shape[0], u.shape[1]
+    xh = xs.reshape(b, S, H, P)
+    Bh = Bs.reshape(b, S, G, N)
+    Ch = Cs.reshape(b, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = dt * A[None, None, :]
+    y, h_final = ssd_scan(xh, a, dt, Bh, Ch, cfg.ssm_chunk, unroll=unroll)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, S, di).astype(u.dtype)
+    y = layers.rms_norm_gated(y, z, params["norm"], cfg.norm_eps)
+    out = u + (y @ params["out_proj"].astype(u.dtype))
+    K = cfg.ssm_conv
+    state = {
+        "conv": xBC[:, max(0, S - (K - 1)) :, :] if S >= K - 1 else jnp.pad(
+            xBC, ((0, 0), (K - 1 - S, 0), (0, 0))),
+        "ssm": h_final,
+    }
+    return out, state
+
+
+def mamba_block_decode(params, cfg: ModelConfig, u: Array, state: dict):
+    """One-token decode. u: [B, 1, d]; state from init/prefill."""
+    di, P, H, N, G, conv_ch = _dims(cfg)
+    x_in = layers.rms_norm(u, params["ln"], cfg.norm_eps)
+    proj = x_in @ params["in_proj"].astype(x_in.dtype)  # [B,1,*]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    # conv over stored window + this token
+    window = jnp.concatenate([state["conv"].astype(xBC.dtype), xBC], axis=1)  # [B,K,C]
+    w = params["conv_w"].astype(xBC.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(xBC.dtype)
+    xBC_t = jax.nn.silu(conv_out)[:, None, :]
+    xs, Bs, Cs = jnp.split(xBC_t, [di, di + G * N], axis=-1)
+    b = u.shape[0]
+    xh = xs.reshape(b, H, P)
+    Bh = jnp.repeat(Bs.reshape(b, G, N), H // G, axis=1)
+    Ch = jnp.repeat(Cs.reshape(b, G, N), H // G, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    h = state["ssm"] * jnp.exp(dt * A[None])[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh.astype(jnp.float32), xh.astype(jnp.float32) * dt[..., None])
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), h)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(u.dtype)
+    y = layers.rms_norm_gated(y, z, params["norm"], cfg.norm_eps)
+    out = u + (y @ params["out_proj"].astype(u.dtype))
+    new_state = {"conv": window[:, 1:, :], "ssm": h}
+    return out, new_state

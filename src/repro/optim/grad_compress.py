@@ -1,0 +1,62 @@
+"""Error-feedback gradient compression for the cross-pod all-reduce.
+
+The paper's theme — error-bounded quantization + entropy-aware transport —
+applied to *training* communication: gradients crossing the slow inter-pod
+links are quantized to int8 with per-tensor scale and a persistent error-
+feedback accumulator (the quantization residual is re-added next step, which
+preserves convergence: Karimireddy et al., "Error Feedback Fixes SignSGD").
+
+Usage (inside a shard_map over the "pod" axis, other axes auto):
+
+    g_c, err = compress_decompress(g, err)         # local, error-feedback
+    g = jax.lax.pmean(g_c, "pod")                   # 8x fewer DCN bytes*
+
+(*the int8 payload is what a real DCN transport would move; under XLA's
+host-platform simulation the collective still moves the dequantized f32 —
+byte accounting for the roofline uses the int8 payload size.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(g: jax.Array, err: jax.Array):
+    """One error-feedback round: quantize (g + err), return the dequantized
+    tensor to feed the collective and the new residual."""
+    target = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(target)
+    deq = dequantize_int8(q, scale)
+    new_err = target - deq
+    return deq.astype(g.dtype), new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def tree_compress_decompress(grads, err_state):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    outs = [compress_decompress(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def payload_bytes(params) -> int:
+    """Bytes a compressed gradient all-reduce would move (int8 + scale)."""
+    return sum(int(x.size) + 4 for x in jax.tree.leaves(params))

@@ -1,0 +1,169 @@
+"""Trainer: the fault-tolerant training loop.
+
+Production behaviors implemented (and unit-tested):
+
+* checkpoint/restart — periodic async checkpoints; on start, automatic
+  resume from the latest committed step (elastic: restored arrays are
+  device_put against the *current* mesh's shardings);
+* preemption handling — SIGTERM/SIGINT set a flag; the loop finishes the
+  current step, writes a final checkpoint, and exits cleanly;
+* straggler monitor — per-step wall time EWMA; steps slower than
+  ``straggler_factor ×`` the EWMA are recorded (on real fleets this feeds
+  the scheduler that re-slices stragglers; here it is surfaced in metrics);
+* deterministic data resume — the pipeline is a pure function of step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.distributed import sharding as shd
+from repro.models.config import ModelConfig
+from repro.optim import adamw, grad_compress
+from repro.train import step as step_lib
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 2.0
+    ewma_alpha: float = 0.1
+
+
+class StragglerMonitor:
+    """Wall-time EWMA; flags slow steps.  ``clock`` is injectable for tests."""
+
+    def __init__(self, factor: float, alpha: float, clock=time.monotonic):
+        self.factor = factor
+        self.alpha = alpha
+        self.clock = clock
+        self.ewma: float | None = None
+        self.events: list[tuple[int, float, float]] = []
+        self._t0: float | None = None
+
+    def start(self):
+        self._t0 = self.clock()
+
+    def stop(self, step: int) -> bool:
+        dt = self.clock() - self._t0
+        slow = self.ewma is not None and dt > self.factor * self.ewma
+        if slow:
+            self.events.append((step, dt, self.ewma))
+        self.ewma = dt if self.ewma is None else (
+            self.alpha * dt + (1 - self.alpha) * self.ewma)
+        return slow
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, mesh, scfg: step_lib.TrainStepConfig,
+                 tcfg: TrainerConfig, data, init_key=None):
+        self.cfg, self.mesh, self.scfg, self.tcfg, self.data = cfg, mesh, scfg, tcfg, data
+        batch0 = data.batch_at(0)
+        bspecs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch0.items()}
+        step_fn, state_shapes, in_sh, out_sh = step_lib.build_train_artifacts(
+            cfg, mesh, scfg, bspecs)
+        self.in_sh = in_sh
+        self.step_fn = jax.jit(step_fn, in_shardings=in_sh,
+                               out_shardings=out_sh, donate_argnums=0)
+        self.pshard, self.oshard, self.eshard = in_sh[0]
+        self.bshard = in_sh[1]
+        self.state = None
+        self.start_step = 0
+        self._preempted = False
+        self.ckpt = store.AsyncCheckpointer(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+        self.monitor = StragglerMonitor(tcfg.straggler_factor, tcfg.ewma_alpha)
+        self.metrics_log: list[dict] = []
+        self._init_key = init_key if init_key is not None else jax.random.PRNGKey(0)
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self):
+        from repro.models import layers as L
+        from repro.models import model as M
+
+        dtype = L.dtype_of(self.cfg.dtype)
+
+        def init_all(k):
+            params, _ = M.init_params(self.cfg, k, dtype)
+            return params
+
+        with self.mesh:
+            params = jax.jit(init_all, out_shardings=self.pshard)(self._init_key)
+            opt = jax.jit(adamw.init, out_shardings=self.oshard)(params)
+            err = None
+            if self.eshard is not None:
+                err = jax.jit(grad_compress.init_error_state,
+                              out_shardings=self.eshard)(params)
+        self.state = (params, opt, err)
+
+    def maybe_resume(self) -> bool:
+        last = store.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return False
+        tmpl = (jax.eval_shape(lambda: self.state) if self.state is not None
+                else None)
+        if self.state is None:
+            self.init_state()
+        shardings = (self.pshard, self.oshard, self.eshard)
+        # drop the None error slot from the tree when not in use
+        tree_like = jax.tree.map(lambda x: x, self.state)
+        restored, manifest = store.restore(
+            self.tcfg.ckpt_dir, tree_like, step=last, shardings=shardings)
+        self.state = restored
+        self.start_step = int(manifest["step"])
+        return True
+
+    # -- preemption ----------------------------------------------------------
+    def install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    def request_preempt(self):
+        self._preempted = True
+
+    # -- loop ----------------------------------------------------------------
+    def run(self) -> dict:
+        if self.state is None and not self.maybe_resume():
+            self.init_state()
+        t_start = time.monotonic()
+        step = self.start_step
+        with self.mesh:
+            while step < self.tcfg.total_steps and not self._preempted:
+                batch_np = self.data.batch_at(step)
+                batch = {k: jax.device_put(v, self.bshard[k])
+                         for k, v in batch_np.items()}
+                self.monitor.start()
+                self.state, metrics = self.step_fn(self.state, batch)
+                metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                slow = self.monitor.stop(step)
+                metrics.update(step=step, straggler=slow)
+                self.metrics_log.append(metrics)
+                if self.tcfg.log_every and step % self.tcfg.log_every == 0:
+                    print(f"step {step:6d} loss={metrics['loss']:.4f} "
+                          f"lr={metrics['lr']:.2e} gnorm={metrics['grad_norm']:.3f}",
+                          flush=True)
+                step += 1
+                if self.tcfg.ckpt_every and step % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save(step, self.state, {"wall_s": time.monotonic() - t_start})
+        # final checkpoint (preemption or completion)
+        self.ckpt.save(step, self.state, {"final": True})
+        self.ckpt.wait()
+        return {
+            "final_step": step,
+            "preempted": self._preempted,
+            "straggler_events": list(self.monitor.events),
+            "last_loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+        }

@@ -1,0 +1,71 @@
+"""Bit-packing roundtrips: straddle, no-straddle, adaptive (DESIGN.md §2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitpack
+
+
+@pytest.mark.parametrize("bits", range(1, 9))
+def test_straddle_roundtrip(bits, rng):
+    c = rng.integers(0, 1 << bits, size=(5, 77)).astype(np.uint8)
+    w = bitpack.pack_bits(jnp.asarray(c), bits)
+    assert (np.asarray(w) == bitpack.pack_bits_np(c, bits)).all()
+    assert (np.asarray(bitpack.unpack_bits(w, bits, 77)) == c).all()
+
+
+@pytest.mark.parametrize("bits", range(1, 17))
+def test_nostraddle_roundtrip(bits, rng):
+    hi = 1 << min(bits, 8)
+    c = rng.integers(0, hi, size=(3, 130)).astype(np.uint8)
+    w = bitpack.pack_nostraddle(jnp.asarray(c), bits)
+    u = bitpack.unpack_nostraddle(w, bits, 130)
+    assert (np.asarray(u) == c).all()
+    # no-straddle wastes at most (32 mod bits) bits per word
+    assert w.shape[-1] == bitpack.nostraddle_words(130, bits)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(1, 8),
+       n=st.integers(1, 200))
+def test_nostraddle_property(seed, bits, n):
+    rng = np.random.default_rng(seed)
+    c = rng.integers(0, 1 << bits, size=(2, n)).astype(np.uint8)
+    w = bitpack.pack_nostraddle(jnp.asarray(c), bits)
+    assert (np.asarray(bitpack.unpack_nostraddle(w, bits, n)) == c).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), maxval=st.integers(1, 255))
+def test_adaptive_roundtrip(seed, maxval):
+    rng = np.random.default_rng(seed)
+    c = rng.integers(0, maxval + 1, size=(8, 64)).astype(np.uint8)
+    ap = bitpack.pack_adaptive(jnp.asarray(c), capacity_words=8 * 64)
+    u = bitpack.unpack_adaptive(ap)
+    assert (np.asarray(u) == c).all()
+
+
+def test_adaptive_bits_follow_range(rng):
+    c = np.zeros((4, 64), np.uint8)
+    c[1] = rng.integers(0, 2, (64,))
+    c[2] = rng.integers(0, 14, (64,))
+    c[3] = rng.integers(0, 200, (64,))
+    c[3, 0] = 199
+    ap = bitpack.pack_adaptive(jnp.asarray(c), capacity_words=1024)
+    bits = np.asarray(ap.bits)
+    assert bits[0] == 1 and bits[1] == 1
+    assert bits[2] == int(np.ceil(np.log2(c[2].max() + 1)))
+    assert bits[3] == 8
+    # deterministic offsets = exclusive cumsum of word counts
+    assert (np.asarray(ap.offsets) == np.concatenate(
+        [[0], np.cumsum(np.asarray(ap.nwords))[:-1]])).all()
+
+
+def test_packed_words_vs_nostraddle():
+    # straddle is denser, no-straddle is gather-free; both bounded
+    for bits in range(1, 9):
+        dense = bitpack.packed_words(1000, bits)
+        loose = bitpack.nostraddle_words(1000, bits)
+        assert dense <= loose <= dense + (1000 // (32 // bits)) + 1

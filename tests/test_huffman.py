@@ -1,0 +1,104 @@
+"""Canonical Huffman: codebook invariants + exact roundtrips (paper §3.1.2,
+§3.3.1) across numpy-oracle and vectorized-JAX implementations."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import huffman
+
+
+def _random_codes(rng, skew, shape):
+    vals = np.clip(np.round(rng.normal(8, skew, size=shape)), 0, 255)
+    return vals.astype(np.uint8)
+
+
+def test_codebook_prefix_free(rng):
+    codes = _random_codes(rng, 3, (4096,))
+    book = huffman.build_codebook(np.bincount(codes, minlength=256))
+    cws = [(int(book.codes_msb[s]), int(book.lengths[s]))
+           for s in range(256) if book.lengths[s] > 0]
+    for i, (c1, l1) in enumerate(cws):
+        for c2, l2 in cws[i + 1:]:
+            la = min(l1, l2)
+            assert (c1 >> (l1 - la)) != (c2 >> (l2 - la)), "prefix violation"
+
+
+def test_codebook_length_limit():
+    # extreme skew would produce >16-bit codes without limiting
+    hist = np.zeros(256, np.int64)
+    hist[:40] = np.logspace(0, 12, 40).astype(np.int64)
+    book = huffman.build_codebook(hist)
+    assert book.lengths.max() <= huffman.MAX_CODE_LEN
+
+
+def test_degenerate_single_symbol():
+    hist = np.zeros(256, np.int64)
+    hist[7] = 100
+    book = huffman.build_codebook(hist)
+    assert book.lengths[7] == 1
+    codes = np.full((3, 8), 7, np.uint8)
+    words, nbits = huffman.encode_block(codes, book)
+    dec = huffman.decode_block(words, nbits, book, 8)
+    assert (dec == codes).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), skew=st.floats(0.5, 20.0),
+       S=st.integers(1, 8), L=st.integers(1, 24))
+def test_roundtrip_numpy_oracle(seed, skew, S, L):
+    rng = np.random.default_rng(seed)
+    codes = _random_codes(rng, skew, (S, L))
+    book = huffman.build_codebook(np.bincount(codes.reshape(-1), minlength=256))
+    words, nbits = huffman.encode_block(codes, book)
+    dec = huffman.decode_block(words, nbits, book, L)
+    assert (dec == codes).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), skew=st.floats(1.0, 10.0))
+def test_jax_encode_matches_oracle(seed, skew):
+    rng = np.random.default_rng(seed)
+    codes = _random_codes(rng, skew, (4, 16))
+    book = huffman.build_codebook(np.bincount(codes.reshape(-1), minlength=256))
+    w_np, nb_np = huffman.encode_block(codes, book)
+    cl, ln = book.as_encode_tables()
+    cap = codes.size * 16 // 32 + 2
+    w_j, nb_j, _ = huffman.encode_block_jax(jnp.asarray(codes), cl, ln, cap)
+    assert (np.asarray(nb_j) == nb_np).all()
+    assert (np.asarray(w_j)[: len(w_np)] == w_np).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_jax_decode_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    codes = _random_codes(rng, 4, (6, 12))
+    book = huffman.build_codebook(np.bincount(codes.reshape(-1), minlength=256))
+    w, nb = huffman.encode_block(codes, book)
+    ch, isym, sym = book.as_device_tables()
+    dec = huffman.decode_block_jax(
+        jnp.asarray(np.concatenate([w, np.zeros(2, np.uint32)])),
+        jnp.asarray(nb), ch, isym, sym, 12, int(nb.max()))
+    assert (np.asarray(dec) == codes).all()
+
+
+def test_compression_close_to_entropy(rng):
+    codes = _random_codes(rng, 2, (8192,))
+    hist = np.bincount(codes, minlength=256)
+    book = huffman.build_codebook(hist)
+    p = hist / hist.sum()
+    ent = -(p[p > 0] * np.log2(p[p > 0])).sum()
+    avg = book.expected_bits_per_symbol(hist)
+    assert ent <= avg <= ent + 1.0  # Huffman is within 1 bit of entropy
+    assert avg < 8  # beats raw u8 on skewed data
+
+
+def test_tree_is_branchless_compatible():
+    """children/is_symbol arrays: leaves have children 0 (reset-to-root)."""
+    rng = np.random.default_rng(1)
+    codes = _random_codes(rng, 3, (2048,))
+    book = huffman.build_codebook(np.bincount(codes, minlength=256))
+    leaves = book.is_symbol == 1
+    assert (book.children[leaves] == 0).all()

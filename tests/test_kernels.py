@@ -1,0 +1,153 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core import huffman
+from repro.kernels import ops, ref
+from repro.kernels.fused_kv_attn import fused_decode_attention_pallas
+from repro.kernels.huffman_decode import (huffman_attn_scores_pallas,
+                                          huffman_decode_pallas)
+from repro.kernels.pack_encode import quant_pack_pallas
+
+
+@pytest.mark.parametrize("B,Hkv,G,S,D,T", [
+    (1, 1, 1, 32, 16, 8),
+    (2, 2, 3, 96, 32, 16),
+    (1, 4, 2, 64, 64, 16),    # MXU-ish head_dim
+    (2, 1, 8, 48, 24, 8),     # odd head_dim
+])
+def test_fused_decode_attention_sweep(B, Hkv, G, S, D, T, rng):
+    spec = C.CacheSpec(layout="packed", block_size=T, max_seq=2 * S,
+                       rel_scale_k=0.05, rel_scale_v=0.15)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
+    c = C.prefill(spec, k, v)
+    args = (q, c.k_store, c.k_min, c.k_step, c.v_store, c.v_min, c.v_step,
+            c.n_flushed)
+    kw = dict(bits_k=spec.bits_k, bits_v=spec.bits_v, block_size=T)
+    acc_r, m_r, l_r = ref.fused_decode_attention_ref(*args, **kw)
+    acc_p, m_p, l_p = fused_decode_attention_pallas(*args, **kw)
+    np.testing.assert_allclose(np.asarray(acc_p), np.asarray(acc_r),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(m_p), np.asarray(m_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_r),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_decode_attention_dtypes(dtype, rng):
+    spec = C.CacheSpec(layout="packed", block_size=8, max_seq=64)
+    k = jnp.asarray(rng.normal(size=(1, 2, 32, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 32, 16)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(1, 4, 16))).astype(dtype)
+    c = C.prefill(spec, k, v)
+    o1 = ops.cache_decode_attention(c, q, impl="pallas")
+    o2 = ops.cache_decode_attention(c, q, impl="xla")
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=2e-2)
+
+
+def test_fused_matches_cache_attend_end_to_end(rng):
+    spec = C.CacheSpec(layout="packed", block_size=16, max_seq=128)
+    k = jnp.asarray(rng.normal(size=(2, 2, 72, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 2, 72, 16)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(2, 4, 16)).astype(np.float32))
+    c = C.prefill(spec, k, v)  # 4 full blocks + 8 in buffer
+    assert int(c.buf_len) == 8
+    out_kernel = ops.cache_decode_attention(c, q, impl="pallas")
+    out_cache = C.attend(c, q)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_cache),
+                               atol=5e-3)
+
+
+def test_fused_empty_store_buffer_only(rng):
+    """nb_valid == 0: everything comes from the raw buffer."""
+    spec = C.CacheSpec(layout="packed", block_size=16, max_seq=64)
+    k = jnp.asarray(rng.normal(size=(1, 2, 5, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 5, 16)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(1, 2, 16)).astype(np.float32))
+    c = C.prefill(spec, k, v)
+    assert int(c.n_flushed) == 0
+    out = ops.cache_decode_attention(c, q, impl="pallas")
+    ref_out = C.reference_attend(k, v, q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out), atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Huffman kernels
+# ---------------------------------------------------------------------------
+
+
+def _encode_blocks(rng, NBLK, S, L, skew=3):
+    codes = np.clip(np.round(rng.normal(8, skew, (NBLK, S, L))), 0, 30).astype(np.uint8)
+    book = huffman.build_codebook(np.bincount(codes.reshape(-1), minlength=256))
+    payloads, nbits = [], []
+    for n in range(NBLK):
+        w, nb = huffman.encode_block(codes[n], book)
+        payloads.append(w)
+        nbits.append(nb)
+    W = max(len(w) for w in payloads)
+    pay = np.zeros((NBLK, W), np.uint32)
+    for n, w in enumerate(payloads):
+        pay[n, : len(w)] = w
+    return codes, book, pay, np.stack(nbits)
+
+
+@pytest.mark.parametrize("NBLK,S,L", [(1, 4, 8), (3, 8, 16), (2, 16, 12)])
+def test_huffman_decode_kernel_sweep(NBLK, S, L, rng):
+    codes, book, pay, nbits = _encode_blocks(rng, NBLK, S, L)
+    ch, isym, sym = book.as_device_tables()
+    maxbits = int(nbits.sum(axis=1).max())
+    dec = huffman_decode_pallas(jnp.asarray(pay), jnp.asarray(nbits),
+                                ch, isym, sym, L, maxbits)
+    assert (np.asarray(dec) == codes).all()
+
+
+def test_huffman_fused_scores_kernel(rng):
+    NBLK, S, D = 2, 8, 16
+    codes, book, pay, nbits = _encode_blocks(rng, NBLK, S, D)
+    ch, isym, sym = book.as_device_tables()
+    maxbits = int(nbits.sum(axis=1).max())
+    kmn = rng.normal(size=(NBLK, D)).astype(np.float32)
+    kst = (0.05 * rng.uniform(1, 2, (NBLK, D))).astype(np.float32)
+    q = rng.normal(size=(D,)).astype(np.float32)
+    sc = huffman_attn_scores_pallas(
+        jnp.asarray(pay), jnp.asarray(nbits), ch, isym, sym,
+        jnp.asarray(kmn), jnp.asarray(kst), jnp.asarray(q), maxbits, scale=0.25)
+    for n in range(NBLK):
+        expect = ref.huffman_attn_scores_ref(
+            jnp.asarray(pay[n]), jnp.asarray(nbits[n]), ch, isym, sym,
+            jnp.asarray(kmn[n]), jnp.asarray(kst[n]), jnp.asarray(q), maxbits) * 0.25
+        np.testing.assert_allclose(np.asarray(sc[n]), np.asarray(expect),
+                                   atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Store-stage kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("token_wise", [False, True])
+@pytest.mark.parametrize("NBLK,T,D,bits", [(2, 8, 16, 5), (4, 16, 32, 3), (1, 16, 24, 8)])
+def test_quant_pack_kernel_sweep(NBLK, T, D, bits, token_wise, rng):
+    x = jnp.asarray(rng.normal(size=(NBLK, T, D)).astype(np.float32))
+    w_p, mn_p, st_p = quant_pack_pallas(x, 0.05, bits, token_wise)
+    w_r, mn_r, st_r = ref.quant_pack_ref(x, 0.05, bits, token_wise)
+    assert (np.asarray(w_p) == np.asarray(w_r)).all()
+    np.testing.assert_allclose(np.asarray(mn_p), np.asarray(mn_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_p), np.asarray(st_r), atol=1e-6)
+
+
+def test_ops_quant_pack_wrapper(rng):
+    x = jnp.asarray(rng.normal(size=(2, 8, 16)).astype(np.float32))
+    for impl in ("pallas", "xla"):
+        w, mn, st = ops.quant_pack(x, rel_scale=0.05, bits=5, token_wise=False,
+                                   impl=impl)
+        assert w.dtype == jnp.uint32

@@ -1,0 +1,92 @@
+"""Error-bounded quantizer contract (paper §3.1.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+def _check_bound(x, q):
+    """|x - x̂| <= step/2 + eps whenever the code is not clipped."""
+    dq = np.asarray(q.dequantize())
+    step = np.broadcast_to(np.asarray(q.step), dq.shape)
+    err = np.abs(x.reshape(dq.shape) - dq)
+    clipped = np.asarray(q.codes) == 255
+    ok = (err <= step / 2 + 1e-5) | clipped
+    assert ok.all(), f"max viol {np.max(err - step / 2)}"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rel=st.floats(0.02, 0.5),
+    ctx=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_k_block_error_bound(rel, ctx, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(scale=rng.uniform(0.1, 10), size=(ctx * 16, 2, 8)).astype(np.float32)
+    q = quant.quantize_k_block(jnp.asarray(x), rel, 16)
+    _check_bound(x, q)
+
+
+@settings(max_examples=30, deadline=None)
+@given(rel=st.floats(0.02, 0.5), seed=st.integers(0, 2**31 - 1))
+def test_v_token_error_bound(rel, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(32, 2, 8)).astype(np.float32)
+    q = quant.quantize_v_token(jnp.asarray(x), rel)
+    _check_bound(x, q)
+
+
+def test_channel_quant_bound(rng):
+    x = rng.normal(size=(64, 4, 16)).astype(np.float32)
+    q = quant.quantize_k_channel(jnp.asarray(x), 0.1)
+    _check_bound(x, q)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+def test_kivi_levels(bits, rng):
+    x = rng.normal(size=(64, 2, 8)).astype(np.float32)
+    qk = quant.kivi_quantize_k(jnp.asarray(x), bits, 32)
+    assert int(np.asarray(qk.codes).max()) <= 2**bits - 1
+    # full range representable: max error <= step/2
+    dq = np.asarray(qk.dequantize())
+    step = np.broadcast_to(np.asarray(qk.step), dq.shape)
+    assert (np.abs(x.reshape(dq.shape) - dq) <= step / 2 + 1e-5).all()
+
+
+def test_constant_block_exact(rng):
+    """Zero-range units reconstruct exactly (safe-step guard)."""
+    x = np.full((32, 2, 8), 3.25, np.float32)
+    q = quant.quantize_k_block(jnp.asarray(x), 0.05, 16)
+    assert np.allclose(np.asarray(q.dequantize()), 3.25)
+
+
+def test_stats_entropy_reasonable(rng):
+    x = rng.normal(size=(128, 4, 16)).astype(np.float32)
+    q = quant.quantize_k_block(jnp.asarray(x), 0.05, 32)
+    s = quant.QuantStats.measure(
+        jnp.asarray(x.reshape(4, 32, 4, 16)), q)
+    assert 0 < s.code_entropy_bits <= 8
+    assert s.clip_fraction <= 0.01
+
+
+def test_smaller_scale_more_entropy(rng):
+    x = rng.normal(size=(128, 2, 16)).astype(np.float32)
+    ents = []
+    for rel in (0.2, 0.05, 0.02):
+        q = quant.quantize_k_block(jnp.asarray(x), rel, 32)
+        s = quant.QuantStats.measure(jnp.asarray(x.reshape(4, 32, 2, 16)), q)
+        ents.append(s.code_entropy_bits)
+    assert ents[0] < ents[1] < ents[2]
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        quant.QuantConfig(block_size=0)
+    with pytest.raises(ValueError):
+        quant.QuantConfig(rel_scale_k=0.0)
+    with pytest.raises(ValueError):
+        quant.QuantConfig(kivi_bits=5)

@@ -1,0 +1,96 @@
+"""Logical-axis sharding rules: conflict sanitation, divisibility fallback,
+per-family rule tables, cache shardings."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+
+def amesh(shape, names):
+    return AbstractMesh(shape, names)
+
+from repro.distributed import sharding as shd
+from repro.models import registry
+from repro.train import step as step_lib
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # abstract mesh: spec construction needs only axis names/sizes
+    return amesh((1, 1), ("data", "model"))
+
+
+def test_spec_conflict_sanitation(mesh):
+    rules = shd.Rules({"x": "model", "y": "model"})
+    spec = shd.spec_for_axes(("x", "y"), (16, 16), rules, mesh)
+    # second use of "model" must be dropped
+    assert spec == P("model") or spec == P("model", None)
+
+
+def test_spec_divisibility_fallback():
+    mesh = amesh((1, 1), ("data", "model"))
+    rules = shd.Rules({"v": "model"})
+    spec = shd.spec_for_axes(("v",), (17,), rules, mesh)  # 17 % 1 == 0 -> ok
+    assert spec in (P("model"), P())
+
+
+def test_divisibility_blocks_sharding():
+    mesh = amesh((2, 4), ("data", "model"))
+    rules = shd.Rules({"v": "model"})
+    assert shd.spec_for_axes(("v",), (10,), rules, mesh) == P()  # 10 % 4 != 0
+    assert shd.spec_for_axes(("v",), (12,), rules, mesh) == P("model")
+
+
+def test_moe_rules_switch_on_expert_count():
+    mesh = amesh((2, 4), ("data", "model"))
+    few = registry.get_smoke_config("mixtral_8x22b")      # E=4 == |model| -> EP
+    many_rules = shd.train_rules(few, mesh)
+    assert many_rules.get("experts") == "model"
+    import dataclasses
+    few2 = dataclasses.replace(few, n_experts=2)          # E=2 < |model| -> TP
+    few_rules = shd.train_rules(few2, mesh)
+    assert few_rules.get("experts") is None
+    assert few_rules.get("expert_mlp") == "model"
+
+
+def test_param_shardings_cover_tree():
+    mesh = amesh((2, 4), ("data", "model"))
+    cfg = registry.get_smoke_config("yi_6b")
+    pshapes, axes = step_lib.shapes_and_axes(cfg)
+    rules = shd.train_rules(cfg, mesh)
+    pshard = shd.make_param_shardings(axes, pshapes, rules, mesh)
+    n_params = len(jax.tree.leaves(pshapes))
+    n_shards = len(jax.tree.leaves(
+        pshard, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding)))
+    assert n_params == n_shards
+
+
+def test_cache_shardings_paths():
+    mesh = amesh((2, 4), ("data", "model"))
+    from repro.models import model as M
+    import dataclasses
+    cfg = dataclasses.replace(registry.get_smoke_config("yi_6b"),
+                              n_kv_heads=2, cache_block=8)
+    state = jax.eval_shape(lambda: M.init_decode_state(cfg, 8, 256))
+    sshard = shd.cache_shardings(state, mesh)
+    flat = jax.tree_util.tree_flatten_with_path(sshard)[0]
+    by_name = {"/".join(str(getattr(p, "key", "")) for p in path): s
+               for path, s in flat}
+    for name, s in by_name.items():
+        if name.endswith("k_store"):
+            # [L, B, Hkv, NB=32, W]: batch -> data, NB -> model
+            assert s.spec == P(None, ("data",), None, "model")
+        if name.endswith("k_buf"):
+            assert s.spec == P(None, ("data",))
+        if name.endswith("n_flushed"):
+            assert s.spec == P()
+
+
+def test_batch_sharding_divisibility():
+    mesh = amesh((2, 4), ("data", "model"))
+    big = jax.ShapeDtypeStruct((8, 16), jnp.int32)
+    one = jax.ShapeDtypeStruct((1,), jnp.int32)
+    assert shd.batch_sharding(mesh, big).spec == P(("data",), None)
+    assert shd.batch_sharding(mesh, one).spec == P()
