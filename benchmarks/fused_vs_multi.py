@@ -41,8 +41,7 @@ def _multi_kernel(cache):
 
     @jax.jit
     def run(c, q):
-        kd = C._decompress_k(c)  # materialized (global-memory writeback)
-        vd = C._decompress_v(c)
+        kd, vd = spec.impl.fetch(spec, c)  # materialized (HBM writeback)
         B_, H_, NB, T_, D_ = kd.shape
         kr = kd.reshape(B_, H_, NB * T_, D_)
         vr = vd.reshape(B_, H_, NB * T_, D_)

@@ -13,25 +13,33 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro import api
 from repro.core import huffman, quant
-from repro.core.codec import KVCompCodec, huffman_ratio, kivi_ratio, packed_ratio
+from repro.core.codec import huffman_ratio, kivi_ratio
+from repro.core.policy import CompressionPolicy, TensorPolicy
 
 # paper Fig. 5 turning points (validated for our model by accuracy_sweep)
 BLOCK_SCALES = [0.02, 0.04, 0.05, 0.06, 0.08, 0.12]
 CHANNEL_SCALES = [0.1, 0.2, 0.25, 0.3, 0.4]
 
 
+def _pol(layout: str, rel_k: float) -> CompressionPolicy:
+    return CompressionPolicy(layout=layout, block_size=64,
+                             k=TensorPolicy(rel_scale=rel_k),
+                             v=TensorPolicy(rel_scale=0.15))
+
+
 def run() -> list[tuple[str, float, str]]:
     cfg, params, data = common.get_tiny_lm()
     k, v = common.harvest_kv(cfg, params, data, n_tokens=8192)
-    k = jnp.asarray(k)
+    k, v = jnp.asarray(k), jnp.asarray(v)
     rows = []
 
     for rel in BLOCK_SCALES:
+        # K reports through the facade: the layout objects own the accounting
+        r = api.estimate_ratio(k, policy=_pol("huffman", rel), which="k")["k"]
+        rp = api.estimate_ratio(k, policy=_pol("packed", rel), which="k")["k"]
         q = quant.quantize_k_block(k, rel, 64)
-        book = huffman.build_codebook(np.asarray(huffman.histogram(q.codes)))
-        r = huffman_ratio(q, book, (64, k.shape[-1]))
-        rp = packed_ratio(q, 64 * k.shape[-1])
         err = float(jnp.max(jnp.abs(q.dequantize().reshape(k.shape) - k)))
         rows.append((f"fig7_kvcomp_block_rel{rel}", 0.0,
                      f"ratio={r.ratio:.3f};packed_ratio={rp.ratio:.3f};"

@@ -12,8 +12,10 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import huffman, quant
-from repro.core.codec import huffman_ratio, kivi_ratio
+from repro import api
+from repro.core import quant
+from repro.core.codec import kivi_ratio
+from repro.core.policy import CompressionPolicy, TensorPolicy
 
 CTX = [2048, 4096, 8192, 16384]
 V_SCALES = [0.08, 0.12, 0.15, 0.2]
@@ -27,9 +29,10 @@ def run() -> list[tuple[str, float, str]]:
         ratios = []
         for ctx in CTX:
             v = jnp.asarray(v_all[:ctx])
-            q = quant.quantize_v_token(v, rel)
-            book = huffman.build_codebook(np.asarray(huffman.histogram(q.codes)))
-            r = huffman_ratio(q, book, (64, v.shape[-1]))
+            # V report through the facade (layout objects own the accounting)
+            r = api.estimate_ratio(v=v, policy=CompressionPolicy(
+                layout="huffman", block_size=64,
+                v=TensorPolicy(rel_scale=rel)), which="v")["v"]
             q2 = quant.kivi_quantize_v(v, 2)
             rk = kivi_ratio(q2, 2)
             gain = (r.ratio / rk.ratio - 1) * 100

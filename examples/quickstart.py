@@ -1,22 +1,35 @@
 """Quickstart: KVComp in five minutes, on CPU.
 
+Everything goes through the public facade::
+
+    from repro import api
+    from repro.core.policy import CompressionPolicy, TensorPolicy
+
+    policy = CompressionPolicy(layout="packed")       # raw|packed|kivi|huffman
+    cache  = api.compress(k, v, policy=policy)        # Store (bulk prefill)
+    cache  = api.append(cache, k_new, v_new)          # Store (decode append)
+    out    = api.attend(cache, q)                     # Fetch (fused algebra)
+    k2, v2 = api.decompress(cache)                    # reconstruct
+    report = api.estimate_ratio(k, v, policy=policy)  # exact size accounting
+    api.available_layouts()                           # registry contents
+
+This script walks:
+
 1.  Quantize + entropy-code a KV tensor, print the ratio accounting.
 2.  Build a compressed KV cache, append tokens, attend — and compare with
-    exact attention.
+    exact attention — for every registered layout.
 3.  Run the fused Pallas kernel (interpret mode) against its oracle.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import cache as kvcache
-from repro.core import quant
-from repro.core.codec import KVCompCodec
+from repro.core.policy import CompressionPolicy, TensorPolicy
 from repro.kernels import ops
 
 rng = np.random.default_rng(0)
@@ -27,44 +40,55 @@ print("=== 1. quantize + entropy-code ===")
 k = jnp.asarray((rng.standard_t(3, (1024, 8, 64)) * 0.5).astype(np.float32))
 v = jnp.asarray((rng.standard_t(3, (1024, 8, 64)) * 0.5).astype(np.float32))
 
-codec = KVCompCodec(quant.QuantConfig(block_size=64, rel_scale_k=0.05,
-                                      rel_scale_v=0.15))
-codec.fit(k, v)  # per-layer shared Huffman codebooks (paper §3.2)
-qk = codec.quantize_k(k)
-for mode in ("huffman", "packed", "kivi"):
-    r = codec.report_k(qk, mode)
-    print(f"  K {mode:8s}: ratio {r.ratio:5.2f}x  "
-          f"({r.bits_per_value:.2f} bits/value incl. metadata)")
-err = float(jnp.max(jnp.abs(qk.dequantize().reshape(k.shape) - k)))
-print(f"  max abs error: {err:.4f} (error-bounded: step = rel x (max-min))")
+for layout in api.available_layouts():
+    r = api.estimate_ratio(k, v, policy=CompressionPolicy(
+        layout=layout, block_size=64,
+        k=TensorPolicy(rel_scale=0.05), v=TensorPolicy(rel_scale=0.15)))
+    print(f"  {layout:8s}: ratio {r['ratio']:5.2f}x  "
+          f"(K {r['k'].bits_per_value:.2f} / V {r['v'].bits_per_value:.2f} "
+          f"bits/value incl. metadata)")
 
 # --- 2. the growing compressed cache -----------------------------------------
 print("=== 2. compressed KV cache (prefill + append + attend) ===")
-spec = kvcache.CacheSpec(layout="packed", block_size=32, max_seq=512,
-                         rel_scale_k=0.05, rel_scale_v=0.15)
 B, Hkv, S, D = 2, 4, 200, 64
 kc = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
 vc = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
-cache = kvcache.prefill(spec, kc, vc)
-print(f"  prefilled {S} tokens -> {int(cache.n_flushed)} compressed blocks "
-      f"+ {int(cache.buf_len)} raw-buffer tokens")
-for _ in range(3):  # decode-time natural appending (paper §3.2.3)
-    cache = kvcache.append(cache,
-                           jnp.asarray(rng.normal(size=(B, Hkv, D)), jnp.float32),
-                           jnp.asarray(rng.normal(size=(B, Hkv, D)), jnp.float32))
-print(f"  after 3 appends: total_len={int(cache.total_len)}")
 q = jnp.asarray(rng.normal(size=(B, Hkv * 2, D)).astype(np.float32))
-out = kvcache.attend(cache, q)
-print(f"  attend -> {out.shape}, finite: {bool(jnp.isfinite(out).all())}")
 
-bytes_packed = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
-raw_cache = kvcache.prefill(dataclasses.replace(spec, layout="raw"), kc, vc)
-bytes_raw = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(raw_cache))
-print(f"  cache bytes: raw {bytes_raw:,} -> packed {bytes_packed:,} "
-      f"({bytes_raw / bytes_packed:.2f}x smaller)")
+
+def policy(layout):
+    return CompressionPolicy(layout=layout, block_size=32,
+                             k=TensorPolicy(rel_scale=0.05),
+                             v=TensorPolicy(rel_scale=0.15))
+
+
+# decode-time natural appending (paper §3.2.3): same 3 tokens every layout
+k_new = jnp.asarray(rng.normal(size=(3, B, Hkv, D)), jnp.float32)
+v_new = jnp.asarray(rng.normal(size=(3, B, Hkv, D)), jnp.float32)
+k_full = jnp.concatenate([kc, k_new.transpose(1, 2, 0, 3)], axis=2)
+v_full = jnp.concatenate([vc, v_new.transpose(1, 2, 0, 3)], axis=2)
+ref = kvcache.reference_attend(k_full, v_full, q)
+
+caches = {}
+for layout in api.available_layouts():
+    cache = api.compress(kc, vc, policy=policy(layout), max_seq=512)
+    for t in range(3):
+        cache = api.append(cache, k_new[t], v_new[t])
+    out = api.attend(cache, q)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+    caches[layout] = (cache, nbytes)
+    print(f"  [{layout:8s}] total_len={int(cache.total_len)}  "
+          f"cache bytes={nbytes:>9,}  attend |Δ| vs exact={err:.3f}")
+
+bytes_raw = caches["raw"][1]
+for layout, (_, nbytes) in caches.items():
+    if layout != "raw":
+        print(f"  {layout:8s} vs raw allocation: {bytes_raw / nbytes:.2f}x smaller")
 
 # --- 3. fused kernel (cache-resident decompression) --------------------------
 print("=== 3. fused Pallas kernel vs XLA oracle ===")
+cache = caches["packed"][0]
 o_pallas = ops.cache_decode_attention(cache, q, impl="pallas")
 o_xla = ops.cache_decode_attention(cache, q, impl="xla")
 print(f"  pallas-vs-xla max diff: {float(jnp.max(jnp.abs(o_pallas - o_xla))):.2e}")

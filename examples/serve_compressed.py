@@ -1,6 +1,9 @@
 """End-to-end serving driver (the paper's deployment scenario): train a
-small LM, then serve batched requests with raw vs KIVI vs KVComp-packed KV
-caches — comparing generated text, cache memory, and decode throughput.
+small LM, then serve batched requests with every registered cache layout —
+comparing generated text, cache memory, and decode throughput.
+
+Layouts come from the ``repro.api`` registry, so a newly registered layout
+shows up in this comparison with no changes here.
 
     PYTHONPATH=src python examples/serve_compressed.py
 """
@@ -8,10 +11,10 @@ caches — comparing generated text, cache memory, and decode throughput.
 import dataclasses
 import time
 
-import jax
 import numpy as np
 
 from benchmarks import common
+from repro import api
 from repro.models import model as M
 from repro.serve.engine import Engine, EngineConfig, Request, cache_memory_report
 
@@ -21,8 +24,10 @@ def main():
     prompts = [data.batch_at(900 + i)["tokens"][0][:64].astype(np.int32)
                for i in range(4)]
 
+    # raw first: it is the exactness baseline the others are compared to
+    order = ["raw"] + [n for n in api.available_layouts() if n != "raw"]
     results = {}
-    for layout in ("raw", "packed", "kivi"):
+    for layout in order:
         c = dataclasses.replace(cfg, cache_layout=layout)
         eng = Engine(c, params, EngineConfig(bucket=64, max_batch=4, max_seq=256),
                      q_chunk=64, kv_chunk=64)
@@ -35,15 +40,15 @@ def main():
         rep = cache_memory_report(c, state)
         results[layout] = (outs, dt, rep)
         tput = sum(24 / r.gen_s for r in outs)
-        print(f"[{layout:6s}] kv_cache={rep['kv_bytes']:>9,}B  "
+        print(f"[{layout:8s}] kv_cache={rep['kv_bytes']:>9,}B  "
               f"wall={dt:5.2f}s  decode={tput:6.1f} tok/s")
 
     raw_toks = [r.tokens for r in results["raw"][0]]
-    for layout in ("packed", "kivi"):
+    for layout in order[1:]:
         toks = [r.tokens for r in results[layout][0]]
         agree = np.mean([(a == b).mean() for a, b in zip(raw_toks, toks)])
         saved = 1 - results[layout][2]["kv_bytes"] / results["raw"][2]["kv_bytes"]
-        print(f"{layout:6s} vs raw: token agreement {agree:5.1%}, "
+        print(f"{layout:8s} vs raw: token agreement {agree:5.1%}, "
               f"cache memory saved {saved:5.1%}")
 
     # show a decoded sample (byte-level -> printable text)

@@ -1,0 +1,143 @@
+"""Public KVComp facade — the one import for compressing, serving, and
+sizing KV caches.
+
+    from repro import api
+    from repro.core.policy import CompressionPolicy, TensorPolicy, LayerOverride
+
+    policy = CompressionPolicy(layout="packed")      # or kivi / huffman / raw
+    cache  = api.compress(k, v, policy=policy)       # Store (prefill bulk)
+    out    = api.attend(cache, q)                    # Fetch (fused algebra)
+    k2, v2 = api.decompress(cache)                   # reconstruct
+    report = api.estimate_ratio(k, v, policy=policy) # exact size accounting
+
+Everything dispatches through the ``CacheLayout`` registry
+(``repro.core.layouts``): any layout registered with
+``@register_layout(name)`` — including the four built-ins raw / packed /
+kivi / huffman — is servable through this module with no other code aware
+of it.  Examples and benchmarks consume this facade rather than reaching
+into the internals.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as kvcache
+from repro.core import huffman, layouts, quant
+from repro.core.policy import CompressionPolicy, LayerOverride, TensorPolicy  # noqa: F401
+
+__all__ = [
+    "CompressionPolicy", "TensorPolicy", "LayerOverride",
+    "available_layouts", "register_layout", "make_spec", "make_cache",
+    "compress", "decompress", "append", "attend", "estimate_ratio",
+]
+
+register_layout = layouts.register_layout
+
+
+def available_layouts() -> tuple[str, ...]:
+    """Names of every registered cache layout."""
+    return layouts.available_layouts()
+
+
+def _policy(policy: CompressionPolicy | None) -> CompressionPolicy:
+    return policy if policy is not None else CompressionPolicy()
+
+
+def make_spec(policy: CompressionPolicy | None = None, *, layer: int = 0,
+              max_seq: int = 4096, window: int | None = None) -> kvcache.CacheSpec:
+    """Resolve a (possibly per-layer-overridden) policy to one CacheSpec."""
+    return _policy(policy).spec_for_layer(layer, max_seq=max_seq, window=window)
+
+
+def make_cache(batch: int, n_kv_heads: int, head_dim: int, *,
+               policy: CompressionPolicy | None = None, layer: int = 0,
+               max_seq: int = 4096, window: int | None = None,
+               dtype=jnp.bfloat16) -> kvcache.LayerKVCache:
+    """An empty, servable layer cache under the policy's layout."""
+    spec = make_spec(policy, layer=layer, max_seq=max_seq, window=window)
+    return kvcache.init_layer_cache(spec, batch, n_kv_heads, head_dim, dtype)
+
+
+def compress(k, v, *, policy: CompressionPolicy | None = None, layer: int = 0,
+             max_seq: int | None = None, window: int | None = None,
+             dtype=jnp.bfloat16) -> kvcache.LayerKVCache:
+    """Bulk-compress prompt KV [B, Hkv, S, D] into a layer cache (Store)."""
+    S = k.shape[2]
+    spec = make_spec(policy, layer=layer,
+                     max_seq=max_seq if max_seq is not None else S,
+                     window=window)
+    return kvcache.prefill(spec, k, v, dtype)
+
+
+def decompress(cache: kvcache.LayerKVCache):
+    """Reconstruct (k, v) [B, Hkv, S, D] from a cache — decoded store blocks
+    followed by the exact raw-buffer tail.  Host-side convenience: the cache
+    lengths must be concrete (outside jit)."""
+    spec = cache.spec
+    k_deq, v_deq = spec.impl.fetch(spec, cache)
+    B, H, NB, T, D = k_deq.shape
+    nb = int(cache.n_flushed)
+    if nb > NB:
+        raise ValueError("cache has evicted blocks; only the last "
+                         f"{NB * T} store tokens are reconstructible")
+    buf = int(cache.buf_len)
+    k = jnp.concatenate(
+        [k_deq.reshape(B, H, NB * T, D)[:, :, : nb * T], cache.k_buf[:, :, :buf]],
+        axis=2)
+    v = jnp.concatenate(
+        [v_deq.reshape(B, H, NB * T, D)[:, :, : nb * T], cache.v_buf[:, :, :buf]],
+        axis=2)
+    return k, v
+
+
+def append(cache: kvcache.LayerKVCache, k_new, v_new) -> kvcache.LayerKVCache:
+    """Append one token's KV [B, Hkv, D] (compress-on-block-overflow)."""
+    return kvcache.append(cache, k_new, v_new)
+
+
+def attend(cache: kvcache.LayerKVCache, q, scale: float | None = None):
+    """Single-token decode attention over (store ∥ buffer) -> [B, Hq, D]."""
+    return kvcache.attend(cache, q, scale)
+
+
+def estimate_ratio(k, v=None, *, policy: CompressionPolicy | None = None,
+                   layer: int = 0, which: str = "both") -> dict:
+    """Exact compression-ratio accounting of this policy on real tensors.
+
+    Quantizes K (BlockQuant) and/or V (TokenQuant) under the resolved layer
+    policy, fits Huffman codebooks where the layout needs them, and returns
+    per-tensor ``RatioReport``s plus the combined ratio — the collapse of
+    the old ``KVCompCodec.report_k``/``report_v`` duplication into the
+    layout objects.  ``which`` ∈ {"k", "v", "both"} limits the work when a
+    caller sweeps only one tensor.
+    """
+    if which not in ("k", "v", "both"):
+        raise ValueError(f"which must be k|v|both, got {which!r}")
+    ref = k if k is not None else v
+    spec = make_spec(policy, layer=layer, max_seq=int(ref.shape[0]))
+    lay = spec.impl
+    head_dim = int(ref.shape[-1])
+
+    def report(q):
+        book = None
+        if lay.needs_codebook:
+            book = huffman.build_codebook(np.asarray(huffman.histogram(q.codes)))
+        return lay.size_report(q, block_size=spec.block_size, head_dim=head_dim,
+                               kivi_bits=spec.bits_k, book=book)
+
+    out = {"layout": spec.layout}
+    if which in ("k", "both"):
+        qk = (quant.kivi_quantize_k(k, spec.bits_k, 32) if lay.kivi_step
+              else quant.quantize_k_block(k, spec.rel_scale_k, spec.block_size))
+        out["k"] = report(qk)
+    if which in ("v", "both"):
+        qv = (quant.kivi_quantize_v(v, spec.bits_v) if lay.kivi_step
+              else quant.quantize_v_token(v, spec.rel_scale_v))
+        out["v"] = report(qv)
+    reports = [out[t] for t in ("k", "v") if t in out]
+    total_bits = sum(r.total_bits for r in reports)
+    n = sum(r.n_values for r in reports)
+    out["ratio"] = n * layouts.RAW_BITS_PER_VALUE / max(total_bits, 1)
+    return out

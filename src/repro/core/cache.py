@@ -1,12 +1,18 @@
 """Compressed KV-cache manager (paper §3.2.1, §3.2.3) — jit/pjit-friendly.
 
 This is the serving-side realization of KVComp: a per-layer cache that keeps
-its main storage *compressed* (block-quantized + bit-packed) and a small raw
+its main storage *compressed* (block-quantized + encoded) and a small raw
 append buffer.  Newly generated KV vectors accumulate in the buffer; when it
-fills one compression block, the block is quantized, packed, and written into
-the packed store at a deterministic slot (the atomic-free Block Offsets Array
-of DESIGN.md §2 degenerates to ``slot = n_flushed % NB`` because the packed
-path uses uniform per-block widths → offsets are affine in the block index).
+fills one compression block, the block is quantized, encoded, and written into
+the store at a deterministic slot (the atomic-free Block Offsets Array of
+DESIGN.md §2 degenerates to ``slot = n_flushed % NB`` because every layout
+uses uniform per-block slot widths → offsets are affine in the block index).
+
+How a block is encoded — and how it is fetched back — is owned entirely by
+the ``CacheLayout`` strategy named in ``CacheSpec.layout`` (DESIGN.md §4);
+this module holds only the layout-independent machinery: the ring of block
+slots, the raw tail buffer, prefill/append scheduling, and the joint-softmax
+attention over (store ∥ buffer).
 
 Faithfulness notes
 ------------------
@@ -30,47 +36,54 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitpack
+from repro.core import bitpack, layouts
 
 Array = jax.Array
 
 NEG_INF = -1e9
 
-
-def bits_for_rel_scale(rel_scale: float) -> int:
-    """Static bit width that covers every code of an error-bounded quantizer:
-    max code = round(1/rel_scale)."""
-    return max(1, math.ceil(math.log2(round(1.0 / rel_scale) + 1)))
+# Re-exported: historical home of this helper (dryrun and tests import it).
+bits_for_rel_scale = layouts.bits_for_rel_scale
 
 
 @dataclasses.dataclass(frozen=True)
 class CacheSpec:
-    """Static (hashable — lives in the pytree aux) cache configuration."""
+    """Static (hashable — lives in the pytree aux) cache configuration.
 
-    layout: str = "packed"  # raw | packed | kivi
+    ``layout`` names a registered ``repro.core.layouts.CacheLayout``; bit
+    widths and store shapes are delegated to it.  The optional overrides let
+    a ``CompressionPolicy`` pin explicit storage widths per tensor.
+    """
+
+    layout: str = "packed"  # any name in layouts.available_layouts()
     block_size: int = 64
     rel_scale_k: float = 0.05
     rel_scale_v: float = 0.15
     kivi_bits: int = 2
     max_seq: int = 4096
     window: int | None = None  # sliding-window size (tokens), None = full
+    bits_k_override: int | None = None
+    bits_v_override: int | None = None
+
+    @property
+    def impl(self) -> layouts.CacheLayout:
+        return layouts.get_layout(self.layout)
 
     @property
     def bits_k(self) -> int:
-        if self.layout == "kivi":
-            return self.kivi_bits
-        return bits_for_rel_scale(self.rel_scale_k)
+        if self.bits_k_override is not None:
+            return self.bits_k_override
+        return self.impl.bits_k(self)
 
     @property
     def bits_v(self) -> int:
-        if self.layout == "kivi":
-            return self.kivi_bits
-        return bits_for_rel_scale(self.rel_scale_v)
+        if self.bits_v_override is not None:
+            return self.bits_v_override
+        return self.impl.bits_v(self)
 
     @property
     def n_blocks(self) -> int:
@@ -84,33 +97,19 @@ class CacheSpec:
         return bitpack.nostraddle_words(self.block_size * head_dim, self.bits_v)
 
 
-def _quant_block(x: Array, rel_scale: float, bits: int, unit_axes: tuple[int, ...], kivi: bool):
-    """Quantize one buffer block. x: [..., T, D] (f32). Returns codes u8 +
-    (min, step) with unit axes reduced."""
-    mn = jnp.min(x, axis=unit_axes, keepdims=True)
-    mx = jnp.max(x, axis=unit_axes, keepdims=True)
-    if kivi:
-        step = (mx - mn) / (2**bits - 1)
-    else:
-        step = rel_scale * (mx - mn)
-    safe = jnp.where(step > 0, step, 1.0)
-    codes = jnp.clip(jnp.round((x - mn) / safe), 0, 2**bits - 1).astype(jnp.uint8)
-    return codes, jnp.squeeze(mn, unit_axes), jnp.squeeze(step, unit_axes)
-
-
 @jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass
 class LayerKVCache:
     """One layer's cache.  Leading dims: [B, Hkv, ...].
 
-    Packed layouts:
+    Store shapes are layout-owned (see ``CacheLayout.init_store``); e.g. the
+    packed layouts use
       k_store : u32 [B, Hkv, NB, Wk]       (bit-packed block codes)
       k_min/k_step : bf16 [B, Hkv, NB, D]  (BlockQuant units)
       v_store : u32 [B, Hkv, NB, Wv]
       v_min/v_step : bf16 [B, Hkv, NB, T]  (TokenQuant units; T = block_size)
-    Raw layout:
-      k_store / v_store : bf16 [B, Hkv, NB, T, D]; min/step are dummies.
-    Shared:
+    while the raw layout stores bf16 [B, Hkv, NB, T, D] blocks with dummy
+    scales.  Shared, layout-independent:
       k_buf / v_buf : bf16 [B, Hkv, T, D] — raw append buffer (residual window)
       n_flushed : i32 [] — total blocks ever flushed (ring index for SWA)
       buf_len   : i32 [] — valid entries in the buffer
@@ -160,21 +159,9 @@ class LayerKVCache:
 
 def init_layer_cache(spec: CacheSpec, batch: int, n_kv_heads: int, head_dim: int,
                      dtype=jnp.bfloat16) -> LayerKVCache:
-    B, H, T, D, NB = batch, n_kv_heads, spec.block_size, head_dim, spec.n_blocks
-    if spec.layout == "raw":
-        k_store = jnp.zeros((B, H, NB, T, D), dtype)
-        v_store = jnp.zeros((B, H, NB, T, D), dtype)
-        k_min = k_step = jnp.zeros((1,), dtype)
-        v_min = v_step = jnp.zeros((1,), dtype)
-    elif spec.layout in ("packed", "kivi"):
-        k_store = jnp.zeros((B, H, NB, spec.words_k(D)), jnp.uint32)
-        v_store = jnp.zeros((B, H, NB, spec.words_v(D)), jnp.uint32)
-        k_min = jnp.zeros((B, H, NB, D), dtype)
-        k_step = jnp.zeros((B, H, NB, D), dtype)
-        v_min = jnp.zeros((B, H, NB, T), dtype)
-        v_step = jnp.zeros((B, H, NB, T), dtype)
-    else:
-        raise ValueError(f"unknown layout {spec.layout}")
+    B, H, T, D = batch, n_kv_heads, spec.block_size, head_dim
+    k_store, k_min, k_step, v_store, v_min, v_step = spec.impl.init_store(
+        spec, B, H, D, dtype)
     return LayerKVCache(
         k_store=k_store, k_min=k_min, k_step=k_step,
         v_store=v_store, v_min=v_min, v_step=v_step,
@@ -184,54 +171,6 @@ def init_layer_cache(spec: CacheSpec, batch: int, n_kv_heads: int, head_dim: int
         buf_len=jnp.zeros((), jnp.int32),
         spec=spec,
     )
-
-
-# ---------------------------------------------------------------------------
-# Block compression / decompression for the packed layouts
-# ---------------------------------------------------------------------------
-
-
-def _compress_kv_blocks(spec: CacheSpec, k: Array, v: Array):
-    """Compress [B, H, NB, T, D] raw blocks -> packed stores + scales."""
-    kivi = spec.layout == "kivi"
-    kf = k.astype(jnp.float32)
-    vf = v.astype(jnp.float32)
-    # K: BlockQuant — min/max over the block's T tokens, per channel.
-    k_codes, k_mn, k_st = _quant_block(kf, spec.rel_scale_k, spec.bits_k, (-2,), kivi)
-    # V: TokenQuant — min/max over D, per token.
-    v_codes, v_mn, v_st = _quant_block(vf, spec.rel_scale_v, spec.bits_v, (-1,), kivi)
-    B, H, NB, T, D = k.shape
-    k_store = bitpack.pack_nostraddle(k_codes.reshape(B, H, NB, T * D), spec.bits_k)
-    v_store = bitpack.pack_nostraddle(v_codes.reshape(B, H, NB, T * D), spec.bits_v)
-    dt = jnp.bfloat16
-    return (k_store, k_mn.astype(dt), k_st.astype(dt),
-            v_store, v_mn.astype(dt), v_st.astype(dt))
-
-
-def _decompress_k(cache: LayerKVCache) -> Array:
-    """Packed K -> dequantized bf16 [B, H, NB, T, D] (XLA fallback path; the
-    Pallas kernel performs this per-tile without materializing to HBM)."""
-    spec = cache.spec
-    if spec.layout == "raw":
-        return cache.k_store
-    B, H, NB, _ = cache.k_store.shape
-    T, D = spec.block_size, cache.head_dim
-    codes = bitpack.unpack_nostraddle(cache.k_store, spec.bits_k, T * D).reshape(B, H, NB, T, D)
-    return (cache.k_min[:, :, :, None, :].astype(jnp.float32)
-            + codes.astype(jnp.float32) * cache.k_step[:, :, :, None, :].astype(jnp.float32)
-            ).astype(jnp.bfloat16)
-
-
-def _decompress_v(cache: LayerKVCache) -> Array:
-    spec = cache.spec
-    if spec.layout == "raw":
-        return cache.v_store
-    B, H, NB, _ = cache.v_store.shape
-    T, D = spec.block_size, cache.head_dim
-    codes = bitpack.unpack_nostraddle(cache.v_store, spec.bits_v, T * D).reshape(B, H, NB, T, D)
-    return (cache.v_min[:, :, :, :, None].astype(jnp.float32)
-            + codes.astype(jnp.float32) * cache.v_step[:, :, :, :, None].astype(jnp.float32)
-            ).astype(jnp.bfloat16)
 
 
 # ---------------------------------------------------------------------------
@@ -251,19 +190,10 @@ def prefill(spec: CacheSpec, k: Array, v: Array, dtype=jnp.bfloat16) -> LayerKVC
     if n_full:
         kb = k[:, :, (n_full - keep) * T : n_full * T].reshape(B, H, keep, T, D)
         vb = v[:, :, (n_full - keep) * T : n_full * T].reshape(B, H, keep, T, D)
-        if spec.layout == "raw":
-            slots = (jnp.arange(keep) + (n_full - keep)) % NB
-            cache.k_store = cache.k_store.at[:, :, slots].set(kb.astype(dtype))
-            cache.v_store = cache.v_store.at[:, :, slots].set(vb.astype(dtype))
-        else:
-            ks, kmn, kst, vs, vmn, vst = _compress_kv_blocks(spec, kb, vb)
-            slots = (jnp.arange(keep) + (n_full - keep)) % NB
-            cache.k_store = cache.k_store.at[:, :, slots].set(ks)
-            cache.k_min = cache.k_min.at[:, :, slots].set(kmn)
-            cache.k_step = cache.k_step.at[:, :, slots].set(kst)
-            cache.v_store = cache.v_store.at[:, :, slots].set(vs)
-            cache.v_min = cache.v_min.at[:, :, slots].set(vmn)
-            cache.v_step = cache.v_step.at[:, :, slots].set(vst)
+        slots = (jnp.arange(keep) + (n_full - keep)) % NB
+        (cache.k_store, cache.k_min, cache.k_step,
+         cache.v_store, cache.v_min, cache.v_step) = spec.impl.write_blocks(
+            spec, cache, slots, kb, vb)
     rem = S - n_full * T
     if rem:
         cache.k_buf = cache.k_buf.at[:, :, :rem].set(k[:, :, n_full * T :].astype(dtype))
@@ -294,19 +224,11 @@ def append(cache: LayerKVCache, k_new: Array, v_new: Array) -> LayerKVCache:
     B, H, _, D = k_buf.shape
     kb = k_buf[:, :, None]  # [B, H, 1, T, D]
     vb = v_buf[:, :, None]
-    slot = jnp.where(will_flush, cache.n_flushed % NB, NB)  # NB = drop sentinel
-    if spec.layout == "raw":
-        k_store = cache.k_store.at[:, :, slot].set(kb[:, :, 0].astype(dt), mode="drop")
-        v_store = cache.v_store.at[:, :, slot].set(vb[:, :, 0].astype(dt), mode="drop")
-        k_min, k_step, v_min, v_step = cache.k_min, cache.k_step, cache.v_min, cache.v_step
-    else:
-        ks, kmn, kst, vs, vmn, vst = _compress_kv_blocks(spec, kb, vb)
-        k_store = cache.k_store.at[:, :, slot].set(ks[:, :, 0], mode="drop")
-        k_min = cache.k_min.at[:, :, slot].set(kmn[:, :, 0], mode="drop")
-        k_step = cache.k_step.at[:, :, slot].set(kst[:, :, 0], mode="drop")
-        v_store = cache.v_store.at[:, :, slot].set(vs[:, :, 0], mode="drop")
-        v_min = cache.v_min.at[:, :, slot].set(vmn[:, :, 0], mode="drop")
-        v_step = cache.v_step.at[:, :, slot].set(vst[:, :, 0], mode="drop")
+    # NB = out-of-range drop sentinel when the buffer did not fill.
+    slots = jnp.where(will_flush, cache.n_flushed % NB, NB).reshape(1)
+    staged = dataclasses.replace(cache, k_buf=k_buf, v_buf=v_buf)
+    (k_store, k_min, k_step, v_store, v_min, v_step) = spec.impl.write_blocks(
+        spec, staged, slots, kb, vb)
     return LayerKVCache(
         k_store=k_store, k_min=k_min, k_step=k_step,
         v_store=v_store, v_min=v_min, v_step=v_step,
@@ -326,9 +248,9 @@ def attend(cache: LayerKVCache, q: Array, scale: float | None = None) -> Array:
     """Single-token attention against the cache.
 
     q : [B, H, D] with H = Hkv * G (GQA); returns [B, H, D].
-    Scores over the packed store use dequantize-then-dot in the XLA path;
-    invalid blocks/buffer tail are masked before a joint softmax across
-    (packed ∥ buffer).
+    Scores over the store use the layout's ``fetch`` (dequantize-then-dot in
+    the XLA path); invalid blocks/buffer tail are masked before a joint
+    softmax across (store ∥ buffer).
     """
     spec = cache.spec
     B, Hq, D = q.shape
@@ -339,8 +261,9 @@ def attend(cache: LayerKVCache, q: Array, scale: float | None = None) -> Array:
         scale = 1.0 / math.sqrt(D)
     qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
 
-    k_deq = _decompress_k(cache).astype(jnp.float32)  # [B,Hkv,NB,T,D]
-    v_deq = _decompress_v(cache).astype(jnp.float32)
+    k_deq, v_deq = spec.impl.fetch(spec, cache)  # [B,Hkv,NB,T,D]
+    k_deq = k_deq.astype(jnp.float32)
+    v_deq = v_deq.astype(jnp.float32)
     s_main = jnp.einsum("bhgd,bhntd->bhgnt", qg, k_deq) * scale
     nb_valid = jnp.minimum(cache.n_flushed, NB)
     block_ok = jnp.arange(NB) < nb_valid  # ring: any slot < nb_valid is live

@@ -9,99 +9,26 @@ Two pipelines share the §3.1.1 quantizer:
   packing (DESIGN.md §2).
 
 Both report compression ratios with *full* metadata accounting, mirroring the
-paper's ~1/128 metadata analysis: per-unit fp16 (min, step), per-stream u16
-bit counts, per-block u32 offsets, and the codebook itself.
+paper's ~1/128 metadata analysis.  The accounting itself lives with the cache
+layouts (``repro.core.layouts`` — every ``CacheLayout`` owns its
+``size_report``); this module re-exports the report helpers for backward
+compatibility and adds the host-side codebook-fitting flow.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitpack, huffman, quant
-
-RAW_BITS_PER_VALUE = 16  # KV caches are bf16/fp16 at rest
-
-
-@dataclasses.dataclass(frozen=True)
-class RatioReport:
-    """Exact size accounting for one compressed tensor."""
-
-    n_values: int
-    payload_bits: int
-    scale_bits: int
-    stream_meta_bits: int
-    offset_meta_bits: int
-    codebook_bits: int
-
-    @property
-    def total_bits(self) -> int:
-        return (
-            self.payload_bits
-            + self.scale_bits
-            + self.stream_meta_bits
-            + self.offset_meta_bits
-            + self.codebook_bits
-        )
-
-    @property
-    def ratio(self) -> float:
-        return self.n_values * RAW_BITS_PER_VALUE / max(self.total_bits, 1)
-
-    @property
-    def bits_per_value(self) -> float:
-        return self.total_bits / max(self.n_values, 1)
-
-
-def _scale_bits(q: quant.Quantized) -> int:
-    return q.meta_bits
-
-
-def kivi_ratio(q: quant.Quantized, bits: int) -> RatioReport:
-    """KIVI baseline: fixed b-bit payload + fp16 (min, step) per unit."""
-    return RatioReport(
-        n_values=int(q.codes.size),
-        payload_bits=int(q.codes.size) * bits,
-        scale_bits=_scale_bits(q),
-        stream_meta_bits=0,
-        offset_meta_bits=0,
-        codebook_bits=0,
-    )
-
-
-def huffman_ratio(q: quant.Quantized, book: huffman.CodeBook, streams_shape: tuple[int, int]) -> RatioReport:
-    """KVComp Huffman path sizes from the histogram (exact expected bits)."""
-    hist = np.bincount(np.asarray(q.codes).reshape(-1), minlength=huffman.N_SYMBOLS)
-    payload = int((hist * book.lengths).sum())
-    n_streams = int(np.prod(q.codes.shape)) // streams_shape[1]
-    n_blocks = max(n_streams // streams_shape[0], 1)
-    return RatioReport(
-        n_values=int(q.codes.size),
-        payload_bits=payload,
-        scale_bits=_scale_bits(q),
-        stream_meta_bits=n_streams * 16,  # u16 bit count per stream (per-thread metadata)
-        offset_meta_bits=n_blocks * 32,  # u32 offset per block (Block Offsets Array)
-        codebook_bits=book.serialized_bits,
-    )
-
-
-def packed_ratio(q: quant.Quantized, block_codes: int) -> RatioReport:
-    """TPU adaptive fixed-length path sizes."""
-    codes = np.asarray(q.codes).reshape(-1, block_codes)
-    mx = codes.max(axis=1).astype(np.int64)
-    b = np.maximum(np.ceil(np.log2(mx + 1)), 1).astype(np.int64)
-    payload = int((((block_codes * b) + 31) // 32 * 32).sum())
-    n_blocks = codes.shape[0]
-    return RatioReport(
-        n_values=int(q.codes.size),
-        payload_bits=payload,
-        scale_bits=_scale_bits(q),
-        stream_meta_bits=n_blocks * 8,  # u8 width per block
-        offset_meta_bits=n_blocks * 32,
-        codebook_bits=0,
-    )
+from repro.core import bitpack, huffman, layouts, quant
+from repro.core.layouts import (  # noqa: F401  (re-exported public API)
+    RAW_BITS_PER_VALUE,
+    RatioReport,
+    huffman_ratio,
+    kivi_ratio,
+    packed_ratio,
+)
 
 
 @dataclasses.dataclass
@@ -114,6 +41,9 @@ class KVCompCodec:
         codec.fit(k_prefill, v_prefill)          # build codebooks once
         qk = codec.quantize_k(k)                 # lossy step
         report = codec.report_k(qk)              # exact size accounting
+
+    Size reports dispatch through the cache-layout registry, so any
+    registered layout name is a valid ``mode``.
     """
 
     cfg: quant.QuantConfig
@@ -136,27 +66,18 @@ class KVCompCodec:
         self.book_v = huffman.build_codebook(np.asarray(huffman.histogram(qv.codes)))
 
     # -- size accounting ------------------------------------------------------
-    def report_k(self, qk: quant.Quantized, mode: str = "huffman") -> RatioReport:
-        head_dim = qk.codes.shape[-1]
+    def _report(self, q: quant.Quantized, mode: str, book) -> RatioReport:
         if mode == "huffman":
-            assert self.book_k is not None, "call fit() first"
-            return huffman_ratio(qk, self.book_k, (self.cfg.block_size, head_dim))
-        if mode == "packed":
-            return packed_ratio(qk, self.cfg.block_size * head_dim)
-        if mode == "kivi":
-            return kivi_ratio(qk, self.cfg.kivi_bits)
-        raise ValueError(mode)
+            assert book is not None, "call fit() first"
+        return layouts.get_layout(mode).size_report(
+            q, block_size=self.cfg.block_size, head_dim=q.codes.shape[-1],
+            kivi_bits=self.cfg.kivi_bits, book=book)
+
+    def report_k(self, qk: quant.Quantized, mode: str = "huffman") -> RatioReport:
+        return self._report(qk, mode, self.book_k)
 
     def report_v(self, qv: quant.Quantized, mode: str = "huffman") -> RatioReport:
-        head_dim = qv.codes.shape[-1]
-        if mode == "huffman":
-            assert self.book_v is not None, "call fit() first"
-            return huffman_ratio(qv, self.book_v, (self.cfg.block_size, head_dim))
-        if mode == "packed":
-            return packed_ratio(qv, self.cfg.block_size * head_dim)
-        if mode == "kivi":
-            return kivi_ratio(qv, self.cfg.kivi_bits)
-        raise ValueError(mode)
+        return self._report(qv, mode, self.book_v)
 
     # -- full encode/decode (ragged Huffman container) ------------------------
     def encode_huffman(self, q: quant.Quantized, which: str = "k"):

@@ -1,0 +1,572 @@
+"""Pluggable cache-layout strategies (DESIGN.md §4).
+
+The paper's central claim is that the cache layout and the compression
+algorithm are co-designed *and swappable per workload* (§4.2's KVCompCache
+integration point).  This module makes that a first-class API: every way of
+storing a layer's KV blocks is a ``CacheLayout`` registered by name, and the
+cache manager (``repro.core.cache``), the fused kernels
+(``repro.kernels.ops``), the serving engine, and the dry-run cost model all
+dispatch through the registry instead of string-comparing layout names.
+
+A layout owns four responsibilities:
+
+* ``init_store``      — allocate the six store arrays of a ``LayerKVCache``
+                        (payload + per-unit quantization scales).
+* ``write_blocks``    — the Store stage: quantize + encode whole compression
+                        blocks into slots of the block ring (prefill bulk
+                        writes and decode-time buffer flushes share this).
+* ``fetch``           — the Fetch stage: reconstruct dequantized
+                        ``[B, H, NB, T, D]`` K/V blocks (the XLA path;
+                        fused-eligible layouts additionally advertise
+                        ``supports_fused`` so ``attend_block`` can run the
+                        Pallas ``q·(m + s∘c)`` kernel without materializing).
+* ``size_report`` / ``bytes_per_token`` — exact and analytic size accounting
+                        (metadata included), shared by the codec reports and
+                        the roofline model.
+
+Built-in layouts: ``raw`` (bf16, exact), ``packed`` (error-bounded quantizer
++ no-straddle bit-packing), ``kivi`` (fixed-bit baseline), and ``huffman``
+(the paper's maximal-ratio path promoted to a servable layout: per-block
+Huffman streams with u16 per-stream bit counts, decoded by the
+branch-divergence-free tree walk).  Register new ones with
+``@register_layout("name")``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack, huffman
+
+Array = jax.Array
+
+RAW_BITS_PER_VALUE = 16  # KV caches are bf16/fp16 at rest
+
+
+def bits_for_rel_scale(rel_scale: float) -> int:
+    """Static bit width that covers every code of an error-bounded quantizer:
+    max code = round(1/rel_scale)."""
+    return max(1, math.ceil(math.log2(round(1.0 / rel_scale) + 1)))
+
+
+# ---------------------------------------------------------------------------
+# Size accounting (paper §3.3.2 ~1/128 metadata analysis)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RatioReport:
+    """Exact size accounting for one compressed tensor."""
+
+    n_values: int
+    payload_bits: int
+    scale_bits: int
+    stream_meta_bits: int
+    offset_meta_bits: int
+    codebook_bits: int
+
+    @property
+    def total_bits(self) -> int:
+        return (
+            self.payload_bits
+            + self.scale_bits
+            + self.stream_meta_bits
+            + self.offset_meta_bits
+            + self.codebook_bits
+        )
+
+    @property
+    def ratio(self) -> float:
+        return self.n_values * RAW_BITS_PER_VALUE / max(self.total_bits, 1)
+
+    @property
+    def bits_per_value(self) -> float:
+        return self.total_bits / max(self.n_values, 1)
+
+
+def raw_ratio(q) -> RatioReport:
+    """Uncompressed baseline: 16 bits/value, no metadata."""
+    return RatioReport(
+        n_values=int(q.codes.size),
+        payload_bits=int(q.codes.size) * RAW_BITS_PER_VALUE,
+        scale_bits=0,
+        stream_meta_bits=0,
+        offset_meta_bits=0,
+        codebook_bits=0,
+    )
+
+
+def kivi_ratio(q, bits: int) -> RatioReport:
+    """KIVI baseline: fixed b-bit payload + fp16 (min, step) per unit."""
+    return RatioReport(
+        n_values=int(q.codes.size),
+        payload_bits=int(q.codes.size) * bits,
+        scale_bits=q.meta_bits,
+        stream_meta_bits=0,
+        offset_meta_bits=0,
+        codebook_bits=0,
+    )
+
+
+def huffman_ratio(q, book: huffman.CodeBook, streams_shape: tuple[int, int]) -> RatioReport:
+    """KVComp Huffman path sizes from the histogram (exact expected bits)."""
+    hist = np.bincount(np.asarray(q.codes).reshape(-1), minlength=huffman.N_SYMBOLS)
+    payload = int((hist * book.lengths).sum())
+    n_streams = int(np.prod(q.codes.shape)) // streams_shape[1]
+    n_blocks = max(n_streams // streams_shape[0], 1)
+    return RatioReport(
+        n_values=int(q.codes.size),
+        payload_bits=payload,
+        scale_bits=q.meta_bits,
+        stream_meta_bits=n_streams * 16,  # u16 bit count per stream (per-thread metadata)
+        offset_meta_bits=n_blocks * 32,  # u32 offset per block (Block Offsets Array)
+        codebook_bits=book.serialized_bits,
+    )
+
+
+def packed_ratio(q, block_codes: int) -> RatioReport:
+    """TPU adaptive fixed-length path sizes."""
+    codes = np.asarray(q.codes).reshape(-1, block_codes)
+    mx = codes.max(axis=1).astype(np.int64)
+    b = np.maximum(np.ceil(np.log2(mx + 1)), 1).astype(np.int64)
+    payload = int((((block_codes * b) + 31) // 32 * 32).sum())
+    n_blocks = codes.shape[0]
+    return RatioReport(
+        n_values=int(q.codes.size),
+        payload_bits=payload,
+        scale_bits=q.meta_bits,
+        stream_meta_bits=n_blocks * 8,  # u8 width per block
+        offset_meta_bits=n_blocks * 32,
+        codebook_bits=0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared quantization primitive (paper §3.1.1)
+# ---------------------------------------------------------------------------
+
+
+def quant_block_minmax(x: Array, rel_scale: float, bits: int,
+                       unit_axes: tuple[int, ...], kivi: bool):
+    """Quantize one buffer block. x: [..., T, D] (f32). Returns codes u8 +
+    (min, step) with unit axes reduced."""
+    mn = jnp.min(x, axis=unit_axes, keepdims=True)
+    mx = jnp.max(x, axis=unit_axes, keepdims=True)
+    if kivi:
+        step = (mx - mn) / (2**bits - 1)
+    else:
+        step = rel_scale * (mx - mn)
+    safe = jnp.where(step > 0, step, 1.0)
+    codes = jnp.clip(jnp.round((x - mn) / safe), 0, 2**bits - 1).astype(jnp.uint8)
+    return codes, jnp.squeeze(mn, unit_axes), jnp.squeeze(step, unit_axes)
+
+
+# ---------------------------------------------------------------------------
+# The layout interface + registry
+# ---------------------------------------------------------------------------
+
+
+class CacheLayout:
+    """Strategy interface for one way of storing a layer's KV blocks.
+
+    Implementations are stateless singletons; every method receives the
+    static ``CacheSpec`` (hashable, lives in the pytree aux) and operates on
+    the six store arrays of a ``LayerKVCache`` (duck-typed — this module
+    never imports the cache container, so registration stays cycle-free).
+    """
+
+    name: str = "?"
+    # Eligible for the fused Pallas decode kernel (uniform no-straddle words).
+    supports_fused: bool = False
+    # size_report needs a fitted huffman.CodeBook passed via ``book=``.
+    needs_codebook: bool = False
+    # Offline quantizer family: fixed-bit (KIVI) vs error-bounded steps.
+    kivi_step: bool = False
+
+    # -- static properties ----------------------------------------------------
+    def bits_k(self, spec) -> int:
+        raise NotImplementedError
+
+    def bits_v(self, spec) -> int:
+        raise NotImplementedError
+
+    # -- cache storage --------------------------------------------------------
+    def init_store(self, spec, batch: int, n_kv_heads: int, head_dim: int, dtype):
+        """Allocate (k_store, k_min, k_step, v_store, v_min, v_step)."""
+        raise NotImplementedError
+
+    def write_blocks(self, spec, cache, slots: Array, kb: Array, vb: Array):
+        """Store stage: write raw blocks kb/vb [B, H, n, T, D] into ring
+        slots [n] (out-of-range slot = drop sentinel).  Returns the six
+        updated store arrays."""
+        raise NotImplementedError
+
+    def fetch(self, spec, cache):
+        """Fetch stage (XLA path): dequantized K and V [B, H, NB, T, D]."""
+        return self.decompress_k(spec, cache), self.decompress_v(spec, cache)
+
+    def decompress_k(self, spec, cache) -> Array:
+        raise NotImplementedError
+
+    def decompress_v(self, spec, cache) -> Array:
+        raise NotImplementedError
+
+    def attend_block(self, cache, q: Array, scale: float | None = None) -> Array:
+        """Decode attention over (store ∥ buffer).  The generic path
+        dequantizes via ``fetch`` and runs a joint softmax; fused-eligible
+        layouts can instead be routed through ``repro.kernels.ops``."""
+        from repro.core import cache as kvcache  # late: cache imports us
+
+        return kvcache.attend(cache, q, scale)
+
+    # -- size accounting ------------------------------------------------------
+    def size_report(self, q, *, block_size: int, head_dim: int,
+                    kivi_bits: int = 2, book: huffman.CodeBook | None = None) -> RatioReport:
+        """Exact accounting for a quantized tensor stored under this layout."""
+        raise NotImplementedError
+
+    def bytes_per_token(self, spec, n_kv_heads: int, head_dim: int) -> float:
+        """Analytic HBM bytes per cached token per layer (payload + scales);
+        feeds the dry-run roofline model."""
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, CacheLayout] = {}
+
+
+def register_layout(name: str):
+    """Class decorator: instantiate and register a layout under ``name``."""
+
+    def deco(cls):
+        inst = cls()
+        inst.name = name
+        _REGISTRY[name] = inst
+        return cls
+
+    return deco
+
+
+def get_layout(name: str) -> CacheLayout:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown cache layout {name!r}; available: {available_layouts()}"
+        ) from None
+
+
+def available_layouts() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# raw: bf16 blocks, no compression (the exactness baseline)
+# ---------------------------------------------------------------------------
+
+
+@register_layout("raw")
+class RawLayout(CacheLayout):
+    def bits_k(self, spec) -> int:
+        return RAW_BITS_PER_VALUE
+
+    def bits_v(self, spec) -> int:
+        return RAW_BITS_PER_VALUE
+
+    def init_store(self, spec, batch, n_kv_heads, head_dim, dtype):
+        B, H, T, D, NB = batch, n_kv_heads, spec.block_size, head_dim, spec.n_blocks
+        k_store = jnp.zeros((B, H, NB, T, D), dtype)
+        v_store = jnp.zeros((B, H, NB, T, D), dtype)
+        dummy = jnp.zeros((1,), dtype)
+        return k_store, dummy, dummy, v_store, dummy, dummy
+
+    def write_blocks(self, spec, cache, slots, kb, vb):
+        dt = cache.k_store.dtype
+        k_store = cache.k_store.at[:, :, slots].set(kb.astype(dt), mode="drop")
+        v_store = cache.v_store.at[:, :, slots].set(vb.astype(dt), mode="drop")
+        return (k_store, cache.k_min, cache.k_step,
+                v_store, cache.v_min, cache.v_step)
+
+    def decompress_k(self, spec, cache):
+        return cache.k_store
+
+    def decompress_v(self, spec, cache):
+        return cache.v_store
+
+    def size_report(self, q, *, block_size, head_dim, kivi_bits=2, book=None):
+        return raw_ratio(q)
+
+    def bytes_per_token(self, spec, n_kv_heads, head_dim):
+        return 2.0 * n_kv_heads * head_dim * 2  # K+V bf16
+
+
+# ---------------------------------------------------------------------------
+# packed: error-bounded quantizer + no-straddle bit-packing (the TPU path)
+# ---------------------------------------------------------------------------
+
+
+@register_layout("packed")
+class PackedLayout(CacheLayout):
+    supports_fused = True
+
+    def bits_k(self, spec) -> int:
+        return bits_for_rel_scale(spec.rel_scale_k)
+
+    def bits_v(self, spec) -> int:
+        return bits_for_rel_scale(spec.rel_scale_v)
+
+    def init_store(self, spec, batch, n_kv_heads, head_dim, dtype):
+        B, H, T, D, NB = batch, n_kv_heads, spec.block_size, head_dim, spec.n_blocks
+        k_store = jnp.zeros((B, H, NB, spec.words_k(D)), jnp.uint32)
+        v_store = jnp.zeros((B, H, NB, spec.words_v(D)), jnp.uint32)
+        k_min = jnp.zeros((B, H, NB, D), dtype)
+        k_step = jnp.zeros((B, H, NB, D), dtype)
+        v_min = jnp.zeros((B, H, NB, T), dtype)
+        v_step = jnp.zeros((B, H, NB, T), dtype)
+        return k_store, k_min, k_step, v_store, v_min, v_step
+
+    def quantize_blocks(self, spec, k: Array, v: Array):
+        """Shared lossy stage for every quantizing layout: [B, H, NB, T, D]
+        raw blocks -> (codes u8, min, step) per tensor.  K: BlockQuant —
+        min/max over the block's T tokens, per channel; V: TokenQuant —
+        min/max over D, per token."""
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        k_codes, k_mn, k_st = quant_block_minmax(
+            kf, spec.rel_scale_k, spec.bits_k, (-2,), self.kivi_step)
+        v_codes, v_mn, v_st = quant_block_minmax(
+            vf, spec.rel_scale_v, spec.bits_v, (-1,), self.kivi_step)
+        return k_codes, k_mn, k_st, v_codes, v_mn, v_st
+
+    def compress_blocks(self, spec, k: Array, v: Array):
+        """Compress [B, H, NB, T, D] raw blocks -> packed stores + scales."""
+        k_codes, k_mn, k_st, v_codes, v_mn, v_st = self.quantize_blocks(spec, k, v)
+        B, H, NB, T, D = k.shape
+        k_store = bitpack.pack_nostraddle(k_codes.reshape(B, H, NB, T * D), spec.bits_k)
+        v_store = bitpack.pack_nostraddle(v_codes.reshape(B, H, NB, T * D), spec.bits_v)
+        dt = jnp.bfloat16
+        return (k_store, k_mn.astype(dt), k_st.astype(dt),
+                v_store, v_mn.astype(dt), v_st.astype(dt))
+
+    def write_blocks(self, spec, cache, slots, kb, vb):
+        ks, kmn, kst, vs, vmn, vst = self.compress_blocks(spec, kb, vb)
+        return (
+            cache.k_store.at[:, :, slots].set(ks, mode="drop"),
+            cache.k_min.at[:, :, slots].set(kmn, mode="drop"),
+            cache.k_step.at[:, :, slots].set(kst, mode="drop"),
+            cache.v_store.at[:, :, slots].set(vs, mode="drop"),
+            cache.v_min.at[:, :, slots].set(vmn, mode="drop"),
+            cache.v_step.at[:, :, slots].set(vst, mode="drop"),
+        )
+
+    def decompress_k(self, spec, cache):
+        B, H, NB, _ = cache.k_store.shape
+        T, D = spec.block_size, cache.head_dim
+        codes = bitpack.unpack_nostraddle(
+            cache.k_store, spec.bits_k, T * D).reshape(B, H, NB, T, D)
+        return (cache.k_min[:, :, :, None, :].astype(jnp.float32)
+                + codes.astype(jnp.float32)
+                * cache.k_step[:, :, :, None, :].astype(jnp.float32)
+                ).astype(jnp.bfloat16)
+
+    def decompress_v(self, spec, cache):
+        B, H, NB, _ = cache.v_store.shape
+        T, D = spec.block_size, cache.head_dim
+        codes = bitpack.unpack_nostraddle(
+            cache.v_store, spec.bits_v, T * D).reshape(B, H, NB, T, D)
+        return (cache.v_min[:, :, :, :, None].astype(jnp.float32)
+                + codes.astype(jnp.float32)
+                * cache.v_step[:, :, :, :, None].astype(jnp.float32)
+                ).astype(jnp.bfloat16)
+
+    def size_report(self, q, *, block_size, head_dim, kivi_bits=2, book=None):
+        return packed_ratio(q, block_size * head_dim)
+
+    def bytes_per_token(self, spec, n_kv_heads, head_dim):
+        payload = n_kv_heads * head_dim * (spec.bits_k + spec.bits_v) / 8
+        # scales: K per (block, channel) 2x bf16; V per token 2x bf16
+        meta = n_kv_heads * (2 * head_dim * 2 * 2 / spec.block_size + 2 * 2)
+        return payload + meta
+
+
+# ---------------------------------------------------------------------------
+# kivi: fixed-bit asymmetric baseline (paper §4.1)
+# ---------------------------------------------------------------------------
+
+
+@register_layout("kivi")
+class KiviLayout(PackedLayout):
+    kivi_step = True  # step = (max−min)/(2^b − 1)
+
+    def bits_k(self, spec) -> int:
+        return spec.kivi_bits
+
+    def bits_v(self, spec) -> int:
+        return spec.kivi_bits
+
+    def size_report(self, q, *, block_size, head_dim, kivi_bits=2, book=None):
+        return kivi_ratio(q, kivi_bits)
+
+
+# ---------------------------------------------------------------------------
+# huffman: the paper's maximal-ratio path as a servable layout
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def default_codebook(n_codes: int) -> huffman.CodeBook:
+    """Static prior codebook covering codes [0, n_codes).
+
+    A servable layout needs a codebook available at trace time with static
+    shapes, so the layout ships a deterministic prior (triangular, peaked at
+    the code range's center — the error-bounded quantizer's codes of
+    LLM-like data are bell-shaped, paper Fig. 3) instead of the offline
+    codec's per-layer fitted histograms.  Coverage of the full code range
+    guarantees losslessness for any input; fitted codebooks remain available
+    through ``repro.core.codec.KVCompCodec`` (DESIGN.md §4).
+    """
+    hist = np.zeros(huffman.N_SYMBOLS, np.int64)
+    c = np.arange(n_codes, dtype=np.float64)
+    center = (n_codes - 1) / 2.0
+    hist[:n_codes] = 1 + np.round(1000.0 * (n_codes - np.abs(c - center))).astype(np.int64)
+    return huffman.build_codebook(hist)
+
+
+def _pack_u16_pairs(nbits: Array) -> Array:
+    """u16 [S] per-stream bit counts -> u32 [(S+1)//2] header words."""
+    S = nbits.shape[0]
+    nb = nbits.astype(jnp.uint32)
+    if S % 2:
+        nb = jnp.concatenate([nb, jnp.zeros((1,), jnp.uint32)])
+    return nb[0::2] | (nb[1::2] << 16)
+
+
+def _unpack_u16_pairs(hdr: Array, S: int) -> Array:
+    lo = hdr & jnp.uint32(0xFFFF)
+    hi = hdr >> 16
+    return jnp.stack([lo, hi], axis=-1).reshape(-1)[:S].astype(jnp.uint16)
+
+
+@register_layout("huffman")
+class HuffmanLayout(PackedLayout):
+    """Huffman-coded blocks behind the same six-array cache contract.
+
+    Slot layout (per compression block, K and V alike): ``(T+1)//2`` header
+    words holding the T per-stream u16 bit counts (one stream per token, D
+    symbols each — the paper's per-thread metadata), followed by a
+    worst-case-sized payload region (``T·D·max_code_len`` bits under the
+    static prior codebook).  Quantization scales are stored exactly as in
+    the packed layout, so ``q·(m + s∘c)`` algebra still applies after the
+    tree-walk decode.  Allocated capacity is worst-case; ``size_report``
+    accounts the *actual* entropy-coded bits (DESIGN.md §4).
+    """
+
+    supports_fused = False  # payload is ragged inside the slot
+    needs_codebook = True
+
+    # -- codebooks (static prior; see default_codebook) ----------------------
+    def _n_codes(self, spec, bits: int, rel_scale: float) -> int:
+        n = round(1.0 / rel_scale) + 1
+        return int(min(n, 2**bits, huffman.N_SYMBOLS))
+
+    def book_k(self, spec) -> huffman.CodeBook:
+        return default_codebook(self._n_codes(spec, spec.bits_k, spec.rel_scale_k))
+
+    def book_v(self, spec) -> huffman.CodeBook:
+        return default_codebook(self._n_codes(spec, spec.bits_v, spec.rel_scale_v))
+
+    def _slot_words(self, spec, head_dim: int, book: huffman.CodeBook) -> tuple[int, int]:
+        """(header_words, payload_words) for one block's slot."""
+        T = spec.block_size
+        maxlen = int(book.lengths.max())
+        hdr = (T + 1) // 2
+        payload = (T * head_dim * maxlen + 31) // 32 + 1
+        return hdr, payload
+
+    def init_store(self, spec, batch, n_kv_heads, head_dim, dtype):
+        B, H, T, D, NB = batch, n_kv_heads, spec.block_size, head_dim, spec.n_blocks
+        hk, pk = self._slot_words(spec, D, self.book_k(spec))
+        hv, pv = self._slot_words(spec, D, self.book_v(spec))
+        k_store = jnp.zeros((B, H, NB, hk + pk), jnp.uint32)
+        v_store = jnp.zeros((B, H, NB, hv + pv), jnp.uint32)
+        k_min = jnp.zeros((B, H, NB, D), dtype)
+        k_step = jnp.zeros((B, H, NB, D), dtype)
+        v_min = jnp.zeros((B, H, NB, T), dtype)
+        v_step = jnp.zeros((B, H, NB, T), dtype)
+        return k_store, k_min, k_step, v_store, v_min, v_step
+
+    def _encode(self, spec, codes: Array, book: huffman.CodeBook) -> Array:
+        """codes u8 [B, H, n, T, D] -> slots u32 [B, H, n, hdr+payload]."""
+        B, H, n, T, D = codes.shape
+        hdr_w, pay_w = self._slot_words(spec, D, book)
+        cl, ln = book.as_encode_tables()
+
+        def enc(blk):  # [T, D]
+            payload, nbits, _ = huffman.encode_block_jax(blk, cl, ln, pay_w)
+            return jnp.concatenate([_pack_u16_pairs(nbits), payload])
+
+        slots = jax.vmap(enc)(codes.reshape(B * H * n, T, D))
+        return slots.reshape(B, H, n, hdr_w + pay_w)
+
+    def _decode(self, spec, store: Array, head_dim: int, book: huffman.CodeBook) -> Array:
+        """slots u32 [B, H, NB, W] -> codes u8 [B, H, NB, T, D]."""
+        B, H, NB, _ = store.shape
+        T, D = spec.block_size, head_dim
+        hdr_w, _ = self._slot_words(spec, D, book)
+        maxlen = int(book.lengths.max())
+        ch, isym, sym = book.as_device_tables()
+
+        def dec(slot):  # [hdr+payload]
+            nbits = _unpack_u16_pairs(slot[:hdr_w], T)
+            return huffman.decode_block_jax(
+                slot[hdr_w:], nbits, ch, isym, sym, D, D * maxlen)
+
+        codes = jax.vmap(dec)(store.reshape(B * H * NB, -1))
+        return codes.reshape(B, H, NB, T, D)
+
+    def write_blocks(self, spec, cache, slots, kb, vb):
+        k_codes, k_mn, k_st, v_codes, v_mn, v_st = self.quantize_blocks(spec, kb, vb)
+        ks = self._encode(spec, k_codes, self.book_k(spec))
+        vs = self._encode(spec, v_codes, self.book_v(spec))
+        dt = jnp.bfloat16
+        return (
+            cache.k_store.at[:, :, slots].set(ks, mode="drop"),
+            cache.k_min.at[:, :, slots].set(k_mn.astype(dt), mode="drop"),
+            cache.k_step.at[:, :, slots].set(k_st.astype(dt), mode="drop"),
+            cache.v_store.at[:, :, slots].set(vs, mode="drop"),
+            cache.v_min.at[:, :, slots].set(v_mn.astype(dt), mode="drop"),
+            cache.v_step.at[:, :, slots].set(v_st.astype(dt), mode="drop"),
+        )
+
+    def decompress_k(self, spec, cache):
+        codes = self._decode(spec, cache.k_store, cache.head_dim, self.book_k(spec))
+        return (cache.k_min[:, :, :, None, :].astype(jnp.float32)
+                + codes.astype(jnp.float32)
+                * cache.k_step[:, :, :, None, :].astype(jnp.float32)
+                ).astype(jnp.bfloat16)
+
+    def decompress_v(self, spec, cache):
+        codes = self._decode(spec, cache.v_store, cache.head_dim, self.book_v(spec))
+        return (cache.v_min[:, :, :, :, None].astype(jnp.float32)
+                + codes.astype(jnp.float32)
+                * cache.v_step[:, :, :, :, None].astype(jnp.float32)
+                ).astype(jnp.bfloat16)
+
+    def size_report(self, q, *, block_size, head_dim, kivi_bits=2, book=None):
+        assert book is not None, "huffman size_report needs a fitted codebook"
+        return huffman_ratio(q, book, (block_size, head_dim))
+
+    def bytes_per_token(self, spec, n_kv_heads, head_dim):
+        # Allocated (worst-case slot) bytes — what HBM actually holds; the
+        # entropy win shows up in size_report's expected-bits accounting.
+        T = spec.block_size
+        hk, pk = self._slot_words(spec, head_dim, self.book_k(spec))
+        hv, pv = self._slot_words(spec, head_dim, self.book_v(spec))
+        payload = n_kv_heads * 4.0 * (hk + pk + hv + pv) / T
+        meta = n_kv_heads * (2 * head_dim * 2 * 2 / T + 2 * 2)
+        return payload + meta

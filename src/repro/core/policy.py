@@ -1,0 +1,105 @@
+"""Compression policies: the paper's LLM-aware knobs as one declarative
+object (DESIGN.md §7).
+
+KVComp's quantizer is *LLM-aware*: K and V get different granularities and
+error bounds, and follow-up work (PackKV) shows the right setting also varies
+per layer.  ``CompressionPolicy`` captures that whole configuration space —
+a base (layout, block_size, per-tensor rel_scale/bits) plus per-layer
+overrides — and resolves it to per-layer ``CacheSpec``s that the model,
+engine, and dry-run all consume.
+
+Everything here is a frozen dataclass of scalars/tuples, so policies are
+hashable and can ride in jit static args and pytree aux data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.cache import CacheSpec
+from repro.core.layouts import get_layout
+
+# The paper's Fig. 5 turning points — the single source for every default
+# rel_scale (CompressionPolicy fields and the None-fallback in spec_for_layer).
+DEFAULT_REL_SCALE_K = 0.05
+DEFAULT_REL_SCALE_V = 0.15
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorPolicy:
+    """Per-tensor (K or V) quantizer knobs; ``None`` = inherit."""
+
+    rel_scale: float | None = None
+    bits: int | None = None
+
+    def merged(self, base: "TensorPolicy") -> "TensorPolicy":
+        return TensorPolicy(
+            rel_scale=self.rel_scale if self.rel_scale is not None else base.rel_scale,
+            bits=self.bits if self.bits is not None else base.bits,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerOverride:
+    """Overrides applied to an explicit set of attention-layer indices."""
+
+    layers: tuple[int, ...]
+    layout: str | None = None
+    block_size: int | None = None
+    k: TensorPolicy = TensorPolicy()
+    v: TensorPolicy = TensorPolicy()
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPolicy:
+    """Layout + quantizer configuration for a whole model's KV caches."""
+
+    layout: str = "packed"
+    block_size: int = 64
+    k: TensorPolicy = TensorPolicy(rel_scale=DEFAULT_REL_SCALE_K)
+    v: TensorPolicy = TensorPolicy(rel_scale=DEFAULT_REL_SCALE_V)
+    kivi_bits: int = 2
+    overrides: tuple[LayerOverride, ...] = ()
+
+    def __post_init__(self):
+        get_layout(self.layout)  # fail fast on unknown names
+        for ov in self.overrides:
+            if ov.layout is not None:
+                get_layout(ov.layout)
+
+    @property
+    def uniform(self) -> bool:
+        """True when every layer resolves to the same spec (scan-friendly)."""
+        return not self.overrides
+
+    def resolve(self, layer: int) -> "CompressionPolicy":
+        """Collapse overrides for one layer into an override-free policy."""
+        layout, block, k, v = self.layout, self.block_size, self.k, self.v
+        for ov in self.overrides:
+            if layer in ov.layers:
+                layout = ov.layout if ov.layout is not None else layout
+                block = ov.block_size if ov.block_size is not None else block
+                k = ov.k.merged(k)
+                v = ov.v.merged(v)
+        return CompressionPolicy(layout=layout, block_size=block, k=k, v=v,
+                                 kivi_bits=self.kivi_bits)
+
+    def spec_for_layer(self, layer: int, *, max_seq: int,
+                       window: int | None = None) -> CacheSpec:
+        r = self.resolve(layer)
+        return CacheSpec(
+            layout=r.layout,
+            block_size=r.block_size,
+            rel_scale_k=r.k.rel_scale if r.k.rel_scale is not None else DEFAULT_REL_SCALE_K,
+            rel_scale_v=r.v.rel_scale if r.v.rel_scale is not None else DEFAULT_REL_SCALE_V,
+            kivi_bits=r.kivi_bits,
+            max_seq=max_seq,
+            window=window,
+            bits_k_override=r.k.bits,
+            bits_v_override=r.v.bits,
+        )
+
+    def layer_specs(self, n_layers: int, *, max_seq: int,
+                    window: int | None = None) -> tuple[CacheSpec, ...]:
+        return tuple(self.spec_for_layer(i, max_seq=max_seq, window=window)
+                     for i in range(n_layers))

@@ -74,10 +74,17 @@ def fused_decode_attention(
 
 
 def cache_decode_attention(cache, q: Array, impl: str = "auto", interpret: bool = True):
-    """Convenience: fused decode attention straight from a LayerKVCache."""
+    """Convenience: fused decode attention straight from a LayerKVCache.
+
+    Only layouts that advertise ``supports_fused`` (uniform no-straddle
+    words) can enter the Pallas kernel; others must use the generic
+    ``repro.core.cache.attend`` fetch path.
+    """
     spec = cache.spec
-    if spec.layout == "raw":
-        raise ValueError("fused kernel requires a packed/kivi layout")
+    if not spec.impl.supports_fused:
+        raise ValueError(
+            f"fused kernel requires a fused-capable layout "
+            f"(got {spec.layout!r}; see layouts.CacheLayout.supports_fused)")
     return fused_decode_attention(
         q,
         cache.k_store, cache.k_min, cache.k_step,

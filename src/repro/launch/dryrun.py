@@ -348,21 +348,20 @@ def analytic_memory_bytes(cfg: ModelConfig, shape_name: str, chips: int) -> floa
     d = cfg.d_model
 
     def kv_bytes_per_token_layer() -> float:
-        """Bytes per cached token per attention layer under cache_layout."""
+        """Bytes per cached token per attention layer, averaged over the
+        CompressionPolicy's per-layer resolved layouts (each CacheLayout
+        owns its analytic size model — no layout-name branching here)."""
         if not cfg.has_attention:
             return 0.0
-        Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
-        raw = 2 * Hkv * Dh * 2  # K+V bf16
-        if cfg.cache_layout == "raw":
-            return raw
-        from repro.core.cache import bits_for_rel_scale
+        from repro.core import layouts as cache_layouts
 
-        bk = bits_for_rel_scale(cfg.rel_scale_k)
-        bv = bits_for_rel_scale(cfg.rel_scale_v)
-        payload = Hkv * Dh * (bk + bv) / 8
-        # scales: K per (block, channel) 2x bf16; V per token 2x bf16
-        meta = Hkv * (2 * Dh * 2 * 2 / cfg.cache_block + 2 * 2)
-        return payload + meta
+        Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        specs = M.cache_specs(cfg, S)
+        if not specs:
+            return 0.0
+        per_layer = [cache_layouts.get_layout(sp.layout).bytes_per_token(sp, Hkv, Dh)
+                     for sp in specs]
+        return sum(per_layer) / len(per_layer)
 
     def n_attn_layers() -> int:
         if cfg.family == "hybrid":

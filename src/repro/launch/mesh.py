@@ -3,11 +3,16 @@
 ``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
 importing this module never touches jax device state — required because the
 dry-run must set XLA_FLAGS before any jax initialization.
+
+Mesh creation goes through ``repro.distributed.sharding.make_mesh``, which
+hides the jax-version split around ``jax.sharding.AxisType``.
 """
 
 from __future__ import annotations
 
 import jax
+
+from repro.distributed.sharding import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,9 +21,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     DCN-connected outermost axis (pure DP + compressed grad all-reduce)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(max_devices: int | None = None):
@@ -27,7 +30,5 @@ def make_host_mesh(max_devices: int | None = None):
     # favor a model axis that divides n
     for m in (8, 4, 2, 1):
         if n % m == 0:
-            return jax.make_mesh(
-                (n // m, m), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            return make_mesh((n // m, m), ("data", "model"))
     raise RuntimeError("no devices")

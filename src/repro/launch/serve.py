@@ -23,7 +23,10 @@ from repro.serve.engine import Engine, EngineConfig, Request, cache_memory_repor
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi_6b")
-    ap.add_argument("--layout", default="packed", choices=["raw", "packed", "kivi"])
+    from repro import api
+
+    ap.add_argument("--layout", default="packed",
+                    choices=list(api.available_layouts()))
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--new-tokens", type=int, default=16)

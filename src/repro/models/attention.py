@@ -7,9 +7,12 @@ keeps peak activation memory at O(S·chunk) instead of O(S²) — required for
 the 32k-prefill shapes.  Causal and sliding-window masks are applied per
 chunk pair.
 
-Decode attends against a ``repro.core.cache.LayerKVCache`` (raw / KIVI /
-KVComp-packed) and appends the new token's KV — compression is on the hot
-path exactly as in the paper.
+Decode attends against a ``repro.core.cache.LayerKVCache`` and appends the
+new token's KV — compression is on the hot path exactly as in the paper.
+The cache's encoding is whatever ``CacheLayout`` the layer's ``CacheSpec``
+names (raw / packed / kivi / huffman / user-registered; DESIGN.md §4), and
+per-layer specs arrive from the model's ``CompressionPolicy`` — this module
+is layout-agnostic and never branches on the layout name.
 """
 
 from __future__ import annotations
@@ -203,7 +206,9 @@ def attn_block_prefill(params, cfg: ModelConfig, x: Array, positions: Array,
                        spec: kvcache.CacheSpec,
                        q_chunk: int = 512, kv_chunk: int = 512,
                        unroll: bool = False):
-    """Like train, but also builds this layer's compressed cache (Store)."""
+    """Like train, but also builds this layer's compressed cache (Store).
+    ``spec`` is this layer's resolved CacheSpec (a CompressionPolicy may
+    give every layer a different one)."""
     h = layers.rms_norm(x, params["ln_attn"], cfg.norm_eps)
     q, k, v = qkv_project(params["attn"], cfg, h, positions)
     o = flash_attention(

@@ -48,14 +48,30 @@ class ModelConfig:
     # hybrid (Zamba2-style): every `hybrid_period`-th block is a SHARED
     # attention+MLP block; the rest are Mamba2 blocks.
     hybrid_period: int = 0
-    # KV-cache compression (the paper's technique)
-    cache_layout: str = "packed"  # raw | packed | kivi
+    # KV-cache compression (the paper's technique).  ``cache_layout`` names
+    # a registered repro.core.layouts.CacheLayout; ``cache_overrides`` is a
+    # tuple of repro.core.policy.LayerOverride for per-layer deviations.
+    cache_layout: str = "packed"  # any name in layouts.available_layouts()
     cache_block: int = 64
     rel_scale_k: float = 0.05
     rel_scale_v: float = 0.15
     kivi_bits: int = 2
+    cache_overrides: tuple = ()
     # numerics
     dtype: str = "bfloat16"
+
+    def compression_policy(self):
+        """The cache_* fields + overrides as one CompressionPolicy."""
+        from repro.core.policy import CompressionPolicy, TensorPolicy
+
+        return CompressionPolicy(
+            layout=self.cache_layout,
+            block_size=self.cache_block,
+            k=TensorPolicy(rel_scale=self.rel_scale_k),
+            v=TensorPolicy(rel_scale=self.rel_scale_v),
+            kivi_bits=self.kivi_bits,
+            overrides=tuple(self.cache_overrides),
+        )
 
     @property
     def resolved_head_dim(self) -> int:

@@ -225,20 +225,42 @@ def forward(params, cfg: ModelConfig, batch, *, remat: bool = False,
 # ---------------------------------------------------------------------------
 
 
+def n_cache_layers(cfg: ModelConfig) -> int:
+    """How many KV caches the decode state holds (hybrid: one per period)."""
+    if cfg.family in ("dense", "moe"):
+        return cfg.n_layers
+    if cfg.family == "hybrid":
+        return _hybrid_counts(cfg)[0]
+    return 0
+
+
+def cache_specs(cfg: ModelConfig, max_seq: int) -> tuple[kvcache.CacheSpec, ...]:
+    """Per-cache-layer specs resolved from the model's CompressionPolicy."""
+    return cfg.compression_policy().layer_specs(
+        n_cache_layers(cfg), max_seq=max_seq, window=cfg.sliding_window)
+
+
 def cache_spec(cfg: ModelConfig, max_seq: int) -> kvcache.CacheSpec:
-    return kvcache.CacheSpec(
-        layout=cfg.cache_layout,
-        block_size=cfg.cache_block,
-        rel_scale_k=cfg.rel_scale_k,
-        rel_scale_v=cfg.rel_scale_v,
-        kivi_bits=cfg.kivi_bits,
-        max_seq=max_seq,
-        window=cfg.sliding_window,
-    )
+    """Layer-0 spec (THE spec under a uniform policy — the common case)."""
+    return cfg.compression_policy().spec_for_layer(
+        0, max_seq=max_seq, window=cfg.sliding_window)
+
+
+def _check_nonuniform_supported(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        raise NotImplementedError(
+            "per-layer cache_overrides are not supported for hybrid models "
+            "(all periods share one weight-shared attention block)")
 
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
-    """Fresh (empty) decode state for all layers."""
+    """Fresh (empty) decode state for all layers.
+
+    Uniform policies stack the per-layer caches (scan-over-layers keeps the
+    HLO small); per-layer overrides give each layer its own spec/shape, so
+    the caches are held in a tuple and the layer loop unrolls.
+    """
+    policy = cfg.compression_policy()
     spec = cache_spec(cfg, max_seq)
 
     def stacked_cache(n):
@@ -247,7 +269,14 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bflo
         return jax.tree.map(lambda x: jnp.broadcast_to(x, (n, *x.shape)), one)
 
     if cfg.family in ("dense", "moe"):
-        return {"kv": stacked_cache(cfg.n_layers)}
+        if policy.uniform:
+            return {"kv": stacked_cache(cfg.n_layers)}
+        return {"kv": tuple(
+            kvcache.init_layer_cache(s, batch, cfg.n_kv_heads,
+                                     cfg.resolved_head_dim, dtype)
+            for s in cache_specs(cfg, max_seq))}
+    if not policy.uniform:
+        _check_nonuniform_supported(cfg)
     if cfg.family == "ssm":
         one = ssm.init_mamba_state(cfg, batch)
         return {"ssm": jax.tree.map(
@@ -273,25 +302,39 @@ def prefill(params, cfg: ModelConfig, batch, max_seq: int,
     x = _embed_input(params, cfg, batch)
     B, S = x.shape[0], x.shape[1]
     positions = jnp.arange(S)[None, :]
+    policy = cfg.compression_policy()
+    if not policy.uniform:
+        _check_nonuniform_supported(cfg)
     spec = cache_spec(cfg, max_seq)
 
     if cfg.family in ("dense", "moe"):
-        def body(carry, block_p):
-            x, positions = carry
-            x, cache = attention.attn_block_prefill(
-                block_p, cfg, x, positions, spec, q_chunk, kv_chunk, unroll)
+        def ffn(block_p, x):
             if cfg.family == "moe":
                 h = layers.rms_norm(x, block_p["ln_moe"], cfg.norm_eps)
                 y, _ = moe.moe_apply(block_p["moe"], cfg, h)
-                x = x + y
-            else:
-                h = layers.rms_norm(x, block_p["ln_mlp"], cfg.norm_eps)
-                x = x + layers.mlp(block_p["mlp"], h)
+                return x + y
+            h = layers.rms_norm(x, block_p["ln_mlp"], cfg.norm_eps)
+            return x + layers.mlp(block_p["mlp"], h)
+
+        def body(carry, block_p, layer_spec=spec):
+            x, positions = carry
+            x, cache = attention.attn_block_prefill(
+                block_p, cfg, x, positions, layer_spec, q_chunk, kv_chunk, unroll)
+            x = ffn(block_p, x)
             return (x, positions), cache
 
-        (x, _), caches = jax.lax.scan(body, (x, positions), params["blocks"],
-                                      unroll=unroll)
-        state = {"kv": caches}
+        if policy.uniform:
+            (x, _), caches = jax.lax.scan(body, (x, positions), params["blocks"],
+                                          unroll=unroll)
+            state = {"kv": caches}
+        else:
+            # Per-layer specs give per-layer cache shapes: unrolled loop.
+            caches = []
+            for i, layer_spec in enumerate(cache_specs(cfg, max_seq)):
+                block_p = jax.tree.map(lambda p: p[i], params["blocks"])
+                (x, _), cache = body((x, positions), block_p, layer_spec)
+                caches.append(cache)
+            state = {"kv": tuple(caches)}
     elif cfg.family == "ssm":
         def body(carry, block_p):
             out, st = ssm.mamba_block_prefill(block_p, cfg, carry, unroll=unroll)
@@ -355,9 +398,18 @@ def decode_step(params, cfg: ModelConfig, tokens, position, state,
                 x = x + layers.mlp(block_p["mlp"], h)
             return x, cache
 
-        x, caches = jax.lax.scan(body, x, (params["blocks"], state["kv"]),
-                                 unroll=unroll)
-        new_state = {"kv": caches}
+        if isinstance(state["kv"], (tuple, list)):
+            # Per-layer cache specs (CompressionPolicy overrides): unrolled.
+            caches = []
+            for i, cache in enumerate(state["kv"]):
+                block_p = jax.tree.map(lambda p: p[i], params["blocks"])
+                x, cache = body(x, (block_p, cache))
+                caches.append(cache)
+            new_state = {"kv": tuple(caches)}
+        else:
+            x, caches = jax.lax.scan(body, x, (params["blocks"], state["kv"]),
+                                     unroll=unroll)
+            new_state = {"kv": caches}
     elif cfg.family == "ssm":
         def body(carry, xs):
             block_p, st = xs

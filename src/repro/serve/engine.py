@@ -116,7 +116,11 @@ class Engine:
 
 def cache_memory_report(cfg: ModelConfig, state) -> dict:
     """Measured bytes of the decode state per layout — the serving-side
-    memory-reduction claim, computed from the actual arrays."""
+    memory-reduction claim, computed from the actual arrays.
+
+    Under a per-layer ``CompressionPolicy`` the KV entry also lists each
+    layer's resolved layout (the caches live in a tuple, one spec each).
+    """
     tot = 0
     kv = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
@@ -125,5 +129,9 @@ def cache_memory_report(cfg: ModelConfig, state) -> dict:
         keys = "/".join(str(getattr(p, "key", "")) for p in path)
         if "kv" in keys:
             kv += nbytes
-    return {"total_bytes": int(tot), "kv_bytes": int(kv),
-            "layout": cfg.cache_layout}
+    rep = {"total_bytes": int(tot), "kv_bytes": int(kv),
+           "layout": cfg.cache_layout}
+    caches = state.get("kv") if isinstance(state, dict) else None
+    if isinstance(caches, (tuple, list)):
+        rep["per_layer_layouts"] = [c.spec.layout for c in caches]
+    return rep

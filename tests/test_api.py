@@ -1,0 +1,199 @@
+"""Public facade + cache-layout registry: round-trip parity of every
+registered layout, huffman end-to-end decode agreement, per-layer
+CompressionPolicy overrides, unknown-layout error paths."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import cache as C
+from repro.core import layouts
+from repro.core.policy import CompressionPolicy, LayerOverride, TensorPolicy
+
+
+def _kvq(rng, B=2, Hkv=2, S=96, D=16):
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(B, Hkv * 2, D)).astype(np.float32))
+    return k, v, q
+
+
+def _policy(layout):
+    return CompressionPolicy(layout=layout, block_size=16,
+                             k=TensorPolicy(rel_scale=0.02),
+                             v=TensorPolicy(rel_scale=0.05))
+
+
+def test_available_layouts_has_builtins():
+    names = api.available_layouts()
+    assert {"raw", "packed", "kivi", "huffman"} <= set(names)
+
+
+@pytest.mark.parametrize("layout", ["raw", "packed", "kivi", "huffman"])
+def test_roundtrip_parity_all_layouts(layout, rng):
+    """compress -> decompress reconstructs within each layout's error bound;
+    attend through the facade tracks exact attention."""
+    k, v, q = _kvq(rng)
+    cache = api.compress(k, v, policy=_policy(layout), max_seq=256)
+    kd, vd = api.decompress(cache)
+    assert kd.shape == k.shape and vd.shape == v.shape
+    k_err = float(jnp.max(jnp.abs(kd.astype(jnp.float32) - k)))
+    v_err = float(jnp.max(jnp.abs(vd.astype(jnp.float32) - v)))
+    if layout == "raw":
+        assert k_err < 0.02 and v_err < 0.02  # bf16 rounding only
+    elif layout == "kivi":
+        assert k_err < 2.0 and v_err < 2.0  # 2-bit baseline: coarse
+    else:
+        # error-bounded quantizer: |x - x̂| <= step/2, step = rel·(max−min)
+        assert k_err < 0.1 and v_err < 0.2
+    out = api.attend(cache, q)
+    ref = C.reference_attend(k, v, q)
+    tol = 0.3 if layout == "kivi" else 0.05
+    assert float(jnp.max(jnp.abs(out - ref))) < tol
+
+
+@pytest.mark.parametrize("layout", ["raw", "packed", "kivi", "huffman"])
+def test_make_cache_serves_all_layouts(layout, rng):
+    """An empty api.make_cache must accept appends and serve attention."""
+    B, Hkv, D = 2, 2, 16
+    cache = api.make_cache(B, Hkv, D, policy=_policy(layout), max_seq=64)
+    rows = 20  # > block_size: exercises a compressed flush too
+    ks = jnp.asarray(rng.normal(size=(rows, B, Hkv, D)).astype(np.float32))
+    vs = jnp.asarray(rng.normal(size=(rows, B, Hkv, D)).astype(np.float32))
+    for t in range(rows):
+        cache = api.append(cache, ks[t], vs[t])
+    assert int(cache.total_len) == rows
+    q = jnp.asarray(rng.normal(size=(B, Hkv * 2, D)).astype(np.float32))
+    out = api.attend(cache, q)
+    ref = C.reference_attend(ks.transpose(1, 2, 0, 3), vs.transpose(1, 2, 0, 3), q)
+    tol = 0.5 if layout == "kivi" else 0.05  # 2-bit over a 16-token block
+    assert float(jnp.max(jnp.abs(out - ref))) < tol
+
+
+def test_huffman_end_to_end_decode_agreement(rng):
+    """Huffman is entropy coding on top of the packed quantizer: decoded
+    blocks must agree BIT-FOR-BIT with the packed layout's, through both the
+    prefill and the append/flush paths, and attention must match."""
+    k, v, q = _kvq(rng)
+    cp = api.compress(k, v, policy=_policy("packed"), max_seq=256)
+    ch = api.compress(k, v, policy=_policy("huffman"), max_seq=256)
+    kp, vp = cp.spec.impl.fetch(cp.spec, cp)
+    kh, vh = ch.spec.impl.fetch(ch.spec, ch)
+    assert bool(jnp.all(kp == kh)) and bool(jnp.all(vp == vh))
+    np.testing.assert_array_equal(np.asarray(api.attend(cp, q)),
+                                  np.asarray(api.attend(ch, q)))
+    # append until both flush one more block; agreement must survive
+    for t in range(16):
+        kn = jnp.asarray(rng.normal(size=k.shape[:2] + k.shape[-1:]).astype(np.float32))
+        vn = jnp.asarray(rng.normal(size=k.shape[:2] + k.shape[-1:]).astype(np.float32))
+        cp = api.append(cp, kn, vn)
+        ch = api.append(ch, kn, vn)
+    assert int(cp.n_flushed) == int(ch.n_flushed) == 7
+    kp, vp = cp.spec.impl.fetch(cp.spec, cp)
+    kh, vh = ch.spec.impl.fetch(ch.spec, ch)
+    assert bool(jnp.all(kp == kh)) and bool(jnp.all(vp == vh))
+
+
+def test_huffman_cache_decode_jits(rng):
+    """The servable huffman path must trace under jit (static capacities)."""
+    k, v, q = _kvq(rng, S=32)
+    spec = api.make_spec(_policy("huffman"), max_seq=64)
+
+    @jax.jit
+    def roundtrip(k, v, q):
+        cache = C.prefill(spec, k, v)
+        return C.attend(cache, q)
+
+    out = roundtrip(k, v, q)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_unknown_layout_name_errors(rng):
+    with pytest.raises(ValueError, match="unknown cache layout"):
+        layouts.get_layout("nope")
+    with pytest.raises(ValueError, match="unknown cache layout"):
+        CompressionPolicy(layout="nope")
+    with pytest.raises(ValueError, match="unknown cache layout"):
+        api.make_cache(1, 1, 8, policy=dataclasses.replace(
+            CompressionPolicy(), overrides=(LayerOverride(layers=(0,), layout="nope"),)))
+
+
+def test_register_layout_extends_registry():
+    @api.register_layout("test-alias-raw")
+    class AliasRaw(layouts.RawLayout):
+        pass
+
+    try:
+        assert "test-alias-raw" in api.available_layouts()
+        cache = api.make_cache(1, 1, 8, policy=CompressionPolicy(
+            layout="test-alias-raw", block_size=8), max_seq=32)
+        assert cache.spec.impl.name == "test-alias-raw"
+    finally:
+        layouts._REGISTRY.pop("test-alias-raw", None)
+
+
+def test_policy_resolves_per_layer_and_per_tensor():
+    pol = CompressionPolicy(
+        layout="packed", block_size=16,
+        k=TensorPolicy(rel_scale=0.05), v=TensorPolicy(rel_scale=0.15),
+        overrides=(
+            LayerOverride(layers=(1, 3), k=TensorPolicy(rel_scale=0.02)),
+            LayerOverride(layers=(3,), layout="kivi", v=TensorPolicy(bits=4)),
+        ))
+    specs = pol.layer_specs(4, max_seq=128)
+    assert [s.layout for s in specs] == ["packed", "packed", "packed", "kivi"]
+    assert specs[0].rel_scale_k == 0.05 and specs[1].rel_scale_k == 0.02
+    assert specs[3].rel_scale_k == 0.02          # both overrides compose
+    assert specs[3].bits_v == 4                  # explicit bits override
+    assert specs[0].bits_v == specs[1].bits_v    # untouched elsewhere
+    assert pol.uniform is False
+    assert CompressionPolicy().uniform is True
+
+
+def test_per_layer_overrides_reach_model_state(rng):
+    """A dense model under a non-uniform policy holds per-layer caches with
+    the right specs, and prefill+decode still work end-to-end."""
+    from repro.models import model as M
+    from repro.models import registry
+
+    cfg = dataclasses.replace(
+        registry.get_smoke_config("yi_6b"),
+        rel_scale_k=0.05,
+        cache_overrides=(
+            LayerOverride(layers=(1,), k=TensorPolicy(rel_scale=0.02)),
+        ))
+    params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)))}
+    lg, state = M.prefill(params, cfg, batch, max_seq=64, q_chunk=8, kv_chunk=8)
+    caches = state["kv"]
+    assert isinstance(caches, tuple) and len(caches) == cfg.n_layers
+    assert caches[0].spec.rel_scale_k == 0.05
+    assert caches[1].spec.rel_scale_k == 0.02
+    assert caches[0].spec.bits_k != caches[1].spec.bits_k  # shapes differ too
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (2,)))
+    lg2, state2 = M.decode_step(params, cfg, nxt, jnp.asarray(16, jnp.int32), state)
+    assert bool(jnp.isfinite(lg2).all())
+    assert state2["kv"][1].spec.rel_scale_k == 0.02
+    # fresh decode state mirrors the same per-layer structure
+    st0 = M.init_decode_state(cfg, 2, 64)
+    assert isinstance(st0["kv"], tuple)
+    assert st0["kv"][1].spec.bits_k == caches[1].spec.bits_k
+
+
+def test_estimate_ratio_orders_layouts(rng):
+    # head_dim must be realistic: per-stream u16 metadata amortizes over D
+    toks, H, D = 2048, 2, 64
+    k = jnp.asarray(rng.normal(size=(toks, H, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(toks, H, D)).astype(np.float32))
+    pol = lambda layout: CompressionPolicy(layout=layout, block_size=64)
+    r_raw = api.estimate_ratio(k, v, policy=pol("raw"))
+    r_packed = api.estimate_ratio(k, v, policy=pol("packed"))
+    r_huff = api.estimate_ratio(k, v, policy=pol("huffman"))
+    assert r_raw["ratio"] == pytest.approx(1.0)
+    assert r_packed["ratio"] > 1.0
+    # entropy coding beats fixed-length packing on the same codes
+    assert r_huff["ratio"] > r_packed["ratio"]

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the optional dev dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cache as C

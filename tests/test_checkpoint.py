@@ -66,8 +66,8 @@ def test_async_checkpointer(tmp_path, rng):
 def test_restore_with_resharding(tmp_path, rng):
     t = _tree(rng)
     store.save(tmp_path, 1, t)
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.distributed.sharding import make_mesh
+    mesh = make_mesh((1,), ("d",))
     shardings = jax.tree.map(
         lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()), t)
     restored, _ = store.restore(tmp_path, t, shardings=shardings)

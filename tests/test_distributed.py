@@ -42,9 +42,8 @@ def test_sharded_train_step_matches_single_device():
         losses = {}
         for shape, axes in [((4, 2), ("data", "model")), ((1, 1), ("data", "model"))]:
             n = shape[0] * shape[1]
-            mesh = jax.make_mesh(shape, axes,
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                                 devices=jax.devices()[:n])
+            from repro.distributed.sharding import make_mesh
+            mesh = make_mesh(shape, axes, devices=jax.devices()[:n])
             step, shapes, in_sh, out_sh = step_lib.build_train_artifacts(
                 cfg, mesh, scfg, bspecs)
             with mesh:
@@ -73,8 +72,8 @@ def test_cross_pod_grad_compress_runs():
         from repro.data.pipeline import SyntheticCorpus
 
         cfg = registry.get_smoke_config("qwen3_1_7b")
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.distributed.sharding import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         data = SyntheticCorpus(seq_len=16, global_batch=8, vocab_size=cfg.vocab_size)
         batch_np = data.batch_at(0)
         bspecs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch_np.items()}
@@ -118,8 +117,7 @@ def test_serve_decode_sharded_matches_unsharded():
         nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B,)))
         ref, _ = M.decode_step(params, cfg, nxt, jnp.asarray(S, jnp.int32), state)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = shd.make_mesh((2, 4), ("data", "model"))
         pshapes, axes = step_lib.shapes_and_axes(cfg)
         rules = shd.serve_rules(cfg, mesh)
         pshard = shd.make_param_shardings(axes, pshapes, rules, mesh)

@@ -5,13 +5,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
 
 
 def amesh(shape, names):
-    return AbstractMesh(shape, names)
-
-from repro.distributed import sharding as shd
+    return shd.abstract_mesh(shape, names)
 from repro.models import registry
 from repro.train import step as step_lib
 
