@@ -48,12 +48,13 @@ def _multi_kernel(cache):
         # plus the raw buffer
         kr = jnp.concatenate([kr, c.k_buf], axis=2)
         vr = jnp.concatenate([vr, c.v_buf], axis=2)
-        mask = jnp.arange(kr.shape[2]) < (jnp.minimum(c.n_flushed, spec.n_blocks)
-                                          * spec.block_size + c.buf_len)
+        valid = (jnp.minimum(c.n_flushed, spec.n_blocks)
+                 * spec.block_size + c.buf_len)  # [B] per-row
+        mask = jnp.arange(kr.shape[2])[None, :] < valid[:, None]
         s = jnp.einsum("bhgd,bhsd->bhgs",
                        q.reshape(B, Hkv, G, D).astype(jnp.float32),
                        kr.astype(jnp.float32)) / np.sqrt(D)
-        s = jnp.where(mask[None, None, None], s, -1e9)
+        s = jnp.where(mask[:, None, None], s, -1e9)
         w = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhgs,bhsd->bhgd", w, vr.astype(jnp.float32))
         return o.reshape(B, Hkv * G, D)

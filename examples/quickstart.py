@@ -78,7 +78,7 @@ for layout in api.available_layouts():
     err = float(jnp.max(jnp.abs(out - ref)))
     nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
     caches[layout] = (cache, nbytes)
-    print(f"  [{layout:8s}] total_len={int(cache.total_len)}  "
+    print(f"  [{layout:8s}] total_len={int(cache.total_len[0])}  "
           f"cache bytes={nbytes:>9,}  attend |Δ| vs exact={err:.3f}")
 
 bytes_raw = caches["raw"][1]

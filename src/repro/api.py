@@ -10,6 +10,11 @@ sizing KV caches.
     k2, v2 = api.decompress(cache)                   # reconstruct
     report = api.estimate_ratio(k, v, policy=policy) # exact size accounting
 
+    server = api.serve(cfg, params, max_slots=8)     # continuous batching
+    handle = server.submit(api.Request(prompt, max_new_tokens=64))
+    for tok in handle.tokens(): ...                  # streaming
+    result = handle.result()                         # or block for the rest
+
 Everything dispatches through the ``CacheLayout`` registry
 (``repro.core.layouts``): any layout registered with
 ``@register_layout(name)`` — including the four built-ins raw / packed /
@@ -26,14 +31,32 @@ import numpy as np
 from repro.core import cache as kvcache
 from repro.core import huffman, layouts, quant
 from repro.core.policy import CompressionPolicy, LayerOverride, TensorPolicy  # noqa: F401
+from repro.serve.scheduler import Handle, Request, Server, ServerConfig  # noqa: F401
 
 __all__ = [
     "CompressionPolicy", "TensorPolicy", "LayerOverride",
     "available_layouts", "register_layout", "make_spec", "make_cache",
     "compress", "decompress", "append", "attend", "estimate_ratio",
+    "serve", "Server", "ServerConfig", "Request", "Handle",
 ]
 
 register_layout = layouts.register_layout
+
+
+def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
+          pad_id: int = 0, policy: str = "fcfs",
+          q_chunk: int = 512, kv_chunk: int = 512) -> Server:
+    """Launch a continuous-batching server over ``cfg``'s cache policy.
+
+    Returns a ``repro.serve.scheduler.Server``: ``submit(Request) -> Handle``
+    with ``handle.result()`` / streaming ``handle.tokens()``; requests join
+    and leave decode slots mid-flight at their own per-row positions.
+    ``policy`` picks the admission order ("fcfs" or "ljf"; DESIGN.md §8).
+    """
+    return Server(cfg, params,
+                  ServerConfig(max_slots=max_slots, max_seq=max_seq,
+                               pad_id=pad_id, policy=policy),
+                  q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 
 def available_layouts() -> tuple[str, ...]:
@@ -78,11 +101,18 @@ def decompress(cache: kvcache.LayerKVCache):
     spec = cache.spec
     k_deq, v_deq = spec.impl.fetch(spec, cache)
     B, H, NB, T, D = k_deq.shape
-    nb = int(cache.n_flushed)
+    nf = np.asarray(cache.n_flushed)
+    bl = np.asarray(cache.buf_len)
+    if not ((nf == nf[0]).all() and (bl == bl[0]).all()):
+        raise ValueError(
+            "decompress needs uniform per-row lengths (rows of a continuous "
+            f"batch are at different positions: n_flushed={nf.tolist()}, "
+            f"buf_len={bl.tolist()}); decompress rows individually instead")
+    nb = int(nf[0])
     if nb > NB:
         raise ValueError("cache has evicted blocks; only the last "
                          f"{NB * T} store tokens are reconstructible")
-    buf = int(cache.buf_len)
+    buf = int(bl[0])
     k = jnp.concatenate(
         [k_deq.reshape(B, H, NB * T, D)[:, :, : nb * T], cache.k_buf[:, :, :buf]],
         axis=2)
@@ -102,7 +132,7 @@ def attend(cache: kvcache.LayerKVCache, q, scale: float | None = None):
     return kvcache.attend(cache, q, scale)
 
 
-def estimate_ratio(k, v=None, *, policy: CompressionPolicy | None = None,
+def estimate_ratio(k=None, v=None, *, policy: CompressionPolicy | None = None,
                    layer: int = 0, which: str = "both") -> dict:
     """Exact compression-ratio accounting of this policy on real tensors.
 
@@ -115,6 +145,9 @@ def estimate_ratio(k, v=None, *, policy: CompressionPolicy | None = None,
     """
     if which not in ("k", "v", "both"):
         raise ValueError(f"which must be k|v|both, got {which!r}")
+    if (which in ("k", "both") and k is None) or \
+            (which in ("v", "both") and v is None):
+        raise ValueError(f"which={which!r} needs the corresponding tensor(s)")
     ref = k if k is not None else v
     spec = make_spec(policy, layer=layer, max_seq=int(ref.shape[0]))
     lay = spec.impl

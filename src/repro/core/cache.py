@@ -27,9 +27,12 @@ Faithfulness notes
   (the XLA analogue of cache-resident decompression; the Pallas kernel in
   ``repro.kernels.fused_kv_attn`` does the same per VMEM tile).
 
-All lengths are uniform across the batch (the engine pads/aligns requests —
-see ``repro.serve.engine``); ``n_flushed`` and ``buf_len`` are scalars so the
-whole structure scans cleanly over layers.
+Lengths are **per row**: ``n_flushed`` and ``buf_len`` are ``i32 [B]``
+vectors, so every batch row advances (appends, flushes, attends) at its own
+sequence position — the contract the continuous-batching scheduler
+(``repro.serve.scheduler``) relies on when requests join and leave slots
+mid-flight.  Uniform batches are simply the special case where every row
+holds the same value, and the structure still scans cleanly over layers.
 """
 
 from __future__ import annotations
@@ -111,8 +114,8 @@ class LayerKVCache:
     while the raw layout stores bf16 [B, Hkv, NB, T, D] blocks with dummy
     scales.  Shared, layout-independent:
       k_buf / v_buf : bf16 [B, Hkv, T, D] — raw append buffer (residual window)
-      n_flushed : i32 [] — total blocks ever flushed (ring index for SWA)
-      buf_len   : i32 [] — valid entries in the buffer
+      n_flushed : i32 [B] — per-row total blocks ever flushed (ring index)
+      buf_len   : i32 [B] — per-row valid entries in the buffer
     """
 
     k_store: Array
@@ -151,8 +154,12 @@ class LayerKVCache:
         return self.k_buf.shape[-1]
 
     @property
+    def batch(self) -> int:
+        return self.k_buf.shape[0]
+
+    @property
     def total_len(self) -> Array:
-        """Tokens visible to attention (window-capped for SWA)."""
+        """Per-row tokens visible to attention (window-capped for SWA): [B]."""
         nb = jnp.minimum(self.n_flushed, self.spec.n_blocks)
         return nb * self.spec.block_size + self.buf_len
 
@@ -167,8 +174,8 @@ def init_layer_cache(spec: CacheSpec, batch: int, n_kv_heads: int, head_dim: int
         v_store=v_store, v_min=v_min, v_step=v_step,
         k_buf=jnp.zeros((B, H, T, D), dtype),
         v_buf=jnp.zeros((B, H, T, D), dtype),
-        n_flushed=jnp.zeros((), jnp.int32),
-        buf_len=jnp.zeros((), jnp.int32),
+        n_flushed=jnp.zeros((B,), jnp.int32),
+        buf_len=jnp.zeros((B,), jnp.int32),
         spec=spec,
     )
 
@@ -190,7 +197,8 @@ def prefill(spec: CacheSpec, k: Array, v: Array, dtype=jnp.bfloat16) -> LayerKVC
     if n_full:
         kb = k[:, :, (n_full - keep) * T : n_full * T].reshape(B, H, keep, T, D)
         vb = v[:, :, (n_full - keep) * T : n_full * T].reshape(B, H, keep, T, D)
-        slots = (jnp.arange(keep) + (n_full - keep)) % NB
+        slots = jnp.broadcast_to(
+            ((jnp.arange(keep) + (n_full - keep)) % NB)[None], (B, keep))
         (cache.k_store, cache.k_min, cache.k_step,
          cache.v_store, cache.v_min, cache.v_step) = spec.impl.write_blocks(
             spec, cache, slots, kb, vb)
@@ -198,8 +206,8 @@ def prefill(spec: CacheSpec, k: Array, v: Array, dtype=jnp.bfloat16) -> LayerKVC
     if rem:
         cache.k_buf = cache.k_buf.at[:, :, :rem].set(k[:, :, n_full * T :].astype(dtype))
         cache.v_buf = cache.v_buf.at[:, :, :rem].set(v[:, :, n_full * T :].astype(dtype))
-    cache.n_flushed = jnp.asarray(n_full, jnp.int32)
-    cache.buf_len = jnp.asarray(rem, jnp.int32)
+    cache.n_flushed = jnp.full((B,), n_full, jnp.int32)
+    cache.buf_len = jnp.full((B,), rem, jnp.int32)
     return cache
 
 
@@ -209,26 +217,35 @@ def prefill(spec: CacheSpec, k: Array, v: Array, dtype=jnp.bfloat16) -> LayerKVC
 
 
 def append(cache: LayerKVCache, k_new: Array, v_new: Array) -> LayerKVCache:
-    """Append one token's KV [B, Hkv, D]; flush the buffer into a compressed
-    block when it fills.  Pure function — returns the updated cache."""
+    """Append one token's KV [B, Hkv, D]; flush a row's buffer into a
+    compressed block when it fills.  Every row appends at its own ``buf_len``
+    and flushes independently (rows of a continuous batch are at different
+    positions).  Pure function — returns the updated cache."""
     spec = cache.spec
     T, NB = spec.block_size, spec.n_blocks
     dt = cache.k_buf.dtype
-    pos = cache.buf_len
-    k_buf = jax.lax.dynamic_update_slice_in_dim(
-        cache.k_buf, k_new[:, :, None, :].astype(dt), pos, axis=2)
-    v_buf = jax.lax.dynamic_update_slice_in_dim(
-        cache.v_buf, v_new[:, :, None, :].astype(dt), pos, axis=2)
-    will_flush = (pos + 1) == T
+    pos = cache.buf_len  # [B]
+    sel = jnp.arange(T)[None, :] == pos[:, None]  # [B, T] one-hot per row
+    k_buf = jnp.where(sel[:, None, :, None], k_new[:, :, None, :].astype(dt),
+                      cache.k_buf)
+    v_buf = jnp.where(sel[:, None, :, None], v_new[:, :, None, :].astype(dt),
+                      cache.v_buf)
+    will_flush = (pos + 1) == T  # [B]
 
     B, H, _, D = k_buf.shape
     kb = k_buf[:, :, None]  # [B, H, 1, T, D]
     vb = v_buf[:, :, None]
-    # NB = out-of-range drop sentinel when the buffer did not fill.
-    slots = jnp.where(will_flush, cache.n_flushed % NB, NB).reshape(1)
+    # NB = out-of-range drop sentinel for rows whose buffer did not fill.
+    slots = jnp.where(will_flush, cache.n_flushed % NB, NB)[:, None]  # [B, 1]
     staged = dataclasses.replace(cache, k_buf=k_buf, v_buf=v_buf)
-    (k_store, k_min, k_step, v_store, v_min, v_step) = spec.impl.write_blocks(
-        spec, staged, slots, kb, vb)
+    # Skip the encode entirely on the (T-1)/T steps where no row flushes —
+    # every write would be dropped, and for entropy-coding layouts the dead
+    # encode is the dominant per-token cost.
+    (k_store, k_min, k_step, v_store, v_min, v_step) = jax.lax.cond(
+        jnp.any(will_flush),
+        lambda c: spec.impl.write_blocks(spec, c, slots, kb, vb),
+        lambda c: (c.k_store, c.k_min, c.k_step, c.v_store, c.v_min, c.v_step),
+        staged)
     return LayerKVCache(
         k_store=k_store, k_min=k_min, k_step=k_step,
         v_store=v_store, v_min=v_min, v_step=v_step,
@@ -265,15 +282,16 @@ def attend(cache: LayerKVCache, q: Array, scale: float | None = None) -> Array:
     k_deq = k_deq.astype(jnp.float32)
     v_deq = v_deq.astype(jnp.float32)
     s_main = jnp.einsum("bhgd,bhntd->bhgnt", qg, k_deq) * scale
-    nb_valid = jnp.minimum(cache.n_flushed, NB)
-    block_ok = jnp.arange(NB) < nb_valid  # ring: any slot < nb_valid is live
-    s_main = jnp.where(block_ok[None, None, None, :, None], s_main, NEG_INF)
+    nb_valid = jnp.minimum(cache.n_flushed, NB)  # [B]
+    # ring: any slot < nb_valid is live — per row
+    block_ok = jnp.arange(NB)[None, :] < nb_valid[:, None]  # [B, NB]
+    s_main = jnp.where(block_ok[:, None, None, :, None], s_main, NEG_INF)
 
     kb = cache.k_buf.astype(jnp.float32)
     vb = cache.v_buf.astype(jnp.float32)
     s_buf = jnp.einsum("bhgd,bhtd->bhgt", qg, kb) * scale
-    buf_ok = jnp.arange(T) < cache.buf_len
-    s_buf = jnp.where(buf_ok[None, None, None, :], s_buf, NEG_INF)
+    buf_ok = jnp.arange(T)[None, :] < cache.buf_len[:, None]  # [B, T]
+    s_buf = jnp.where(buf_ok[:, None, None, :], s_buf, NEG_INF)
 
     logits = jnp.concatenate([s_main.reshape(B, Hkv, G, NB * T), s_buf], axis=-1)
     w = jax.nn.softmax(logits, axis=-1)

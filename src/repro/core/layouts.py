@@ -172,6 +172,21 @@ def quant_block_minmax(x: Array, rel_scale: float, bits: int,
 # ---------------------------------------------------------------------------
 
 
+def scatter_slots(store: Array, slots: Array, vals: Array) -> Array:
+    """Write per-row block payloads into ring slots of a store array.
+
+    store : [B, H, NB, ...]; slots : i32 [B, n] (out-of-range slot = drop
+    sentinel — that row writes nothing); vals : [B, H, n, ...].  Rows of a
+    continuous batch flush at different times, so every row addresses its own
+    slot.
+    """
+    B = store.shape[0]
+    bidx = jnp.arange(B)[:, None]  # broadcasts against slots [B, n]
+    # Advanced indices at axes (0, 2) are separated by the H slice, so the
+    # indexed dims move to the front: the update value is [B, n, H, ...].
+    return store.at[bidx, :, slots].set(jnp.moveaxis(vals, 2, 1), mode="drop")
+
+
 class CacheLayout:
     """Strategy interface for one way of storing a layer's KV blocks.
 
@@ -202,9 +217,9 @@ class CacheLayout:
         raise NotImplementedError
 
     def write_blocks(self, spec, cache, slots: Array, kb: Array, vb: Array):
-        """Store stage: write raw blocks kb/vb [B, H, n, T, D] into ring
-        slots [n] (out-of-range slot = drop sentinel).  Returns the six
-        updated store arrays."""
+        """Store stage: write raw blocks kb/vb [B, H, n, T, D] into per-row
+        ring slots [B, n] (out-of-range slot = drop sentinel for that row).
+        Returns the six updated store arrays."""
         raise NotImplementedError
 
     def fetch(self, spec, cache):
@@ -287,8 +302,8 @@ class RawLayout(CacheLayout):
 
     def write_blocks(self, spec, cache, slots, kb, vb):
         dt = cache.k_store.dtype
-        k_store = cache.k_store.at[:, :, slots].set(kb.astype(dt), mode="drop")
-        v_store = cache.v_store.at[:, :, slots].set(vb.astype(dt), mode="drop")
+        k_store = scatter_slots(cache.k_store, slots, kb.astype(dt))
+        v_store = scatter_slots(cache.v_store, slots, vb.astype(dt))
         return (k_store, cache.k_min, cache.k_step,
                 v_store, cache.v_min, cache.v_step)
 
@@ -356,12 +371,12 @@ class PackedLayout(CacheLayout):
     def write_blocks(self, spec, cache, slots, kb, vb):
         ks, kmn, kst, vs, vmn, vst = self.compress_blocks(spec, kb, vb)
         return (
-            cache.k_store.at[:, :, slots].set(ks, mode="drop"),
-            cache.k_min.at[:, :, slots].set(kmn, mode="drop"),
-            cache.k_step.at[:, :, slots].set(kst, mode="drop"),
-            cache.v_store.at[:, :, slots].set(vs, mode="drop"),
-            cache.v_min.at[:, :, slots].set(vmn, mode="drop"),
-            cache.v_step.at[:, :, slots].set(vst, mode="drop"),
+            scatter_slots(cache.k_store, slots, ks),
+            scatter_slots(cache.k_min, slots, kmn),
+            scatter_slots(cache.k_step, slots, kst),
+            scatter_slots(cache.v_store, slots, vs),
+            scatter_slots(cache.v_min, slots, vmn),
+            scatter_slots(cache.v_step, slots, vst),
         )
 
     def decompress_k(self, spec, cache):
@@ -535,12 +550,12 @@ class HuffmanLayout(PackedLayout):
         vs = self._encode(spec, v_codes, self.book_v(spec))
         dt = jnp.bfloat16
         return (
-            cache.k_store.at[:, :, slots].set(ks, mode="drop"),
-            cache.k_min.at[:, :, slots].set(k_mn.astype(dt), mode="drop"),
-            cache.k_step.at[:, :, slots].set(k_st.astype(dt), mode="drop"),
-            cache.v_store.at[:, :, slots].set(vs, mode="drop"),
-            cache.v_min.at[:, :, slots].set(v_mn.astype(dt), mode="drop"),
-            cache.v_step.at[:, :, slots].set(v_st.astype(dt), mode="drop"),
+            scatter_slots(cache.k_store, slots, ks),
+            scatter_slots(cache.k_min, slots, k_mn.astype(dt)),
+            scatter_slots(cache.k_step, slots, k_st.astype(dt)),
+            scatter_slots(cache.v_store, slots, vs),
+            scatter_slots(cache.v_min, slots, v_mn.astype(dt)),
+            scatter_slots(cache.v_step, slots, v_st.astype(dt)),
         )
 
     def decompress_k(self, spec, cache):

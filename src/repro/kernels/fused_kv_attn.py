@@ -47,7 +47,7 @@ def _unpack_tile(words: Array, bits: int, n_codes: int) -> Array:
 
 
 def _kernel(
-    nb_valid_ref,  # scalar prefetch: i32 [1]
+    nb_valid_ref,  # scalar prefetch: i32 [B] per-row valid block counts
     q_ref,         # [1, G, D]
     ks_ref,        # [1, 1, 1, Wk] u32
     kmn_ref,       # [1, 1, 1, D]
@@ -78,7 +78,10 @@ def _kernel(
         m_s[...] = jnp.full_like(m_s, NEG_INIT)
         l_s[...] = jnp.zeros_like(l_s)
 
-    @pl.when(n < nb_valid_ref[0])
+    # Per-row validity: each batch row of a continuous batch has its own
+    # number of live blocks (the scalar-prefetch ref is indexed by the batch
+    # grid axis, available before the body runs).
+    @pl.when(n < nb_valid_ref[pl.program_id(0)])
     def _update():
         # --- decompress K in situ (VMEM) ---
         k_codes = _unpack_tile(ks_ref[0, 0, 0, :], bits_k, T * D).reshape(T, D)
@@ -113,7 +116,7 @@ def fused_decode_attention_pallas(
     q: Array,
     k_store: Array, k_min: Array, k_step: Array,
     v_store: Array, v_min: Array, v_step: Array,
-    nb_valid: Array,
+    nb_valid: Array,  # i32 [B] per-row valid block counts (scalar broadcasts)
     *,
     bits_k: int, bits_v: int, block_size: int,
     scale: float | None = None,
@@ -168,4 +171,5 @@ def fused_decode_attention_pallas(
         ),
         out_shape=out_shape,
         interpret=interpret,
-    )(nb_valid.reshape(1).astype(jnp.int32), q, k_store, k_min, k_step, v_store, v_min, v_step)
+    )(jnp.broadcast_to(jnp.atleast_1d(nb_valid), (B,)).astype(jnp.int32),
+      q, k_store, k_min, k_step, v_store, v_min, v_step)

@@ -37,7 +37,7 @@ def fused_decode_attention_ref(
     v_store: Array,    # u32 [B, Hkv, NB, Wv]
     v_min: Array,      # [B, Hkv, NB, T]
     v_step: Array,
-    nb_valid: Array,   # i32 scalar
+    nb_valid: Array,   # i32 [B] per-row valid block counts (scalar broadcasts)
     bits_k: int,
     bits_v: int,
     block_size: int,
@@ -53,18 +53,19 @@ def fused_decode_attention_ref(
     G, T = Hq // Hkv, block_size
     if scale is None:
         scale = 1.0 / math.sqrt(D)
+    nbv = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(nb_valid, jnp.int32)), (B,))
     kc = bitpack.unpack_nostraddle(k_store, bits_k, T * D).reshape(B, Hkv, NB, T, D)
     vc = bitpack.unpack_nostraddle(v_store, bits_v, T * D).reshape(B, Hkv, NB, T, D)
     kd = dequant_k(kc, k_min, k_step)  # [B,Hkv,NB,T,D]
     vd = dequant_v(vc, v_min, v_step)
     qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
     s = jnp.einsum("bhgd,bhntd->bhgnt", qg, kd) * scale
-    ok = (jnp.arange(NB) < nb_valid)[None, None, None, :, None]
+    ok = (jnp.arange(NB)[None, :] < nbv[:, None])[:, None, None, :, None]
     s = jnp.where(ok, s, NEG_INIT)
     s2 = s.reshape(B, Hkv, G, NB * T)
     m = jnp.max(s2, axis=-1)
     m = jnp.maximum(m, NEG_INIT)
-    p = jnp.exp(s2 - m[..., None]) * (jnp.repeat(ok[..., 0].reshape(1, 1, 1, NB), T, -1))
+    p = jnp.exp(s2 - m[..., None]) * jnp.repeat(ok[..., 0], T, -1)
     l = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bhgnt,bhntd->bhgd", p.reshape(B, Hkv, G, NB, T), vd)
     return (
@@ -78,7 +79,7 @@ def combine_with_buffer_ref(
     acc: Array, m: Array, l: Array,  # from the main (packed) part
     q: Array,                        # [B, Hq, D]
     k_buf: Array, v_buf: Array,      # [B, Hkv, T, D]
-    buf_len: Array,                  # i32 scalar
+    buf_len: Array,                  # i32 [B] per-row (scalar broadcasts)
     scale: float | None = None,
 ):
     """Two-part softmax combine: packed-store partials + raw tail buffer."""
@@ -87,9 +88,10 @@ def combine_with_buffer_ref(
     G = Hq // Hkv
     if scale is None:
         scale = 1.0 / math.sqrt(D)
+    bl = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(buf_len, jnp.int32)), (B,))
     qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
     s = jnp.einsum("bhgd,bhtd->bhgt", qg, k_buf.astype(jnp.float32)) * scale
-    ok = (jnp.arange(T) < buf_len)[None, None, None, :]
+    ok = (jnp.arange(T)[None, :] < bl[:, None])[:, None, None, :]
     s = jnp.where(ok, s, NEG_INIT)
     mb = jnp.maximum(jnp.max(s, axis=-1), NEG_INIT)
     pb = jnp.exp(s - mb[..., None]) * ok

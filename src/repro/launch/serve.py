@@ -1,33 +1,37 @@
-"""Serving launcher: batched generation with the compressed KV cache.
+"""Serving launcher: continuous-batching generation with the compressed KV
+cache.
 
     python -m repro.launch.serve --arch yi_6b --layout packed --requests 8
     python -m repro.launch.serve --arch yi_6b --layout raw   # baseline
 
-Prints per-layout cache memory + throughput so the paper's memory-reduction
-and overhead story is visible end to end on CPU.
+Requests get heterogeneous prompt lengths and token budgets and are pushed
+through the ``api.serve`` Server — slots admit, decode at per-row positions,
+retire, and are reused mid-flight.  Prints per-request results plus the
+per-layout cache memory, so the paper's memory-reduction and overhead story
+is visible end to end on CPU.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import time
 
 import jax
 import numpy as np
 
+from repro import api
 from repro.models import model as M
 from repro.models import registry
-from repro.serve.engine import Engine, EngineConfig, Request, cache_memory_report
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi_6b")
-    from repro import api
-
     ap.add_argument("--layout", default="packed",
                     choices=list(api.available_layouts()))
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=256)
@@ -36,23 +40,32 @@ def main():
     cfg = registry.get_smoke_config(args.arch)
     cfg = dataclasses.replace(cfg, cache_layout=args.layout)
     params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, EngineConfig(max_seq=args.max_seq, bucket=32,
-                                           max_batch=args.requests))
+    server = api.serve(cfg, params, max_slots=args.max_slots,
+                       max_seq=args.max_seq)
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.new_tokens)
-            for _ in range(args.requests)]
-    results = eng.generate(reqs)
-    tput = sum(args.new_tokens / r.gen_s for r in results if r.gen_s > 0)
-    # memory report from a live prefilled state
-    logits, state = M.prefill(params, cfg, {"tokens": np.stack([r.prompt for r in reqs])},
-                              args.max_seq)
-    rep = cache_memory_report(cfg, state)
+    handles = []
+    for i in range(args.requests):
+        # heterogeneous workload: prompts from half to full --prompt-len,
+        # budgets from half to full --new-tokens
+        plen = max(4, args.prompt_len - (i * args.prompt_len // 2) // max(args.requests - 1, 1))
+        n_new = max(2, args.new_tokens - (i * args.new_tokens // 2) // max(args.requests - 1, 1))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        handles.append(server.submit(api.Request(prompt=prompt,
+                                                 max_new_tokens=n_new)))
+    t0 = time.monotonic()
+    server.run()
+    wall = time.monotonic() - t0
+    results = [h.result() for h in handles]
+    total = sum(len(r.tokens) for r in results)
+    rep = server.memory_report()
     print(f"layout={args.layout} requests={len(results)} "
-          f"decode_throughput={tput:.1f} tok/s "
+          f"slots={args.max_slots} tokens={total} "
+          f"throughput={total / wall:.1f} tok/s "
           f"kv_cache_bytes={rep['kv_bytes']:,}")
-    for i, r in enumerate(results[:3]):
-        print(f"  req{i}: prompt_len={r.prompt_len} tokens={r.tokens[:8].tolist()}…")
+    for i, r in enumerate(results[:4]):
+        print(f"  req{i}: prompt_len={r.prompt_len} n_tokens={len(r.tokens)} "
+              f"prefill={r.prefill_s * 1e3:.0f}ms gen={r.gen_s * 1e3:.0f}ms "
+              f"finish={r.finish_reason} tokens={r.tokens[:8].tolist()}…")
 
 
 if __name__ == "__main__":

@@ -223,10 +223,12 @@ def attn_block_prefill(params, cfg: ModelConfig, x: Array, positions: Array,
 def attn_block_decode(params, cfg: ModelConfig, x: Array, position: Array,
                       cache: kvcache.LayerKVCache):
     """One-token decode: append this token's KV (compress-on-overflow) and
-    attend over the compressed cache.  x: [B, 1, d]."""
+    attend over the compressed cache.  x: [B, 1, d]; position: i32 [B] —
+    every row of a continuous batch decodes at its own sequence position
+    (RoPE, append offset, and attention masks are all per-row)."""
     h = layers.rms_norm(x, params["ln_attn"], cfg.norm_eps)
-    pos = position.reshape(1)  # scalar position broadcast as length-1 seq
-    q, k, v = qkv_project(params["attn"], cfg, h, pos[None, :])
+    pos = position.reshape(-1, 1)  # [B, 1]: per-row length-1 seq positions
+    q, k, v = qkv_project(params["attn"], cfg, h, pos)
     cache = kvcache.append(cache, k[:, 0], v[:, 0])
     # NB: append puts the token in the raw buffer, so attending *after*
     # appending sees the current token too (self-attention includes self).

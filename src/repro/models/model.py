@@ -296,6 +296,31 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bflo
     raise ValueError(cfg.family)
 
 
+def insert_decode_row(dst_state, src_state, row):
+    """Copy a batch=1 decode state into row ``row`` of a batched state.
+
+    The continuous-batching admission step: a request is prefilled solo
+    (exactly its prompt length, no padding) and spliced into a free slot of
+    the live decode state while other rows keep decoding.  Works for every
+    family/state layout: for each leaf pair, the batch axis is the first axis
+    where the two shapes differ (the source has extent 1 there); leaves with
+    identical shapes (layout dummies, or a one-slot server) are taken from
+    the source wholesale.  ``row`` may be traced (one jit compilation covers
+    every slot).
+    """
+
+    def ins(d, s):
+        if d.shape == s.shape:
+            return s
+        axis = next(i for i, (a, b) in enumerate(zip(d.shape, s.shape))
+                    if a != b)
+        if s.shape[axis] != 1:
+            raise ValueError(f"source state is not batch=1: {s.shape} at axis {axis}")
+        return jax.lax.dynamic_update_slice_in_dim(d, s.astype(d.dtype), row, axis)
+
+    return jax.tree.map(ins, dst_state, src_state)
+
+
 def prefill(params, cfg: ModelConfig, batch, max_seq: int,
             q_chunk: int = 512, kv_chunk: int = 512, unroll: bool = False):
     """Process a prompt; returns (logits [B,S,V], decode_state)."""
@@ -377,8 +402,12 @@ def prefill(params, cfg: ModelConfig, batch, max_seq: int,
 def decode_step(params, cfg: ModelConfig, tokens, position, state,
                 unroll: bool = False):
     """One decode step.  tokens: [B] ids (or [B, d] embeddings);
-    position: scalar i32 (current sequence length).  Returns (logits [B,V],
-    new state)."""
+    position: i32 [B] — each row's current sequence length.  Rows advance
+    independently (the continuous-batching contract); a scalar broadcasts to
+    the uniform lockstep case.  Returns (logits [B, V], new state)."""
+    position = jnp.asarray(position, jnp.int32)
+    if position.ndim == 0:
+        position = jnp.broadcast_to(position, (tokens.shape[0],))
     if cfg.input_mode == "tokens":
         x = layers.embed_tokens(params["emb"], tokens[:, None])
     else:

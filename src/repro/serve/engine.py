@@ -1,18 +1,17 @@
 """Serving engine: batched generation over compressed KV caches.
 
-The paper's KVCompCache integration point (§4.2: "we implemented a
-KVCompCache class … efficiently integrated with all supported models") —
-here the cache IS the decode state, and compression runs on the hot path:
-prefill bulk-compresses the prompt KV (Store), every decode step appends to
-the block buffer and flushes compressed blocks (Store), and attention
-consumes packed blocks (Fetch).
+``Engine`` is now a thin compatibility wrapper over the continuous-batching
+``repro.serve.scheduler.Server`` (the paper's KVCompCache integration point,
+§4.2, behind a Server/Session API): ``generate(reqs)`` submits every request
+and drains the slot scheduler, so heterogeneous prompt lengths and token
+budgets decode concurrently with no bucket padding, results carry
+**per-request** timing, and tokens are truncated at ``eos_id``.
 
-Scheduling: requests are grouped into length buckets (right-aligned to a
-bucket grid) so every batch shares one prompt length — the uniform-length
-contract of the cache (DESIGN.md §5).  A bucket forms a generation group
-that decodes in lockstep until all members finish (EOS or max tokens);
-finished rows keep decoding but their outputs are masked (standard
-continuous-batching-with-buckets simplification).
+``LockstepEngine`` preserves the pre-scheduler behaviour — length-bucketed
+groups decoding in lockstep until the whole group finishes — as the measured
+baseline for ``benchmarks/serve_throughput.py``.  Do not use it for new
+code; it exists so the continuous-batching win stays an apples-to-apples
+number instead of folklore.
 """
 
 from __future__ import annotations
@@ -26,33 +25,49 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
-
-
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray  # int32 [S]
-    max_new_tokens: int = 32
-    eos_id: int | None = None
-
-
-@dataclasses.dataclass
-class Result:
-    tokens: np.ndarray
-    prompt_len: int
-    gen_s: float
-    prefill_s: float
+from repro.serve.scheduler import (  # noqa: F401  (re-exported compat names)
+    Request, Result, Server, ServerConfig, cache_memory_report)
 
 
 @dataclasses.dataclass
 class EngineConfig:
-    bucket: int = 64          # prompt lengths padded up to a multiple
-    max_batch: int = 8
+    bucket: int = 64          # legacy: LockstepEngine's prompt-length grid
+    max_batch: int = 8        # concurrent slots (Server) / group size (legacy)
     max_seq: int = 4096
     greedy: bool = True
     pad_id: int = 0
 
 
 class Engine:
+    """Compat facade: ``generate(list[Request]) -> list[Result]`` on top of
+    the Server/Session API.  Requests join and leave decode slots mid-flight;
+    ``ecfg.bucket`` is accepted but unused (no bucketing remains)."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 q_chunk: int = 512, kv_chunk: int = 512):
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.server = Server(
+            cfg, params,
+            ServerConfig(max_slots=ecfg.max_batch, max_seq=ecfg.max_seq,
+                         greedy=ecfg.greedy, pad_id=ecfg.pad_id),
+            q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    def generate(self, reqs: list[Request]) -> list[Result]:
+        handles = [self.server.submit(r) for r in reqs]
+        return [h.result() for h in handles]
+
+
+class LockstepEngine:
+    """The legacy bucket batcher (benchmark baseline only).
+
+    Requests are grouped into length buckets (left-padded to a bucket grid)
+    so every group shares one scalar position; a group decodes in lockstep
+    for ``max(max_new_tokens)`` steps (finished rows keep burning masked
+    steps) and new requests cannot join until the group drains.  Timing is
+    group-shared and tokens are not truncated at EOS — faithfully the old
+    behaviour, wasted work included.
+    """
+
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  q_chunk: int = 512, kv_chunk: int = 512):
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
@@ -62,7 +77,6 @@ class Engine:
         self._decode = jax.jit(
             lambda p, t, pos, st: M.decode_step(p, cfg, t, pos, st))
 
-    # -- scheduling -----------------------------------------------------------
     def _buckets(self, reqs: list[Request]) -> dict[int, list[int]]:
         out: dict[int, list[int]] = {}
         for i, r in enumerate(reqs):
@@ -112,26 +126,3 @@ class Engine:
             n = reqs[i].max_new_tokens
             results[i] = Result(tokens=toks[j, :n], prompt_len=int(lens[j]),
                                 gen_s=t2 - t1, prefill_s=t1 - t0)
-
-
-def cache_memory_report(cfg: ModelConfig, state) -> dict:
-    """Measured bytes of the decode state per layout — the serving-side
-    memory-reduction claim, computed from the actual arrays.
-
-    Under a per-layer ``CompressionPolicy`` the KV entry also lists each
-    layer's resolved layout (the caches live in a tuple, one spec each).
-    """
-    tot = 0
-    kv = 0
-    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
-        nbytes = leaf.size * leaf.dtype.itemsize
-        tot += nbytes
-        keys = "/".join(str(getattr(p, "key", "")) for p in path)
-        if "kv" in keys:
-            kv += nbytes
-    rep = {"total_bytes": int(tot), "kv_bytes": int(kv),
-           "layout": cfg.cache_layout}
-    caches = state.get("kv") if isinstance(state, dict) else None
-    if isinstance(caches, (tuple, list)):
-        rep["per_layer_layouts"] = [c.spec.layout for c in caches]
-    return rep

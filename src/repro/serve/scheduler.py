@@ -1,0 +1,274 @@
+"""Continuous-batching scheduler: the Server / Session serving surface.
+
+The paper positions KVComp as the cache layer for "both latency-critical and
+throughput-critical inference systems" (§5); this module supplies the
+throughput side.  Instead of the old lockstep bucket batcher (every row of a
+group shared one scalar position, finished rows burned masked decode steps,
+and nobody could join until the whole group drained), the server owns a ring
+of **slots** over one live decode state and runs an admission queue:
+
+    submit -> queue -> [admit: solo prefill -> splice into a free slot]
+           -> decode steps (every slot at its own position)
+           -> retire at EOS / length -> slot reused by the next request
+
+Per-slot state is three per-row vectors (current token, position, and the
+cache's own per-row ``n_flushed``/``buf_len``), so requests with different
+prompt lengths and budgets decode side by side with no padding waste — the
+per-row position contract threaded through ``models.model.decode_step``,
+``models.attention.attn_block_decode``, and ``core.cache`` (DESIGN.md §8).
+
+The server is cooperative: there is no background thread.  ``Handle.result``
+and ``Handle.tokens`` pump ``Server.step`` until their request completes, and
+``Server.run`` drains everything; each step is one admission sweep plus one
+batched decode step.  Prefill runs per admission at the request's exact
+prompt length (bit-identical to a solo run — no bucket padding enters the
+cache); jit caches one compiled prefill per distinct prompt length.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # int32 [S]
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: np.ndarray   # int32 [n], n <= max_new_tokens — truncated at eos_id
+    prompt_len: int
+    gen_s: float         # this request's wall time from prefill end to last token
+    prefill_s: float     # this request's own prefill wall time
+    finish_reason: str = "length"  # "eos" | "length"
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    max_slots: int = 8   # concurrent decode rows (the batch of the live state)
+    max_seq: int = 4096
+    greedy: bool = True
+    pad_id: int = 0      # fed to inactive rows (their outputs are ignored)
+    # Admission policy: "fcfs" (arrival order — predictable streaming
+    # latency) or "ljf" (longest remaining budget first — packs slot loads
+    # evenly, shrinking the drain tail; the throughput-bench setting).
+    policy: str = "fcfs"
+
+
+class Handle:
+    """One submitted request's session: streaming tokens and the final result.
+
+    The handle is also the driver — ``result()`` and ``tokens()`` call
+    ``Server.step`` until this request retires, so a caller that only cares
+    about one request still advances everyone else's decode.
+    """
+
+    def __init__(self, server: "Server", request: Request):
+        self._server = server
+        self.request = request
+        self._toks: list[int] = []
+        self._finish: str | None = None
+        self._prefill_s = 0.0
+        self._t_start: float | None = None
+        self._t_end: float | None = None
+
+    @property
+    def done(self) -> bool:
+        return self._finish is not None
+
+    def tokens(self) -> Iterator[int]:
+        """Stream generated token ids as they are produced (drives the
+        server's step loop while waiting for the next one)."""
+        i = 0
+        while True:
+            while i < len(self._toks):
+                yield self._toks[i]
+                i += 1
+            if self.done:
+                return
+            self._server.step()
+
+    def result(self) -> Result:
+        """Block (drive the server) until this request finishes."""
+        while not self.done:
+            self._server.step()
+        return Result(
+            tokens=np.asarray(self._toks, np.int32),
+            prompt_len=len(self.request.prompt),
+            gen_s=self._t_end - self._t_start,
+            prefill_s=self._prefill_s,
+            finish_reason=self._finish,
+        )
+
+    # -- scheduler side -------------------------------------------------------
+    def _push(self, tok: int) -> bool:
+        """Record one generated token; returns True when the request is done
+        (EOS seen or budget exhausted).  Tokens after EOS are never recorded
+        — results are truncated at eos_id by construction."""
+        self._toks.append(int(tok))
+        r = self.request
+        if r.eos_id is not None and int(tok) == r.eos_id:
+            self._finish = "eos"
+        elif len(self._toks) >= r.max_new_tokens:
+            self._finish = "length"
+        else:
+            return False
+        self._t_end = time.monotonic()
+        return True
+
+
+class Server:
+    """Slot-based continuous-batching server over the compressed KV cache."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig | None = None,
+                 q_chunk: int = 512, kv_chunk: int = 512):
+        scfg = scfg if scfg is not None else ServerConfig()
+        if not scfg.greedy:
+            raise NotImplementedError("only greedy decoding is served for now")
+        if scfg.policy not in ("fcfs", "ljf"):
+            raise ValueError(f"unknown admission policy {scfg.policy!r}")
+        if scfg.max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {scfg.max_slots}")
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        B = scfg.max_slots
+        self._slots: list[Handle | None] = [None] * B
+        self._queue: collections.deque[Handle] = collections.deque()
+        self._cur = np.full(B, scfg.pad_id, np.int32)   # last token per slot
+        self._pos = np.zeros(B, np.int32)               # per-row decode position
+        self.state = M.init_decode_state(cfg, B, scfg.max_seq)
+
+        # Greedy argmax runs inside the jitted closures so each step/admit is
+        # one dispatch transferring [B] token ids, not [B, V] logits.
+        def _prefill(p, t):
+            logits, st = M.prefill(p, cfg, {"tokens": t}, scfg.max_seq,
+                                   q_chunk=q_chunk, kv_chunk=kv_chunk)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
+
+        def _decode(p, t, pos, st):
+            logits, st = M.decode_step(p, cfg, t, pos, st)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), st
+
+        self._prefill = jax.jit(_prefill)
+        # The previous state dies on reassignment every step/admission, so
+        # its buffers are donated instead of copied.
+        self._decode = jax.jit(_decode, donate_argnums=(3,))
+        self._insert = jax.jit(M.insert_decode_row, donate_argnums=(0,))
+
+    # -- intake ---------------------------------------------------------------
+    def submit(self, request: Request) -> Handle:
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(request.prompt) + request.max_new_tokens > self.scfg.max_seq:
+            raise ValueError(
+                f"prompt ({len(request.prompt)}) + max_new_tokens "
+                f"({request.max_new_tokens}) exceeds max_seq {self.scfg.max_seq}")
+        h = Handle(self, request)
+        self._queue.append(h)
+        return h
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- slot lifecycle -------------------------------------------------------
+    def _admit(self, handle: Handle, row: int) -> bool:
+        """Prefill a queued request at its exact prompt length and splice it
+        into slot ``row`` of the live decode state.  Returns False when the
+        request finished at prefill (budget of 1, or instant EOS) and the
+        slot stays free."""
+        req = handle.request
+        prompt = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+        t0 = time.monotonic()
+        first_tok, solo = self._prefill(self.params, prompt)
+        first = int(first_tok[0])
+        t1 = time.monotonic()
+        handle._prefill_s = t1 - t0
+        handle._t_start = t1
+        if handle._push(first):
+            return False
+        self.state = self._insert(self.state, solo, row)
+        self._slots[row] = handle
+        self._cur[row] = first
+        self._pos[row] = len(req.prompt)
+        return True
+
+    def _pop_next(self) -> Handle:
+        if self.scfg.policy == "ljf":
+            pick = max(range(len(self._queue)),
+                       key=lambda i: self._queue[i].request.max_new_tokens)
+            self._queue.rotate(-pick)
+            h = self._queue.popleft()
+            self._queue.rotate(pick)
+            return h
+        return self._queue.popleft()
+
+    def step(self) -> bool:
+        """Admit whatever fits, then run one batched decode step over the
+        live slots.  Returns True while work remains (active or queued)."""
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        while free and self._queue:
+            if self._admit(self._pop_next(), free[0]):
+                free.pop(0)
+        rows = [i for i, s in enumerate(self._slots) if s is not None]
+        if not rows:
+            return bool(self._queue)
+        toks, self.state = self._decode(
+            self.params, jnp.asarray(self._cur), jnp.asarray(self._pos),
+            self.state)
+        nxt = np.asarray(toks)
+        for row in rows:
+            tok = int(nxt[row])
+            self._cur[row] = tok
+            self._pos[row] += 1
+            if self._slots[row]._push(tok):
+                self._slots[row] = None  # retire; slot reused next step
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
+    def run(self) -> None:
+        """Drain: step until every submitted request has finished."""
+        while self.step():
+            pass
+
+    def memory_report(self) -> dict:
+        """Measured bytes of the live decode state (all slots)."""
+        return cache_memory_report(self.cfg, self.state)
+
+
+def cache_memory_report(cfg: ModelConfig, state) -> dict:
+    """Measured bytes of a decode state per layout — the serving-side
+    memory-reduction claim, computed from the actual arrays.
+
+    Under a per-layer ``CompressionPolicy`` the KV entry also lists each
+    layer's resolved layout (the caches live in a tuple, one spec each).
+    """
+    tot = 0
+    kv = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        nbytes = leaf.size * leaf.dtype.itemsize
+        tot += nbytes
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        if "kv" in keys:
+            kv += nbytes
+    rep = {"total_bytes": int(tot), "kv_bytes": int(kv),
+           "layout": cfg.cache_layout}
+    caches = state.get("kv") if isinstance(state, dict) else None
+    if isinstance(caches, (tuple, list)):
+        rep["per_layer_layouts"] = [c.spec.layout for c in caches]
+    return rep

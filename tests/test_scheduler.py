@@ -1,0 +1,146 @@
+"""Continuous-batching scheduler: requests joining/leaving mid-flight must
+be bit-identical (greedy) to solo runs, for raw and compressed layouts."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model as M
+from repro.models import registry
+from repro.serve.scheduler import Request, Server, ServerConfig
+
+LENS = (7, 13, 16, 24, 33)
+NEWS = (3, 9, 5, 2, 7)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_smoke_config("yi_6b")
+    params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, L).astype(np.int32) for L in LENS]
+    return cfg, params, prompts
+
+
+def _solo_greedy(cfg, params, prompt, n_new, eos_id=None):
+    """Independent oracle: B=1 prefill at the exact prompt length, then
+    step-by-step greedy decode, truncated at eos."""
+    lg, state = M.prefill(params, cfg, {"tokens": jnp.asarray(prompt)[None, :]},
+                          256, q_chunk=32, kv_chunk=32)
+    cur = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+    out = [int(cur[0])]
+    pos = len(prompt)
+    while len(out) < n_new and (eos_id is None or out[-1] != eos_id):
+        lg, state = M.decode_step(params, cfg, cur,
+                                  jnp.asarray(pos, jnp.int32), state)
+        cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        out.append(int(cur[0]))
+        pos += 1
+    return out
+
+
+@pytest.mark.parametrize("layout", ["raw", "packed"])
+def test_mid_flight_join_leave_matches_solo(setup, layout):
+    """5 requests with mixed prompt lengths and budgets through 2 slots:
+    every admission joins a batch whose other row is mid-decode, yet each
+    request's greedy tokens equal its solo run."""
+    cfg, params, prompts = setup
+    cfg = dataclasses.replace(cfg, cache_layout=layout, cache_block=16)
+    server = Server(cfg, params, ServerConfig(max_slots=2, max_seq=256),
+                    q_chunk=32, kv_chunk=32)
+    handles = [server.submit(Request(prompt=p, max_new_tokens=n))
+               for p, n in zip(prompts, NEWS)]
+    server.run()
+    assert server.active == 0 and server.pending == 0
+    for p, n, h in zip(prompts, NEWS, handles):
+        got = h.result().tokens.tolist()
+        assert got == _solo_greedy(cfg, params, p, n), (layout, len(p), n)
+
+
+def test_eos_truncation_and_finish_reason(setup):
+    """Tokens stop at eos_id (inclusive) and the result says why."""
+    cfg, params, prompts = setup
+    cfg = dataclasses.replace(cfg, cache_layout="raw")
+    solo = _solo_greedy(cfg, params, prompts[1], 8)
+    # pick the first token that did not occur earlier in the stream so the
+    # eos cut lands exactly there
+    cut = next(i for i in range(1, len(solo)) if solo[i] not in solo[:i])
+    server = Server(cfg, params, ServerConfig(max_slots=2, max_seq=256),
+                    q_chunk=32, kv_chunk=32)
+    h_eos = server.submit(Request(prompt=prompts[1], max_new_tokens=8,
+                                  eos_id=solo[cut]))
+    h_len = server.submit(Request(prompt=prompts[2], max_new_tokens=4))
+    server.run()
+    r_eos, r_len = h_eos.result(), h_len.result()
+    assert r_eos.tokens.tolist() == solo[: cut + 1]  # truncated, eos included
+    assert r_eos.finish_reason == "eos"
+    assert len(r_len.tokens) == 4 and r_len.finish_reason == "length"
+
+
+def test_streaming_tokens_iterator(setup):
+    """handle.tokens() yields incrementally and agrees with result()."""
+    cfg, params, prompts = setup
+    cfg = dataclasses.replace(cfg, cache_layout="raw")
+    server = Server(cfg, params, ServerConfig(max_slots=2, max_seq=256),
+                    q_chunk=32, kv_chunk=32)
+    h1 = server.submit(Request(prompt=prompts[0], max_new_tokens=6))
+    h2 = server.submit(Request(prompt=prompts[3], max_new_tokens=3))
+    streamed = list(h1.tokens())
+    assert streamed == h1.result().tokens.tolist()
+    assert len(streamed) == 6
+    assert h2.done  # pumping h1's stream also drove h2 to completion
+    assert len(h2.result().tokens) == 3
+
+
+def test_queue_deeper_than_slots(setup):
+    """8 heterogeneous requests through 3 slots (the acceptance workload):
+    everything completes bit-identical to solo runs, slots are reused, and
+    per-request timing is individual."""
+    cfg, params, _ = setup
+    cfg = dataclasses.replace(cfg, cache_layout="packed")
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 8 + 3 * i).astype(np.int32),
+                    max_new_tokens=2 + (i % 4))
+            for i in range(8)]
+    server = Server(cfg, params, ServerConfig(max_slots=3, max_seq=256),
+                    q_chunk=32, kv_chunk=32)
+    handles = [server.submit(r) for r in reqs]
+    server.run()
+    results = [h.result() for h in handles]
+    for r, req in zip(results, reqs):
+        assert r.tokens.tolist() == _solo_greedy(cfg, params, req.prompt,
+                                                 req.max_new_tokens)
+        assert r.prompt_len == len(req.prompt)
+        assert r.prefill_s > 0 and r.gen_s >= 0
+    # timings are per-request, not group-shared
+    assert len({r.gen_s for r in results}) > 1
+
+
+def test_ljf_policy_reorders_but_preserves_tokens(setup):
+    """Longest-job-first admission changes only scheduling, never tokens."""
+    cfg, params, prompts = setup
+    cfg = dataclasses.replace(cfg, cache_layout="raw")
+    server = Server(cfg, params,
+                    ServerConfig(max_slots=2, max_seq=256, policy="ljf"),
+                    q_chunk=32, kv_chunk=32)
+    handles = [server.submit(Request(prompt=p, max_new_tokens=n))
+               for p, n in zip(prompts, NEWS)]
+    server.run()
+    for p, n, h in zip(prompts, NEWS, handles):
+        assert h.result().tokens.tolist() == _solo_greedy(cfg, params, p, n)
+
+
+def test_single_token_budget_never_occupies_slot(setup):
+    """max_new_tokens=1 finishes at prefill and leaves slots free."""
+    cfg, params, prompts = setup
+    cfg = dataclasses.replace(cfg, cache_layout="raw")
+    server = Server(cfg, params, ServerConfig(max_slots=1, max_seq=256),
+                    q_chunk=32, kv_chunk=32)
+    hs = [server.submit(Request(prompt=p, max_new_tokens=1)) for p in prompts[:3]]
+    server.run()
+    for p, h in zip(prompts, hs):
+        assert h.result().tokens.tolist() == _solo_greedy(cfg, params, p, 1)
+    assert server.active == 0
