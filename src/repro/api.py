@@ -31,20 +31,24 @@ import numpy as np
 from repro.core import cache as kvcache
 from repro.core import huffman, layouts, quant
 from repro.core.policy import CompressionPolicy, LayerOverride, TensorPolicy  # noqa: F401
+from repro.kernels import ops as kernel_ops
 from repro.serve.scheduler import Handle, Request, Server, ServerConfig  # noqa: F401
 
 __all__ = [
     "CompressionPolicy", "TensorPolicy", "LayerOverride",
     "available_layouts", "register_layout", "make_spec", "make_cache",
+    "available_backends", "register_backend",
     "compress", "decompress", "append", "attend", "estimate_ratio",
     "serve", "Server", "ServerConfig", "Request", "Handle",
 ]
 
 register_layout = layouts.register_layout
+register_backend = kernel_ops.register_backend
 
 
 def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
           pad_id: int = 0, policy: str = "fcfs",
+          attn_backend: str | None = None,
           q_chunk: int = 512, kv_chunk: int = 512) -> Server:
     """Launch a continuous-batching server over ``cfg``'s cache policy.
 
@@ -52,16 +56,25 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
     with ``handle.result()`` / streaming ``handle.tokens()``; requests join
     and leave decode slots mid-flight at their own per-row positions.
     ``policy`` picks the admission order ("fcfs" or "ljf"; DESIGN.md §8).
+    ``attn_backend`` overrides the decode-attention backend (DESIGN.md §9;
+    None keeps ``cfg.attn_backend`` — "auto" runs the fused
+    in-situ-decompression kernel on TPU, the blockwise scan elsewhere).
     """
     return Server(cfg, params,
                   ServerConfig(max_slots=max_slots, max_seq=max_seq,
-                               pad_id=pad_id, policy=policy),
+                               pad_id=pad_id, policy=policy,
+                               attn_backend=attn_backend),
                   q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 
 def available_layouts() -> tuple[str, ...]:
     """Names of every registered cache layout."""
     return layouts.available_layouts()
+
+
+def available_backends() -> tuple[str, ...]:
+    """Names of every registered decode-attention backend."""
+    return kernel_ops.available_backends()
 
 
 def _policy(policy: CompressionPolicy | None) -> CompressionPolicy:
@@ -127,9 +140,15 @@ def append(cache: kvcache.LayerKVCache, k_new, v_new) -> kvcache.LayerKVCache:
     return kvcache.append(cache, k_new, v_new)
 
 
-def attend(cache: kvcache.LayerKVCache, q, scale: float | None = None):
-    """Single-token decode attention over (store ∥ buffer) -> [B, Hq, D]."""
-    return kvcache.attend(cache, q, scale)
+def attend(cache: kvcache.LayerKVCache, q, scale: float | None = None,
+           backend: str | None = None):
+    """Single-token decode attention over (store ∥ buffer) -> [B, Hq, D].
+
+    Dispatches through the attention-backend registry; ``backend=None``
+    defers to the cache spec (``"auto"``: fused Pallas kernel on TPU for
+    fused-capable layouts, blockwise lazily-dequantized scan elsewhere).
+    """
+    return kvcache.attend(cache, q, scale, backend=backend)
 
 
 def estimate_ratio(k=None, v=None, *, policy: CompressionPolicy | None = None,

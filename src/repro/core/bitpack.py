@@ -132,6 +132,21 @@ def unpack_nostraddle(words: Array, bits: int, n_codes: int) -> Array:
     return vals[..., :n_codes].astype(jnp.uint8)
 
 
+def unpack_nostraddle_tile(words: Array, bits: int, n_codes: int) -> Array:
+    """No-straddle unpack of one flat [W] u32 tile -> [n_codes] uint32.
+
+    Same math as ``unpack_nostraddle`` but the shift table is a
+    ``broadcasted_iota`` generated in-graph, so the function is safe inside a
+    Pallas kernel body (a captured host array would lower as a Mosaic
+    constant).  This is the decode the fused attention kernel runs per VMEM
+    tile; layouts hand it to the kernel through their ``tile_decode`` hook.
+    """
+    cpw = codes_per_word(bits)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, cpw), 1) * jnp.uint32(bits)
+    vals = (words[:, None] >> shifts) & jnp.uint32((1 << bits) - 1)
+    return vals.reshape(-1)[:n_codes]
+
+
 def choose_bits(codes: Array, axes: tuple[int, ...], pow2: bool = False) -> Array:
     """Per-block bit width: ceil(log2(max+1)), min 1; optionally rounded up
     to {1,2,4,8} so a kernel can lax.switch over four unpack variants."""

@@ -22,10 +22,14 @@ Faithfulness notes
   (per token × head) — the paper's granularities.
 * Sliding-window models (Mixtral) evict whole blocks via a ring over the
   block axis — "block-aligned eviction composes with compression".
-* Attention consumes codes with the *algebraic fusion* identity
-  ``q·(m + s∘c) = (q·m) + (q∘s)·c`` so dequantization folds into the matvec
-  (the XLA analogue of cache-resident decompression; the Pallas kernel in
-  ``repro.kernels.fused_kv_attn`` does the same per VMEM tile).
+* Decode attention (``attend``) dispatches through the attention-backend
+  registry (DESIGN.md §9): the ``fused`` backend streams compressed tiles
+  into the Pallas kernel and decompresses in VMEM; the ``xla`` backend
+  (``attend_blockwise``) scans the block axis decoding one block at a time
+  and folds dequantization into the matvec with the *algebraic fusion*
+  identity ``q·(m + s∘c) = (q·m) + (q∘s)·c``.  Neither builds a dequantized
+  ``[B, Hkv, NB, T, D]`` intermediate — only the retired
+  ``attend_materialized`` oracle does.
 
 Lengths are **per row**: ``n_flushed`` and ``buf_len`` are ``i32 [B]``
 vectors, so every batch row advances (appends, flushes, attends) at its own
@@ -60,6 +64,9 @@ class CacheSpec:
     ``layout`` names a registered ``repro.core.layouts.CacheLayout``; bit
     widths and store shapes are delegated to it.  The optional overrides let
     a ``CompressionPolicy`` pin explicit storage widths per tensor.
+    ``attn_backend`` selects the decode-attention backend
+    (``repro.kernels.ops``): ``"auto"`` | ``"xla"`` | ``"fused"`` | any
+    ``register_backend``-ed name.
     """
 
     layout: str = "packed"  # any name in layouts.available_layouts()
@@ -71,6 +78,7 @@ class CacheSpec:
     window: int | None = None  # sliding-window size (tokens), None = full
     bits_k_override: int | None = None
     bits_v_override: int | None = None
+    attn_backend: str = "auto"  # decode-attention backend (DESIGN.md §9)
 
     @property
     def impl(self) -> layouts.CacheLayout:
@@ -261,13 +269,138 @@ def append(cache: LayerKVCache, k_new: Array, v_new: Array) -> LayerKVCache:
 # ---------------------------------------------------------------------------
 
 
-def attend(cache: LayerKVCache, q: Array, scale: float | None = None) -> Array:
-    """Single-token attention against the cache.
+def attend(cache: LayerKVCache, q: Array, scale: float | None = None,
+           backend: str | None = None) -> Array:
+    """Single-token attention against the cache — the decode entry point.
 
     q : [B, H, D] with H = Hkv * G (GQA); returns [B, H, D].
-    Scores over the store use the layout's ``fetch`` (dequantize-then-dot in
-    the XLA path); invalid blocks/buffer tail are masked before a joint
-    softmax across (store ∥ buffer).
+    Dispatches through the layout's ``attend_block`` into the
+    attention-backend registry (``repro.kernels.ops``): ``fused`` runs the
+    Pallas in-situ-decompression kernel, ``xla`` the blockwise
+    lazily-dequantized scan below.  ``backend=None`` defers to the cache
+    spec's ``attn_backend`` (default ``"auto"``: fused on TPU for
+    fused-capable layouts, blockwise elsewhere).  Neither path ever
+    materializes a ``[B, Hkv, NB, T, D]`` dequantized intermediate.
+    """
+    return cache.spec.impl.attend_block(cache, q, scale, backend=backend)
+
+
+BLOCKWISE_SPAN_TOKENS = 1024  # ~tokens decoded per scan step (peak-mem knob)
+BLOCKWISE_UNROLL_MAX = 64     # unroll the span loop up to this many steps
+
+
+def attend_blockwise(cache: LayerKVCache, q: Array,
+                     scale: float | None = None,
+                     span: int | None = None) -> Array:
+    """The generic XLA decode path: a blockwise lazily-dequantized
+    flash-decode scan (the ``"xla"`` attention backend).
+
+    Running ``(m, l, acc)`` state walks the NB block axis in spans of a few
+    blocks (``span`` blocks per step, sized so one step decodes about
+    ``BLOCKWISE_SPAN_TOKENS`` tokens — enough matvec per step to amortize
+    per-step overhead, while peak temporary state stays one span).  A span
+    decodes lazily in one vectorized op through the layout's ``decode_span``
+    and dequantization folds into the matvecs with the paper's algebraic
+    fusion ``q·(mn + st∘c) = q·mn + q·(st∘c)`` (and its V-side mirror) —
+    never the ``[B, Hkv, NB, T, D]`` store nor a ``[B, Hkv, G, NB*T+T]``
+    logits concat.  Up to ``BLOCKWISE_UNROLL_MAX`` steps the loop unrolls
+    (XLA fuses each span chain and reuses one span's buffers — measurably
+    faster than both lax.scan and the materializing attend on CPU); past
+    that (very long contexts) it switches to ``lax.scan`` to keep the HLO
+    bounded.  The raw buffer tail merges via the same two-part softmax
+    combine the fused kernel path uses.  Any registered layout gets this
+    path for free (huffman tree-decodes one span per step).
+    """
+    from repro.kernels import ref as kref  # shared combine; late: kernels import core
+
+    spec = cache.spec
+    B, Hq, D = q.shape
+    Hkv = cache.k_buf.shape[1]
+    G = Hq // Hkv
+    T, NB = spec.block_size, spec.n_blocks
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    if span is None:
+        span = max(1, BLOCKWISE_SPAN_TOKENS // T)
+    span = min(span, NB)
+    n_steps = -(-NB // span)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    nb_valid = jnp.minimum(cache.n_flushed, NB)  # [B]
+    impl = spec.impl
+    f32 = jnp.float32
+
+    def body(carry, n0):
+        m, l, acc = carry
+        # One contiguous span [start, start+span) decodes in one vectorized
+        # layout op.  The last (ragged) span clamps its window back; blocks
+        # before n0 in the clamped window were already consumed, so the mask
+        # drops them alongside not-yet-flushed slots.
+        start = jnp.minimum(n0, NB - span)
+        kc, k_mn, k_st, vc, v_mn, v_st = impl.decode_span(spec, cache, start, span)
+        has_scales = k_mn is not None
+        # q·(mn + st∘c) = q·mn + q·(st∘c): the rank-1 mn term stays separate
+        # (dequantized values are never formed); the step scales fold into
+        # the CODES so the whole span contracts in one [G,D]x[C·T,D] matvec.
+        if has_scales:
+            kc = kc * k_st.astype(f32)[:, :, :, None, :]  # st∘c  [B,H,C,T,D]
+        s = jnp.einsum("bhgd,bhxd->bhgx", qg,
+                       kc.astype(f32).reshape(B, Hkv, span * T, D)
+                       ).reshape(B, Hkv, G, span, T)
+        if has_scales:
+            s = s + jnp.einsum("bhgd,bhcd->bhgc", qg,
+                               k_mn.astype(f32))[..., None]
+        s = s * scale
+        # flushed blocks are whole: per-(row, block) all-or-nothing masks
+        idx = start + jnp.arange(span)  # [C]
+        ok = (idx[None, :] >= n0) & (idx[None, :] < nb_valid[:, None])  # [B,C]
+        okx = ok[:, None, None, :, None]
+        s = jnp.where(okx, s, kref.NEG_INIT)
+        s2 = s.reshape(B, Hkv, G, span * T)
+        m_new = jnp.maximum(m, jnp.max(s2, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = (jnp.exp(s - m_new[..., None, None]) * okx)  # [B,H,G,C,T]
+        l_new = l * alpha + jnp.sum(p, axis=(-2, -1))
+        # V mirror: Σ p·(mn + st∘c) = (p·mn) + ((p∘st)·c)
+        if has_scales:
+            pv = p * v_st.astype(f32)[:, :, None]  # p∘st  [B,H,G,C,T]
+            upd = (jnp.einsum("bhgct,bhct->bhg", p, v_mn.astype(f32))[..., None]
+                   + jnp.einsum("bhgx,bhxd->bhgd",
+                                pv.reshape(B, Hkv, G, span * T),
+                                vc.astype(f32).reshape(B, Hkv, span * T, D)))
+        else:
+            upd = jnp.einsum("bhgx,bhxd->bhgd",
+                             p.reshape(B, Hkv, G, span * T),
+                             vc.astype(f32).reshape(B, Hkv, span * T, D))
+        acc_new = acc * alpha[..., None] + upd
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G), kref.NEG_INIT, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, D), jnp.float32)
+    if n_steps <= BLOCKWISE_UNROLL_MAX:
+        carry = (m0, l0, acc0)
+        for i in range(n_steps):
+            carry, _ = body(carry, i * span)
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
+                                      jnp.arange(n_steps) * span)
+
+    out = kref.combine_with_buffer_ref(
+        acc.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq),
+        q, cache.k_buf, cache.v_buf, cache.buf_len, scale=scale)
+    return out.astype(q.dtype)
+
+
+def attend_materialized(cache: LayerKVCache, q: Array,
+                        scale: float | None = None) -> Array:
+    """The retired materializing attend — kept as the oracle/baseline.
+
+    Dequantizes the whole store via ``fetch`` into a ``[B, Hkv, NB, T, D]``
+    intermediate and runs one joint softmax over (store ∥ buffer).  Exact
+    same math as the pre-backend-registry production path; lives on for the
+    backend-parity tests and as ``benchmarks/decode_path.py``'s baseline.
+    Never dispatched to by the serving decode path.
     """
     spec = cache.spec
     B, Hq, D = q.shape

@@ -15,11 +15,20 @@ A layout owns four responsibilities:
 * ``write_blocks``    — the Store stage: quantize + encode whole compression
                         blocks into slots of the block ring (prefill bulk
                         writes and decode-time buffer flushes share this).
-* ``fetch``           — the Fetch stage: reconstruct dequantized
-                        ``[B, H, NB, T, D]`` K/V blocks (the XLA path;
-                        fused-eligible layouts additionally advertise
-                        ``supports_fused`` so ``attend_block`` can run the
-                        Pallas ``q·(m + s∘c)`` kernel without materializing).
+* ``decode_block`` /
+  ``tile_decode``     — the Fetch stage hot paths (DESIGN.md §9):
+                        ``decode_block`` lazily decodes ONE block for the
+                        blockwise XLA attention scan (the portable floor every
+                        layout gets by default); ``tile_decode`` hands the
+                        fused Pallas kernel a per-VMEM-tile decoder so
+                        fused-eligible layouts (``supports_fused``) run the
+                        in-situ ``q·(m + s∘c)`` kernel.  ``attend_block`` is
+                        the single dispatch point between them (via the
+                        backend registry in ``repro.kernels.ops``).
+* ``fetch``           — bulk reconstruction of dequantized
+                        ``[B, H, NB, T, D]`` K/V blocks — reconstruction,
+                        tests, and the ``attend_materialized`` oracle only;
+                        never on the decode hot path.
 * ``size_report`` / ``bytes_per_token`` — exact and analytic size accounting
                         (metadata included), shared by the codec reports and
                         the roofline model.
@@ -172,6 +181,75 @@ def quant_block_minmax(x: Array, rel_scale: float, bits: int,
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedTileSpec:
+    """Layout-owned decode hook for the fused Pallas attention kernel.
+
+    The kernel (``repro.kernels.fused_kv_attn``) streams one store tile per
+    grid step HBM→VMEM and calls ``decode_k``/``decode_v`` to reconstruct the
+    dequantized ``[T, D]`` block in situ (DESIGN.md §9).  The decode callables
+    must be kernel-safe (no captured host arrays, jnp ops only); they are also
+    ``vmap``-ed over (B, H, NB) by the kernel's pure-jnp oracle, so one
+    definition serves both paths.
+
+    k_tile / v_tile : per-block store tile shape (what one grid step loads),
+        e.g. ``(Wk,)`` packed words or ``(T, D)`` raw values.
+    has_scales      : whether (min, step) arrays accompany the store; when
+        False the decode callables receive ``None`` for both.
+    decode_k(tile, mn, st) -> [T, D] f32 ; decode_v likewise (mn/st are the
+        per-block BlockQuant/TokenQuant units).
+
+    Instances must be cached per (layout, spec, head_dim) — they carry
+    closures, and jit treats each new closure as a new static argument (see
+    ``fused_tile_spec``).
+    """
+
+    k_tile: tuple[int, ...]
+    v_tile: tuple[int, ...]
+    has_scales: bool
+    decode_k: object
+    decode_v: object
+
+
+@functools.lru_cache(maxsize=256)
+def fused_tile_spec(layout_name: str, spec, head_dim: int) -> FusedTileSpec | None:
+    """Stable (memoized) tile spec so jit caches keyed on it don't retrace.
+
+    ``supports_fused`` is authoritative: a layout that clears it gets None
+    even if it inherits a ``_tile_decode`` from a fused-capable base (e.g.
+    huffman subclassing packed — the packed unpacker would silently misread
+    its entropy-coded slots).
+    """
+    lay = get_layout(layout_name)
+    if not lay.supports_fused:
+        return None
+    return lay._tile_decode(spec, head_dim)
+
+
+class _BlockView:
+    """One-block slice of a cache's six store arrays (duck-typed cache).
+
+    ``decode_block``'s generic fallback feeds this to ``decompress_k``/``_v``
+    so any layout that can decompress its full store automatically gets the
+    blockwise lazily-dequantized attention path.  Arrays without a block axis
+    (e.g. the raw layout's dummy scales) pass through untouched.
+    """
+
+    def __init__(self, cache, n):
+        for f in ("k_store", "k_min", "k_step", "v_store", "v_min", "v_step"):
+            a = getattr(cache, f)
+            if a.ndim >= 4:
+                # The barrier keeps downstream per-block converts glued to
+                # the slice: without it XLA rewrites convert(slice(x)) to
+                # slice(convert(x)) and hoists a full-store f32 copy out of
+                # the attention scan — exactly the materialization the
+                # blockwise path exists to avoid.
+                a = jax.lax.optimization_barrier(
+                    jax.lax.dynamic_slice_in_dim(a, n, 1, 2))
+            setattr(self, f, a)
+        self.head_dim = cache.head_dim
+
+
 def scatter_slots(store: Array, slots: Array, vals: Array) -> Array:
     """Write per-row block payloads into ring slots of a store array.
 
@@ -223,7 +301,13 @@ class CacheLayout:
         raise NotImplementedError
 
     def fetch(self, spec, cache):
-        """Fetch stage (XLA path): dequantized K and V [B, H, NB, T, D]."""
+        """Bulk Fetch: dequantized K and V [B, H, NB, T, D].
+
+        Materializes the whole store — reconstruction/tests/benchmarks and
+        the ``attend_materialized`` oracle only.  The decode hot path never
+        calls this; it goes through ``decode_block`` (blockwise XLA scan) or
+        ``tile_decode`` (fused Pallas kernel) instead.
+        """
         return self.decompress_k(spec, cache), self.decompress_v(spec, cache)
 
     def decompress_k(self, spec, cache) -> Array:
@@ -232,13 +316,66 @@ class CacheLayout:
     def decompress_v(self, spec, cache) -> Array:
         raise NotImplementedError
 
-    def attend_block(self, cache, q: Array, scale: float | None = None) -> Array:
-        """Decode attention over (store ∥ buffer).  The generic path
-        dequantizes via ``fetch`` and runs a joint softmax; fused-eligible
-        layouts can instead be routed through ``repro.kernels.ops``."""
-        from repro.core import cache as kvcache  # late: cache imports us
+    # -- decode attention hooks ----------------------------------------------
+    def decode_block(self, spec, cache, n):
+        """Lazily decode ONE store block for the blockwise attention scan.
 
-        return kvcache.attend(cache, q, scale)
+        Returns ``(k_codes, k_mn, k_st, v_codes, v_mn, v_st)`` with
+        ``k_codes``/``v_codes`` f32 ``[B, H, T, D]`` and per-block quant units
+        ``k_mn``/``k_st`` ``[B, H, D]``, ``v_mn``/``v_st`` ``[B, H, T]``, under
+        the dequantization convention ``x = mn + codes ∘ st``.  ``mn``/``st``
+        of ``None`` mean the codes already ARE the dequantized values — the
+        scan then skips the ``q·mn + (q∘st)·c`` fusion and dots directly.
+
+        The generic fallback decompresses a one-block view, so any registered
+        layout gets the blockwise path for free; quantizing layouts override
+        it to return raw codes + scales and keep dequantization folded into
+        the attention matvec.
+        """
+        view = _BlockView(cache, n)
+        kd = self.decompress_k(spec, view)[:, :, 0].astype(jnp.float32)
+        vd = self.decompress_v(spec, view)[:, :, 0].astype(jnp.float32)
+        return kd, None, None, vd, None, None
+
+    def decode_span(self, spec, cache, start, count: int):
+        """Lazily decode ``count`` contiguous blocks ``[start, start+count)``
+        for one step of the blockwise attention scan.
+
+        Same contract as ``decode_block`` with a block axis C inserted:
+        codes f32 ``[B, H, C, T, D]``, units ``[B, H, C, D]`` / ``[B, H, C, T]``
+        (or ``None``).  The default stacks ``decode_block`` results; layouts
+        whose store slices contiguously override it so one step decodes in
+        ONE vectorized op instead of C small ones.
+        """
+        blocks = [self.decode_block(spec, cache, start + c) for c in range(count)]
+        stk = lambda i: (None if blocks[0][i] is None
+                         else jnp.stack([b[i] for b in blocks], axis=2))
+        return tuple(stk(i) for i in range(6))
+
+    def tile_decode(self, spec, head_dim: int) -> FusedTileSpec | None:
+        """The fused Pallas kernel's per-tile decode hook (memoized).
+
+        ``None`` means the layout cannot run in the fused kernel (ragged
+        payloads, symbol-serial decode, ...) and decode falls back to the
+        blockwise XLA scan.  ``supports_fused`` mirrors this statically.
+        """
+        return fused_tile_spec(self.name, spec, head_dim)
+
+    def _tile_decode(self, spec, head_dim: int) -> FusedTileSpec | None:
+        return None
+
+    def attend_block(self, cache, q: Array, scale: float | None = None,
+                     backend: str | None = None) -> Array:
+        """Decode attention over (store ∥ buffer) — THE dispatch point.
+
+        Routes through the attention-backend registry in
+        ``repro.kernels.ops``: ``fused`` runs the Pallas in-situ-decompression
+        kernel via ``tile_decode``; ``xla`` runs the blockwise
+        lazily-dequantized scan via ``decode_block``.  ``backend=None``
+        defers to the cache spec's ``attn_backend`` (default ``"auto"``)."""
+        from repro.kernels import ops  # late: kernels import core
+
+        return ops.decode_attention(cache, q, scale, backend=backend)
 
     # -- size accounting ------------------------------------------------------
     def size_report(self, q, *, block_size: int, head_dim: int,
@@ -287,6 +424,8 @@ def available_layouts() -> tuple[str, ...]:
 
 @register_layout("raw")
 class RawLayout(CacheLayout):
+    supports_fused = True  # passthrough tile decoder (see _tile_decode)
+
     def bits_k(self, spec) -> int:
         return RAW_BITS_PER_VALUE
 
@@ -312,6 +451,23 @@ class RawLayout(CacheLayout):
 
     def decompress_v(self, spec, cache):
         return cache.v_store
+
+    def decode_span(self, spec, cache, start, count: int):
+        # Values with no scales; the barrier keeps XLA from commuting the
+        # downstream f32 convert above the slice and hoisting a full-store
+        # copy out of the attention scan (see _BlockView).
+        sl = lambda a: jax.lax.optimization_barrier(
+            jax.lax.dynamic_slice_in_dim(a, start, count, 2))
+        return sl(cache.k_store), None, None, sl(cache.v_store), None, None
+
+    def _tile_decode(self, spec, head_dim):
+        # Passthrough decoder: the raw layout rides the same fused kernel as
+        # the quantized layouts (one uniform decode path, not a special
+        # case); a tile is the [T, D] bf16 block itself, no scales.
+        dec = lambda tile, mn, st: tile.astype(jnp.float32)
+        shape = (spec.block_size, head_dim)
+        return FusedTileSpec(k_tile=shape, v_tile=shape, has_scales=False,
+                             decode_k=dec, decode_v=dec)
 
     def size_report(self, q, *, block_size, head_dim, kivi_bits=2, book=None):
         return raw_ratio(q)
@@ -398,6 +554,43 @@ class PackedLayout(CacheLayout):
                 + codes.astype(jnp.float32)
                 * cache.v_step[:, :, :, :, None].astype(jnp.float32)
                 ).astype(jnp.bfloat16)
+
+    def decode_block(self, spec, cache, n):
+        # Raw codes + scales: dequantization stays folded into the attention
+        # matvec via q·(mn + st∘c) = q·mn + (q∘st)·c (paper §3.3.2).
+        out = self.decode_span(spec, cache, n, 1)
+        return tuple(a[:, :, 0] for a in out)
+
+    def decode_span(self, spec, cache, start, count: int):
+        # One contiguous slice + one vectorized no-straddle unpack per tensor.
+        B, H = cache.k_store.shape[:2]
+        T, D = spec.block_size, cache.head_dim
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, count, 2)
+        kc = bitpack.unpack_nostraddle(sl(cache.k_store), spec.bits_k, T * D)
+        vc = bitpack.unpack_nostraddle(sl(cache.v_store), spec.bits_v, T * D)
+        return (kc.reshape(B, H, count, T, D).astype(jnp.float32),
+                sl(cache.k_min), sl(cache.k_step),
+                vc.reshape(B, H, count, T, D).astype(jnp.float32),
+                sl(cache.v_min), sl(cache.v_step))
+
+    def _tile_decode(self, spec, head_dim):
+        T, D = spec.block_size, head_dim
+        bits_k, bits_v = spec.bits_k, spec.bits_v
+
+        def dk(tile, mn, st):
+            codes = bitpack.unpack_nostraddle_tile(
+                tile, bits_k, T * D).reshape(T, D).astype(jnp.float32)
+            return (mn.astype(jnp.float32)[None, :]
+                    + codes * st.astype(jnp.float32)[None, :])
+
+        def dv(tile, mn, st):
+            codes = bitpack.unpack_nostraddle_tile(
+                tile, bits_v, T * D).reshape(T, D).astype(jnp.float32)
+            return (mn.astype(jnp.float32)[:, None]
+                    + codes * st.astype(jnp.float32)[:, None])
+
+        return FusedTileSpec(k_tile=(spec.words_k(D),), v_tile=(spec.words_v(D),),
+                             has_scales=True, decode_k=dk, decode_v=dv)
 
     def size_report(self, q, *, block_size, head_dim, kivi_bits=2, book=None):
         return packed_ratio(q, block_size * head_dim)
@@ -571,6 +764,24 @@ class HuffmanLayout(PackedLayout):
                 + codes.astype(jnp.float32)
                 * cache.v_step[:, :, :, :, None].astype(jnp.float32)
                 ).astype(jnp.bfloat16)
+
+    def decode_block(self, spec, cache, n):
+        out = self.decode_span(spec, cache, n, 1)
+        return tuple(a[:, :, 0] for a in out)
+
+    def decode_span(self, spec, cache, start, count: int):
+        # Tree-walk decode of one SPAN of blocks per scan step (the vmapped
+        # walk batches over B·H·count streams) — the blockwise path never
+        # reconstructs the whole [B, H, NB, T, D] store.  Codes are
+        # bit-identical to the packed layout's, so the downstream fused
+        # matvec algebra is shared unchanged.
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, count, 2)
+        kc = self._decode(spec, sl(cache.k_store), cache.head_dim,
+                          self.book_k(spec))
+        vc = self._decode(spec, sl(cache.v_store), cache.head_dim,
+                          self.book_v(spec))
+        return (kc.astype(jnp.float32), sl(cache.k_min), sl(cache.k_step),
+                vc.astype(jnp.float32), sl(cache.v_min), sl(cache.v_step))
 
     def size_report(self, q, *, block_size, head_dim, kivi_bits=2, book=None):
         assert book is not None, "huffman size_report needs a fitted codebook"

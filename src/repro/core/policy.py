@@ -48,17 +48,25 @@ class LayerOverride:
     block_size: int | None = None
     k: TensorPolicy = TensorPolicy()
     v: TensorPolicy = TensorPolicy()
+    attn_backend: str | None = None  # per-layer decode-attention backend
 
 
 @dataclasses.dataclass(frozen=True)
 class CompressionPolicy:
-    """Layout + quantizer configuration for a whole model's KV caches."""
+    """Layout + quantizer configuration for a whole model's KV caches.
+
+    ``attn_backend`` picks the decode-attention backend each layer's cache
+    dispatches through (``repro.kernels.ops``): ``"auto"`` (fused on TPU for
+    fused-capable layouts, blockwise-XLA elsewhere), ``"xla"``, ``"fused"``,
+    or any ``register_backend``-ed name; overridable per layer.
+    """
 
     layout: str = "packed"
     block_size: int = 64
     k: TensorPolicy = TensorPolicy(rel_scale=DEFAULT_REL_SCALE_K)
     v: TensorPolicy = TensorPolicy(rel_scale=DEFAULT_REL_SCALE_V)
     kivi_bits: int = 2
+    attn_backend: str = "auto"
     overrides: tuple[LayerOverride, ...] = ()
 
     def __post_init__(self):
@@ -75,14 +83,16 @@ class CompressionPolicy:
     def resolve(self, layer: int) -> "CompressionPolicy":
         """Collapse overrides for one layer into an override-free policy."""
         layout, block, k, v = self.layout, self.block_size, self.k, self.v
+        backend = self.attn_backend
         for ov in self.overrides:
             if layer in ov.layers:
                 layout = ov.layout if ov.layout is not None else layout
                 block = ov.block_size if ov.block_size is not None else block
                 k = ov.k.merged(k)
                 v = ov.v.merged(v)
+                backend = ov.attn_backend if ov.attn_backend is not None else backend
         return CompressionPolicy(layout=layout, block_size=block, k=k, v=v,
-                                 kivi_bits=self.kivi_bits)
+                                 kivi_bits=self.kivi_bits, attn_backend=backend)
 
     def spec_for_layer(self, layer: int, *, max_seq: int,
                        window: int | None = None) -> CacheSpec:
@@ -97,6 +107,7 @@ class CompressionPolicy:
             window=window,
             bits_k_override=r.k.bits,
             bits_v_override=r.v.bits,
+            attn_backend=r.attn_backend,
         )
 
     def layer_specs(self, n_layers: int, *, max_seq: int,

@@ -1,21 +1,32 @@
-"""Pallas TPU kernel: fused bit-unpack + dequantize + flash-decode attention.
+"""Pallas TPU kernel: fused in-situ decompression + flash-decode attention.
 
 The TPU realization of the paper's cache-resident decompression (§3.3.2):
-packed u32 words stream HBM→VMEM once per block; unpacking (reshape/shift/
-mask — no gathers, thanks to the no-straddle layout), dequantization, and the
-attention matvec all happen inside the kernel on VMEM/VREG data.  The
-decompressed K/V tiles are never written back to HBM — exactly the paper's
-"decompressed data consumed in situ", with VMEM playing the role of GPU
-shared memory and the MXU taking the dot products.
+compressed store tiles stream HBM→VMEM once per block; decoding (layout-owned
+— see below), dequantization, and the attention matvec all happen inside the
+kernel on VMEM/VREG data.  The decompressed K/V tiles are never written back
+to HBM — exactly the paper's "decompressed data consumed in situ", with VMEM
+playing the role of GPU shared memory and the MXU taking the dot products.
 
-Grid: ``(B, Hkv, NB)``.  TPU grids execute sequentially with the last axis
-innermost, so VMEM scratch carries the flash-decoding running state
-``(m, l, acc)`` across the NB axis for each (batch, kv-head) pair — the same
-trick flash-decoding uses, here doubling as the decompression consumer.
+The per-tile decode is NOT hardcoded to one layout: the kernel is
+parameterized by a ``repro.core.layouts.FusedTileSpec`` — the layout-owned
+``tile_decode`` hook (DESIGN.md §9).  ``packed``/``kivi`` share the
+no-straddle shift/mask unpack; ``raw`` plugs in a passthrough decoder, so the
+kernel is the uniform decode path rather than a packed-only special case.
+
+Grid: ``(B, Hkv, NB + 1)``.  TPU grids execute sequentially with the last
+axis innermost, so VMEM scratch carries the flash-decoding running state
+``(m, l, acc)`` across the block axis for each (batch, kv-head) pair.  The
+extra final step folds the raw append buffer (the exact residual window) into
+the same running softmax — masked per row by ``buf_len`` — and emits the
+normalized output, so no separate XLA combine pass runs after the kernel.
+
+Per-row ``nb_valid``/``buf_len`` arrive as scalar-prefetch args (indexed by
+the batch grid axis before the body runs): every row of a continuous batch
+attends at its own position, the contract the serving scheduler relies on.
 
 Block shapes keep the MXU happy when ``D`` and ``block_size`` are multiples
-of 128/8; odd head_dims (112, 160, 80 in the assigned archs) are padded by
-``ops.fused_decode_attention`` before the call.
+of 128/8; odd head_dims (80, 112, 160 in the assigned archs) run via the
+interpreter off-TPU and rely on Mosaic relayout on real hardware.
 """
 
 from __future__ import annotations
@@ -25,52 +36,37 @@ import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ref import NEG_INIT
+from repro.kernels.runtime import resolve_interpret
 
 Array = jax.Array
 
 
-def _unpack_tile(words: Array, bits: int, n_codes: int) -> Array:
-    """No-straddle unpack of a flat [W] u32 vector -> [n_codes] f32.
-
-    Pure reshape/shift/mask — lowers to VPU element-wise ops, no gathers.
-    """
-    cpw = 32 // bits
-    # iota is generated in-kernel (a captured host array would be a const).
-    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, cpw), 1) * jnp.uint32(bits)
-    vals = (words[:, None] >> shifts) & jnp.uint32((1 << bits) - 1)
-    return vals.reshape(-1)[:n_codes].astype(jnp.float32)
-
-
 def _kernel(
-    nb_valid_ref,  # scalar prefetch: i32 [B] per-row valid block counts
-    q_ref,         # [1, G, D]
-    ks_ref,        # [1, 1, 1, Wk] u32
-    kmn_ref,       # [1, 1, 1, D]
-    kst_ref,
-    vs_ref,        # [1, 1, 1, Wv] u32
-    vmn_ref,       # [1, 1, 1, T]
-    vst_ref,
-    acc_out,       # [1, G, D] f32
-    m_out,         # [1, G]
-    l_out,         # [1, G]
-    acc_s,         # VMEM scratch [G, D] f32
-    m_s,           # [G]
-    l_s,           # [G]
-    *,
-    bits_k: int,
-    bits_v: int,
+    nb_ref,        # scalar prefetch: i32 [B] per-row valid block counts
+    bl_ref,        # scalar prefetch: i32 [B] per-row buffer lengths
+    *refs,
+    decode_k,
+    decode_v,
+    has_scales: bool,
     block_size: int,
     head_dim: int,
     scale: float,
     nb_total: int,
 ):
+    if has_scales:
+        (q_ref, ks_ref, kmn_ref, kst_ref, vs_ref, vmn_ref, vst_ref,
+         kbuf_ref, vbuf_ref, out_ref, acc_s, m_s, l_s) = refs
+    else:
+        (q_ref, ks_ref, vs_ref, kbuf_ref, vbuf_ref,
+         out_ref, acc_s, m_s, l_s) = refs
+        kmn_ref = kst_ref = vmn_ref = vst_ref = None
+    b = pl.program_id(0)
     n = pl.program_id(2)
-    T, D = block_size, head_dim
+    T = block_size
 
     @pl.when(n == 0)
     def _init():
@@ -78,98 +74,126 @@ def _kernel(
         m_s[...] = jnp.full_like(m_s, NEG_INIT)
         l_s[...] = jnp.zeros_like(l_s)
 
-    # Per-row validity: each batch row of a continuous batch has its own
-    # number of live blocks (the scalar-prefetch ref is indexed by the batch
-    # grid axis, available before the body runs).
-    @pl.when(n < nb_valid_ref[pl.program_id(0)])
+    # Store blocks: each batch row of a continuous batch has its own number
+    # of live blocks; steps past nb_valid[b] (and the final buffer step) skip.
+    @pl.when(n < nb_ref[b])
     def _update():
-        # --- decompress K in situ (VMEM) ---
-        k_codes = _unpack_tile(ks_ref[0, 0, 0, :], bits_k, T * D).reshape(T, D)
-        k_mn = kmn_ref[0, 0, 0, :].astype(jnp.float32)
-        k_st = kst_ref[0, 0, 0, :].astype(jnp.float32)
-        kd = k_mn[None, :] + k_codes * k_st[None, :]  # [T, D]
+        # --- decompress K in situ (VMEM), layout-owned decode ---
+        kd = decode_k(ks_ref[0, 0, 0],
+                      kmn_ref[0, 0, 0] if has_scales else None,
+                      kst_ref[0, 0, 0] if has_scales else None)  # [T, D]
         # --- scores on the MXU ---
         qg = q_ref[0].astype(jnp.float32)  # [G, D]
-        s = jax.lax.dot_general(qg, kd, (((1,), (1,)), ((), ()))) * scale  # [G, T]
+        s = jax.lax.dot_general(qg, kd, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
         # --- flash-decoding running softmax ---
         m_prev = m_s[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new[:, None])  # [G, T]
         # --- decompress V in situ and accumulate ---
-        v_codes = _unpack_tile(vs_ref[0, 0, 0, :], bits_v, T * D).reshape(T, D)
-        v_mn = vmn_ref[0, 0, 0, :].astype(jnp.float32)
-        v_st = vst_ref[0, 0, 0, :].astype(jnp.float32)
-        vd = v_mn[:, None] + v_codes * v_st[:, None]  # [T, D]
-        acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot(p, vd)
+        vd = decode_v(vs_ref[0, 0, 0],
+                      vmn_ref[0, 0, 0] if has_scales else None,
+                      vst_ref[0, 0, 0] if has_scales else None)  # [T, D]
+        acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot(
+            p, vd, preferred_element_type=jnp.float32)
         l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1)
         m_s[...] = m_new
 
-    @pl.when(n == nb_total - 1)
-    def _emit():
-        acc_out[0] = acc_s[...]
-        m_out[0] = m_s[...]
-        l_out[0] = l_s[...]
+    # Final grid step: fold the raw buffer tail into the running softmax
+    # (masked per row by buf_len) and emit the normalized output.
+    @pl.when(n == nb_total)
+    def _buffer_and_emit():
+        qg = q_ref[0].astype(jnp.float32)  # [G, D]
+        kb = kbuf_ref[0, 0].astype(jnp.float32)  # [T, D]
+        s = jax.lax.dot_general(qg, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        tpos = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+        ok = tpos < bl_ref[b]  # [1, T]
+        s = jnp.where(ok, s, NEG_INIT)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None]) * ok  # [G, T]
+        vb = vbuf_ref[0, 0].astype(jnp.float32)
+        acc = acc_s[...] * alpha[:, None] + jax.lax.dot(
+            p, vb, preferred_element_type=jnp.float32)
+        l = l_s[...] * alpha + jnp.sum(p, axis=1)
+        out_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
 
 
-def fused_decode_attention_pallas(
+def fused_cache_attention_pallas(
     q: Array,
     k_store: Array, k_min: Array, k_step: Array,
     v_store: Array, v_min: Array, v_step: Array,
+    k_buf: Array, v_buf: Array,
     nb_valid: Array,  # i32 [B] per-row valid block counts (scalar broadcasts)
+    buf_len: Array,   # i32 [B] per-row buffer lengths (scalar broadcasts)
     *,
-    bits_k: int, bits_v: int, block_size: int,
+    tile,             # layouts.FusedTileSpec (memoized — see fused_tile_spec)
+    block_size: int,
     scale: float | None = None,
-    interpret: bool = True,
-):
-    """Returns (acc [B,Hq,D] f32 unnormalized, m [B,Hq], l [B,Hq])."""
+    interpret: bool | str = "auto",
+) -> Array:
+    """Full decode attention over (store ∥ buffer) -> [B, Hq, D] f32."""
     B, Hq, D = q.shape
-    Hkv, NB, Wk = k_store.shape[1], k_store.shape[2], k_store.shape[3]
-    Wv = v_store.shape[3]
+    Hkv, NB = k_store.shape[1], k_store.shape[2]
     G, T = Hq // Hkv, block_size
     if scale is None:
         scale = 1.0 / math.sqrt(D)
 
     kernel = functools.partial(
         _kernel,
-        bits_k=bits_k, bits_v=bits_v, block_size=T, head_dim=D,
-        scale=scale, nb_total=NB,
+        decode_k=tile.decode_k, decode_v=tile.decode_v,
+        has_scales=tile.has_scales,
+        block_size=T, head_dim=D, scale=scale, nb_total=NB,
     )
-    grid = (B, Hkv, NB)
-    out_shape = [
-        jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
-        jax.ShapeDtypeStruct((B, Hq), jnp.float32),
-        jax.ShapeDtypeStruct((B, Hq), jnp.float32),
-    ]
-# Index maps take the scalar-prefetch ref as a trailing arg.
-    in_specs = [
-        pl.BlockSpec((1, G, D), lambda b, h, n, nb: (b, h, 0)),
-        pl.BlockSpec((1, 1, 1, Wk), lambda b, h, n, nb: (b, h, n, 0)),
-        pl.BlockSpec((1, 1, 1, D), lambda b, h, n, nb: (b, h, n, 0)),
-        pl.BlockSpec((1, 1, 1, D), lambda b, h, n, nb: (b, h, n, 0)),
-        pl.BlockSpec((1, 1, 1, Wv), lambda b, h, n, nb: (b, h, n, 0)),
-        pl.BlockSpec((1, 1, 1, T), lambda b, h, n, nb: (b, h, n, 0)),
-        pl.BlockSpec((1, 1, 1, T), lambda b, h, n, nb: (b, h, n, 0)),
-    ]
-    out_specs = [
-        pl.BlockSpec((1, G, D), lambda b, h, n, nb: (b, h, 0)),
-        pl.BlockSpec((1, G), lambda b, h, n, nb: (b, h)),
-        pl.BlockSpec((1, G), lambda b, h, n, nb: (b, h)),
-    ]
+    grid = (B, Hkv, NB + 1)
+
+    # Index maps take the scalar-prefetch refs as trailing args; store tiles
+    # clamp to the last block on the buffer step (loaded but unused).
+    in_specs = []
+    inputs = []
+
+    in_specs.append(pl.BlockSpec((1, G, D), lambda b, h, n, nb, bl: (b, h, 0)))
+    inputs.append(q)
+
+    def add_store(arr, tile_shape):
+        r = len(tile_shape)
+        in_specs.append(pl.BlockSpec(
+            (1, 1, 1) + tuple(tile_shape),
+            lambda b, h, n, nb, bl, r=r: (b, h, jnp.minimum(n, NB - 1)) + (0,) * r))
+        inputs.append(arr)
+
+    add_store(k_store, tile.k_tile)
+    if tile.has_scales:
+        add_store(k_min, (D,))
+        add_store(k_step, (D,))
+    add_store(v_store, tile.v_tile)
+    if tile.has_scales:
+        add_store(v_min, (T,))
+        add_store(v_step, (T,))
+    for buf in (k_buf, v_buf):
+        in_specs.append(pl.BlockSpec((1, 1, T, D),
+                                     lambda b, h, n, nb, bl: (b, h, 0, 0)))
+        inputs.append(buf)
+
+    out_spec = pl.BlockSpec((1, G, D), lambda b, h, n, nb, bl: (b, h, 0))
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=in_specs,
-            out_specs=out_specs,
+            out_specs=out_spec,
             scratch_shapes=[
                 pltpu.VMEM((G, D), jnp.float32),
                 pltpu.VMEM((G,), jnp.float32),
                 pltpu.VMEM((G,), jnp.float32),
             ],
         ),
-        out_shape=out_shape,
-        interpret=interpret,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
+        interpret=resolve_interpret(interpret),
     )(jnp.broadcast_to(jnp.atleast_1d(nb_valid), (B,)).astype(jnp.int32),
-      q, k_store, k_min, k_step, v_store, v_min, v_step)
+      jnp.broadcast_to(jnp.atleast_1d(buf_len), (B,)).astype(jnp.int32),
+      *inputs)

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 Array = jax.Array
 
 
@@ -101,7 +103,7 @@ def huffman_decode_pallas(
     symbols: Array,   # i32 [MAXN]
     n_per_stream: int,
     max_bits: int,
-    interpret: bool = True,
+    interpret: bool | str = "auto",
 ) -> Array:
     """Decode every block -> uint8 [NBLK, S, n_per_stream]."""
     NBLK, Wslot = payload.shape
@@ -121,7 +123,7 @@ def huffman_decode_pallas(
         ],
         out_specs=pl.BlockSpec((1, S, n_per_stream), lambda n: (n, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((NBLK, S, n_per_stream), jnp.uint8),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(payload, nbits, children, is_symbol, symbols)
 
 
@@ -133,7 +135,7 @@ def huffman_attn_scores_pallas(
     q: Array,       # [D]
     max_bits: int,
     scale: float = 1.0,
-    interpret: bool = True,
+    interpret: bool | str = "auto",
 ) -> Array:
     """Fused single kernel: Huffman decode + dequant + K·q scores [NBLK, S]."""
     NBLK, Wslot = payload.shape
@@ -157,5 +159,5 @@ def huffman_attn_scores_pallas(
         ],
         out_specs=pl.BlockSpec((1, S), lambda n: (n, 0)),
         out_shape=jax.ShapeDtypeStruct((NBLK, S), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(payload, nbits, children, is_symbol, symbols, k_min, k_step, q)

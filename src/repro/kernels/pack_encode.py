@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 Array = jax.Array
 
 
@@ -57,7 +59,7 @@ def quant_pack_pallas(
     rel_scale: float,
     bits: int,
     token_wise: bool,
-    interpret: bool = True,
+    interpret: bool | str = "auto",
 ):
     """Returns (words u32 [NBLK, W], mn [NBLK, U], step [NBLK, U]) where
     U = T for token_wise (V) else D (K)."""
@@ -81,5 +83,5 @@ def quant_pack_pallas(
             jax.ShapeDtypeStruct((NBLK, U), jnp.float32),
             jax.ShapeDtypeStruct((NBLK, U), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x)

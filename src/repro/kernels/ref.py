@@ -29,24 +29,28 @@ def dequant_v(codes: Array, v_min: Array, v_step: Array) -> Array:
     return v_min[..., None].astype(jnp.float32) + codes.astype(jnp.float32) * v_step[..., None].astype(jnp.float32)
 
 
-def fused_decode_attention_ref(
+def fused_cache_attention_ref(
     q: Array,          # [B, Hq, D]
-    k_store: Array,    # u32 [B, Hkv, NB, Wk]
-    k_min: Array,      # [B, Hkv, NB, D]
+    k_store: Array,    # [B, Hkv, NB, *tile.k_tile]
+    k_min: Array,      # [B, Hkv, NB, D] (ignored when not tile.has_scales)
     k_step: Array,
-    v_store: Array,    # u32 [B, Hkv, NB, Wv]
+    v_store: Array,    # [B, Hkv, NB, *tile.v_tile]
     v_min: Array,      # [B, Hkv, NB, T]
     v_step: Array,
+    k_buf: Array, v_buf: Array,  # [B, Hkv, T, D]
     nb_valid: Array,   # i32 [B] per-row valid block counts (scalar broadcasts)
-    bits_k: int,
-    bits_v: int,
+    buf_len: Array,    # i32 [B] per-row buffer lengths (scalar broadcasts)
+    *,
+    tile,              # layouts.FusedTileSpec — same decode the kernel runs
     block_size: int,
     scale: float | None = None,
-):
-    """Oracle for the fused unpack+dequant+flash-decode kernel.
+) -> Array:
+    """Oracle for the fused in-situ-decompression attention kernel.
 
-    Returns (acc [B,Hq,D] f32 — unnormalized, m [B,Hq], l [B,Hq]) so the
-    caller can combine with the raw-buffer part.
+    vmaps the layout's per-tile decode over (B, Hkv, NB) — deliberately
+    materializing the dequantized store, because that is what makes it an
+    oracle rather than a second implementation of the lazily-decoded paths.
+    Returns the normalized output [B, Hq, D] f32 (buffer tail included).
     """
     B, Hq, D = q.shape
     Hkv, NB = k_store.shape[1], k_store.shape[2]
@@ -54,10 +58,16 @@ def fused_decode_attention_ref(
     if scale is None:
         scale = 1.0 / math.sqrt(D)
     nbv = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(nb_valid, jnp.int32)), (B,))
-    kc = bitpack.unpack_nostraddle(k_store, bits_k, T * D).reshape(B, Hkv, NB, T, D)
-    vc = bitpack.unpack_nostraddle(v_store, bits_v, T * D).reshape(B, Hkv, NB, T, D)
-    kd = dequant_k(kc, k_min, k_step)  # [B,Hkv,NB,T,D]
-    vd = dequant_v(vc, v_min, v_step)
+
+    def dec3(fn, store, mn, st):
+        if tile.has_scales:
+            f = jax.vmap(jax.vmap(jax.vmap(fn)))
+            return f(store, mn, st)
+        f = jax.vmap(jax.vmap(jax.vmap(lambda t: fn(t, None, None))))
+        return f(store)
+
+    kd = dec3(tile.decode_k, k_store, k_min, k_step)  # [B,Hkv,NB,T,D] f32
+    vd = dec3(tile.decode_v, v_store, v_min, v_step)
     qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
     s = jnp.einsum("bhgd,bhntd->bhgnt", qg, kd) * scale
     ok = (jnp.arange(NB)[None, :] < nbv[:, None])[:, None, None, :, None]
@@ -68,11 +78,9 @@ def fused_decode_attention_ref(
     p = jnp.exp(s2 - m[..., None]) * jnp.repeat(ok[..., 0], T, -1)
     l = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bhgnt,bhntd->bhgd", p.reshape(B, Hkv, G, NB, T), vd)
-    return (
-        acc.reshape(B, Hq, D),
-        m.reshape(B, Hq),
-        l.reshape(B, Hq),
-    )
+    return combine_with_buffer_ref(
+        acc.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq),
+        q, k_buf, v_buf, buf_len, scale=scale)
 
 
 def combine_with_buffer_ref(

@@ -1,0 +1,39 @@
+"""Execution-environment resolution shared by every kernel wrapper.
+
+Two independent axes select how a kernel runs:
+
+* ``impl``      — which code path: ``"pallas"`` (the Mosaic kernel) or
+                  ``"xla"`` (the pure-jnp oracle).  ``"auto"`` picks pallas on
+                  real TPU and xla elsewhere.
+* ``interpret`` — whether a Pallas call runs under the interpreter.
+                  ``"auto"`` resolves to ``False`` on real TPU (compiled
+                  Mosaic) and ``True`` everywhere else, so TPU runs never
+                  silently execute interpret-mode kernels and CPU tests never
+                  try to compile Mosaic.
+
+Both resolvers read ``jax.default_backend()`` at trace time.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if on_tpu() else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"impl must be auto|pallas|xla, got {impl}")
+    return impl
+
+
+def resolve_interpret(interpret: bool | str) -> bool:
+    if interpret == "auto":
+        return not on_tpu()
+    if not isinstance(interpret, bool):
+        raise ValueError(f'interpret must be "auto" or a bool, got {interpret!r}')
+    return interpret

@@ -323,6 +323,15 @@ def run_analysis(cfg: ModelConfig, shape_name: str, mesh) -> dict:
     }
 
 
+def _serve_shards(chips: int, batch: int) -> tuple[int, int, int]:
+    """(model_n, data_n, batch_shards) of the serve mesh: TP over a 16-wide
+    model axis, batch sharded over the data axes when it divides evenly."""
+    model_n = 16  # single-pod mesh model axis
+    data_n = max(chips // model_n, 1)
+    batch_shards = data_n if batch % data_n == 0 else 1
+    return model_n, data_n, batch_shards
+
+
 def analytic_memory_bytes(cfg: ModelConfig, shape_name: str, chips: int) -> float:
     """Principled minimum HBM traffic per device per step (documented in
     EXPERIMENTS.md §Roofline).  The HLO 'bytes accessed' figure is a naive
@@ -338,13 +347,11 @@ def analytic_memory_bytes(cfg: ModelConfig, shape_name: str, chips: int) -> floa
     """
     info = SHAPES[shape_name]
     B, S = info["batch"], info["seq"]
-    model_n = 16  # single-pod mesh model axis
-    data_n = chips // model_n
+    model_n, data_n, batch_shards = _serve_shards(chips, B)
     # train: FSDP over (data×model); serve: TP over model only (replicated
     # across data) — matches the rule tables in distributed/sharding.py.
     n_local_train = cfg.param_count() / chips
     n_local_serve = cfg.param_count() / model_n
-    batch_shards = data_n if B % data_n == 0 else 1
     d = cfg.d_model
 
     def kv_bytes_per_token_layer() -> float:
@@ -390,6 +397,46 @@ def analytic_memory_bytes(cfg: ModelConfig, shape_name: str, chips: int) -> floa
         ssm_state = (2 * B * cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim
                      * 4 * n_mamba / (batch_shards * model_n))
     return 2 * n_local_serve + kv_r + ssm_state
+
+
+def decode_kv_traffic(cfg: ModelConfig, shape_name: str, chips: int) -> dict | None:
+    """Per-device decode-step KV HBM traffic, fused vs materializing.
+
+    The fused/blockwise backends (DESIGN.md §9) stream each layer's
+    COMPRESSED bytes exactly once per step — `CacheLayout.bytes_per_token`
+    payload+scales, no dequantized writeback.  The retired materializing
+    attend reads the same compressed bytes, then writes the dequantized
+    ``[B, Hkv, NB, T, D]`` K/V intermediate to HBM and reads it back for the
+    matvec: + 2x the RAW cache bytes per step.  The ratio is the
+    data-movement win the paper's Fetch-stage co-design claims; the roofline
+    charges the production (fused) number.
+    """
+    info = SHAPES[shape_name]
+    if info["kind"] != "decode" or not cfg.has_attention:
+        return None
+    from repro.core import layouts as cache_layouts
+
+    B, S = info["batch"], info["seq"]
+    model_n, _, batch_shards = _serve_shards(chips, B)
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    specs = M.cache_specs(cfg, S)
+    if not specs:
+        return None
+    ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    shard = batch_shards * model_n
+    comp_pt = sum(cache_layouts.get_layout(sp.layout).bytes_per_token(sp, Hkv, Dh)
+                  for sp in specs) / len(specs)
+    raw_pt = 2.0 * Hkv * Dh * 2  # K+V bf16 — the dequantized intermediate
+    n_layers = len(specs)
+    fused = B * ctx * comp_pt * n_layers / shard
+    materialized = fused + 2.0 * B * ctx * raw_pt * n_layers / shard
+    return {
+        "fused_bytes": fused,
+        "materialized_bytes": materialized,
+        "traffic_ratio": materialized / max(fused, 1.0),
+        "fused_s": fused / HW["hbm_bw"],
+        "materialized_s": materialized / HW["hbm_bw"],
+    }
 
 
 def roofline_terms(analysis: dict, chips: int,
@@ -457,6 +504,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             rec["analytic_memory_bytes"] = analytic_memory_bytes(cfg, shape_name, chips)
             rec["roofline"] = roofline_terms(rec["analysis"], chips,
                                              rec["analytic_memory_bytes"])
+            traffic = decode_kv_traffic(cfg, shape_name, chips)
+            if traffic is not None:
+                rec["decode_kv_traffic"] = traffic
             rec["model_flops"] = model_flops(cfg, shape_name)
             hlo_global = rec["analysis"]["flops"] * chips  # cost_analysis is per device
             rec["hlo_flops_global"] = hlo_global
@@ -501,6 +551,9 @@ def main():
                              f" c={r['compute_s']:.3f}s m={r['memory_s']:.3f}s"
                              f" ma={r.get('memory_analytic_s', 0):.3f}s"
                              f" x={r['collective_s']:.3f}s")
+                    if "decode_kv_traffic" in rec:
+                        extra += (" kv_fused/mat="
+                                  f"1/{rec['decode_kv_traffic']['traffic_ratio']:.1f}x")
                 if rec["status"] == "failed":
                     extra = " " + rec["error"][:120]
                 print(f"[{mesh_kind}] {arch:22s} {shape_name:12s} "

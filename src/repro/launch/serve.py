@@ -30,6 +30,11 @@ def main():
     ap.add_argument("--arch", default="yi_6b")
     ap.add_argument("--layout", default="packed",
                     choices=list(api.available_layouts()))
+    ap.add_argument("--backend", default=None,
+                    choices=list(api.available_backends()) + ["auto"],
+                    help="decode-attention backend (default: the model "
+                         "config's attn_backend — auto: fused kernel on TPU, "
+                         "blockwise scan elsewhere)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=96)
@@ -41,7 +46,7 @@ def main():
     cfg = dataclasses.replace(cfg, cache_layout=args.layout)
     params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
     server = api.serve(cfg, params, max_slots=args.max_slots,
-                       max_seq=args.max_seq)
+                       max_seq=args.max_seq, attn_backend=args.backend)
     rng = np.random.default_rng(0)
     handles = []
     for i in range(args.requests):

@@ -225,7 +225,14 @@ def attn_block_decode(params, cfg: ModelConfig, x: Array, position: Array,
     """One-token decode: append this token's KV (compress-on-overflow) and
     attend over the compressed cache.  x: [B, 1, d]; position: i32 [B] —
     every row of a continuous batch decodes at its own sequence position
-    (RoPE, append offset, and attention masks are all per-row)."""
+    (RoPE, append offset, and attention masks are all per-row).
+
+    ``kvcache.attend`` dispatches through the attention-backend registry
+    (DESIGN.md §9) under the spec's ``attn_backend`` (threaded from
+    ``ModelConfig``/``CompressionPolicy``): the fused Pallas kernel on TPU,
+    the blockwise lazily-dequantized scan elsewhere — the per-row
+    ``n_flushed``/``buf_len`` vectors flow into the kernel's scalar-prefetch
+    args unchanged."""
     h = layers.rms_norm(x, params["ln_attn"], cfg.norm_eps)
     pos = position.reshape(-1, 1)  # [B, 1]: per-row length-1 seq positions
     q, k, v = qkv_project(params["attn"], cfg, h, pos)

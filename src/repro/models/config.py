@@ -57,6 +57,10 @@ class ModelConfig:
     rel_scale_v: float = 0.15
     kivi_bits: int = 2
     cache_overrides: tuple = ()
+    # Decode-attention backend (repro.kernels.ops registry): "auto" runs the
+    # fused in-situ-decompression Pallas kernel on TPU for fused-capable
+    # layouts and the blockwise-XLA scan elsewhere; "xla"/"fused" pin a path.
+    attn_backend: str = "auto"
     # numerics
     dtype: str = "bfloat16"
 
@@ -70,6 +74,7 @@ class ModelConfig:
             k=TensorPolicy(rel_scale=self.rel_scale_k),
             v=TensorPolicy(rel_scale=self.rel_scale_v),
             kivi_bits=self.kivi_bits,
+            attn_backend=self.attn_backend,
             overrides=tuple(self.cache_overrides),
         )
 

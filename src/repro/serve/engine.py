@@ -36,6 +36,8 @@ class EngineConfig:
     max_seq: int = 4096
     greedy: bool = True
     pad_id: int = 0
+    # Decode-attention backend override (None = model config's attn_backend).
+    attn_backend: str | None = None
 
 
 class Engine:
@@ -49,7 +51,8 @@ class Engine:
         self.server = Server(
             cfg, params,
             ServerConfig(max_slots=ecfg.max_batch, max_seq=ecfg.max_seq,
-                         greedy=ecfg.greedy, pad_id=ecfg.pad_id),
+                         greedy=ecfg.greedy, pad_id=ecfg.pad_id,
+                         attn_backend=ecfg.attn_backend),
             q_chunk=q_chunk, kv_chunk=kv_chunk)
 
     def generate(self, reqs: list[Request]) -> list[Result]:

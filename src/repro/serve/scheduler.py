@@ -16,6 +16,10 @@ cache's own per-row ``n_flushed``/``buf_len``), so requests with different
 prompt lengths and budgets decode side by side with no padding waste — the
 per-row position contract threaded through ``models.model.decode_step``,
 ``models.attention.attn_block_decode``, and ``core.cache`` (DESIGN.md §8).
+Decode attention dispatches through the backend registry (DESIGN.md §9): on
+TPU the server runs the fused in-situ-decompression kernel by default, and
+the per-row vectors flow into its scalar-prefetch args unchanged;
+``ServerConfig.attn_backend`` pins a specific backend.
 
 The server is cooperative: there is no background thread.  ``Handle.result``
 and ``Handle.tokens`` pump ``Server.step`` until their request completes, and
@@ -66,6 +70,10 @@ class ServerConfig:
     # latency) or "ljf" (longest remaining budget first — packs slot loads
     # evenly, shrinking the drain tail; the throughput-bench setting).
     policy: str = "fcfs"
+    # Decode-attention backend override (repro.kernels.ops registry); None
+    # keeps the model config's own attn_backend (default "auto": the fused
+    # in-situ-decompression kernel on TPU, blockwise-XLA scan elsewhere).
+    attn_backend: str | None = None
 
 
 class Handle:
@@ -142,6 +150,8 @@ class Server:
             raise ValueError(f"unknown admission policy {scfg.policy!r}")
         if scfg.max_slots < 1:
             raise ValueError(f"max_slots must be >= 1, got {scfg.max_slots}")
+        if scfg.attn_backend is not None:
+            cfg = dataclasses.replace(cfg, attn_backend=scfg.attn_backend)
         self.cfg, self.params, self.scfg = cfg, params, scfg
         B = scfg.max_slots
         self._slots: list[Handle | None] = [None] * B

@@ -1,0 +1,272 @@
+"""Attention-backend parity suite (DESIGN.md §9).
+
+Every decode-attention backend must agree: the blockwise lazily-dequantized
+scan (``xla``), the fused in-situ-decompression kernel (``fused``, pallas and
+its vmapped oracle), and the retired materializing oracle, against
+``reference_attend`` — across GQA ratios, odd head dims, sliding-window ring
+wraparound, and heterogeneous per-row ``nb_valid``/``buf_len`` like the
+continuous-batching scheduler produces.  Greedy decode through the full model
+must emit bit-identical tokens whichever backend serves it.
+"""
+
+import dataclasses
+import os
+from unittest import mock
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core import layouts
+from repro.kernels import ops
+
+LAYOUTS = ["raw", "packed", "kivi", "huffman"]
+
+
+def _mk(rng, B, Hkv, G, S, D):
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
+    return k, v, q
+
+
+def _all_backends(cache, q):
+    """Every decode path's output for one cache, keyed by name."""
+    outs = {
+        "blockwise": C.attend_blockwise(cache, q),
+        "materialized": C.attend_materialized(cache, q),
+    }
+    if cache.spec.impl.supports_fused:
+        outs["fused_pallas"] = ops.cache_decode_attention(cache, q, impl="pallas")
+        outs["fused_oracle"] = ops.cache_decode_attention(cache, q, impl="xla")
+    return outs
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("G", [1, 4, 8])
+def test_backend_parity_gqa(layout, G, rng):
+    k, v, q = _mk(rng, 2, 2, G, 72, 16)
+    spec = C.CacheSpec(layout=layout, block_size=16, max_seq=128,
+                       rel_scale_k=0.02, rel_scale_v=0.05)
+    cache = C.prefill(spec, k, v)  # 4 blocks + 8 buffered
+    outs = _all_backends(cache, q)
+    ref = C.reference_attend(k, v, q)
+    tol = 0.4 if layout == "kivi" else 0.06
+    for name, out in outs.items():
+        assert float(jnp.max(jnp.abs(out - ref))) < tol, name
+        np.testing.assert_allclose(np.asarray(out), np.asarray(outs["blockwise"]),
+                                   atol=5e-3, err_msg=name)
+
+
+@pytest.mark.parametrize("D", [80, 112, 160])
+def test_backend_parity_odd_head_dims(D, rng):
+    """Odd head dims from the assigned archs (zamba2 80, chameleon 112, 160)."""
+    k, v, q = _mk(rng, 2, 2, 4, 48, D)
+    spec = C.CacheSpec(layout="packed", block_size=16, max_seq=64,
+                       rel_scale_k=0.02, rel_scale_v=0.05)
+    cache = C.prefill(spec, k, v)
+    outs = _all_backends(cache, q)
+    for name, out in outs.items():
+        np.testing.assert_allclose(np.asarray(out), np.asarray(outs["blockwise"]),
+                                   atol=5e-3, err_msg=name)
+    # quantization error vs the exact oracle accumulates ~sqrt(D)
+    assert float(jnp.max(jnp.abs(outs["blockwise"] - C.reference_attend(k, v, q)))) < 0.2
+
+
+@pytest.mark.parametrize("layout", ["packed", "raw"])
+def test_backend_parity_sliding_window_wraparound(layout, rng):
+    """Ring eviction: appends past the window wrap slots; every backend must
+    agree with windowed exact attention."""
+    k, v, q = _mk(rng, 2, 2, 2, 32, 16)
+    spec = C.CacheSpec(layout=layout, block_size=16, max_seq=512, window=32,
+                       rel_scale_k=0.02, rel_scale_v=0.05)
+    cache = C.prefill(spec, k, v)
+    app = jax.jit(C.append)
+    extra_k = rng.normal(size=(40, 2, 2, 16)).astype(np.float32)
+    extra_v = rng.normal(size=(40, 2, 2, 16)).astype(np.float32)
+    for t in range(40):
+        cache = app(cache, jnp.asarray(extra_k[t]), jnp.asarray(extra_v[t]))
+    assert int(cache.n_flushed[0]) > spec.n_blocks  # the ring has wrapped
+    k_all = jnp.concatenate([k, jnp.asarray(extra_k).transpose(1, 2, 0, 3)], 2)
+    v_all = jnp.concatenate([v, jnp.asarray(extra_v).transpose(1, 2, 0, 3)], 2)
+    # Block-aligned eviction retains >= window: the full ring plus whatever
+    # sits in the raw buffer (here 2 blocks + 8 buffered = 40 tokens).
+    visible = spec.n_blocks * spec.block_size + int(cache.buf_len[0])
+    ref = C.reference_attend(k_all, v_all, q, window=visible)
+    for name, out in _all_backends(cache, q).items():
+        assert float(jnp.max(jnp.abs(out - ref))) < 0.06, name
+
+
+@pytest.mark.parametrize("layout", ["packed", "raw", "huffman"])
+def test_backend_parity_heterogeneous_rows(layout, rng):
+    """Rows at different positions (the scheduler's contract): per-row
+    nb_valid/buf_len flow into every backend; each row must match its solo
+    run bit-for-bit per backend."""
+    spec = C.CacheSpec(layout=layout, block_size=16, max_seq=256)
+    k, v, q = _mk(rng, 2, 2, 2, 96, 16)
+    c40 = C.prefill(spec, k[:, :, :40], v[:, :, :40])  # 2 blocks + 8 buffered
+    c96 = C.prefill(spec, k, v)                        # 6 blocks + 0 buffered
+    mixed = jax.tree.map(lambda a, b: jnp.stack([a[0], b[1]]), c40, c96)
+    solo0 = jax.tree.map(lambda x: x[:1], c40)
+    solo1 = jax.tree.map(lambda x: x[1:], c96)
+    mixed_outs = _all_backends(mixed, q)
+    solo0_outs = _all_backends(solo0, q[:1])
+    solo1_outs = _all_backends(solo1, q[1:])
+    for name in mixed_outs:
+        np.testing.assert_array_equal(np.asarray(mixed_outs[name][:1]),
+                                      np.asarray(solo0_outs[name]), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(mixed_outs[name][1:]),
+                                      np.asarray(solo1_outs[name]), err_msg=name)
+
+
+def test_backend_parity_empty_store_and_empty_buffer(rng):
+    """nb_valid == 0 (all in buffer) and buf_len == 0 (all in store)."""
+    spec = C.CacheSpec(layout="packed", block_size=16, max_seq=64,
+                       rel_scale_k=0.02, rel_scale_v=0.05)
+    k, v, q = _mk(rng, 1, 2, 2, 5, 16)
+    cache = C.prefill(spec, k, v)
+    assert int(cache.n_flushed[0]) == 0
+    ref = C.reference_attend(k, v, q)
+    for name, out in _all_backends(cache, q).items():
+        assert float(jnp.max(jnp.abs(out - ref))) < 5e-3, name
+    k2, v2, q2 = _mk(rng, 1, 2, 2, 32, 16)
+    cache2 = C.prefill(spec, k2, v2)
+    assert int(cache2.buf_len[0]) == 0
+    ref2 = C.reference_attend(k2, v2, q2)
+    for name, out in _all_backends(cache2, q2).items():
+        assert float(jnp.max(jnp.abs(out - ref2))) < 0.06, name
+
+
+# ---------------------------------------------------------------------------
+# dispatch / registry
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_backend_auto_off_tpu():
+    env = {k: v for k, v in os.environ.items() if k != ops.ENV_BACKEND}
+    with mock.patch.dict(os.environ, env, clear=True):
+        for layout in LAYOUTS:
+            assert ops.resolve_backend("auto", layouts.get_layout(layout)) == "xla"
+
+
+def test_resolve_backend_fused_falls_back_for_ragged_layouts():
+    assert ops.resolve_backend("fused", layouts.get_layout("huffman")) == "xla"
+    assert ops.resolve_backend("fused", layouts.get_layout("packed")) == "fused"
+    assert ops.resolve_backend("fused", layouts.get_layout("raw")) == "fused"
+
+
+def test_non_fused_layout_has_no_tile_spec_and_kernel_entry_rejects(rng):
+    """supports_fused=False is authoritative even when a layout inherits a
+    fused-capable base's _tile_decode (huffman subclasses packed): the tile
+    spec must be None and the direct kernel entry must raise, not silently
+    unpack entropy-coded slots with the packed decoder."""
+    spec = C.CacheSpec(layout="huffman", block_size=16, max_seq=64)
+    assert spec.impl.tile_decode(spec, 16) is None
+    k, v, q = _mk(rng, 1, 2, 2, 32, 16)
+    cache = C.prefill(spec, k, v)
+    with pytest.raises(ValueError, match="fused-capable layout"):
+        ops.cache_decode_attention(cache, q)
+
+
+def test_resolve_backend_env_override_replaces_auto_only():
+    lay = layouts.get_layout("packed")
+    with mock.patch.dict(os.environ, {ops.ENV_BACKEND: "fused"}):
+        assert ops.resolve_backend("auto", lay) == "fused"
+        assert ops.resolve_backend(None, lay) == "fused"
+        assert ops.resolve_backend("xla", lay) == "xla"  # explicit wins
+
+
+def test_resolve_backend_unknown_errors():
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        ops.resolve_backend("mps", layouts.get_layout("packed"))
+
+
+def test_register_backend_is_dispatchable(rng):
+    calls = []
+
+    @ops.register_backend("_test_probe")
+    def _probe(cache, q, scale=None):
+        calls.append(cache.spec.layout)
+        return C.attend_blockwise(cache, q, scale)
+
+    try:
+        spec = C.CacheSpec(layout="packed", block_size=16, max_seq=64,
+                           attn_backend="_test_probe")
+        k, v, q = _mk(rng, 1, 2, 2, 32, 16)
+        cache = C.prefill(spec, k, v)
+        out = C.attend(cache, q)
+        assert calls == ["packed"]
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(C.attend_blockwise(cache, q)))
+    finally:
+        ops._BACKENDS.pop("_test_probe", None)
+
+
+def test_attn_backend_threads_config_to_spec():
+    from repro.models.config import ModelConfig
+    from repro.core.policy import LayerOverride
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=4, d_model=32,
+                      vocab_size=64, n_heads=2, n_kv_heads=2,
+                      attn_backend="xla",
+                      cache_overrides=(LayerOverride(layers=(2,),
+                                                     attn_backend="fused"),))
+    pol = cfg.compression_policy()
+    assert pol.spec_for_layer(0, max_seq=64).attn_backend == "xla"
+    assert pol.spec_for_layer(2, max_seq=64).attn_backend == "fused"
+
+
+# ---------------------------------------------------------------------------
+# greedy decode bit-identity across backends (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", ["packed", "raw"])
+def test_greedy_decode_tokens_bit_identical_across_backends(layout, rng):
+    import dataclasses as dc
+
+    from repro.models import model as M
+    from repro.models.config import ModelConfig
+
+    base = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                       vocab_size=97, n_heads=4, n_kv_heads=2, head_dim=8,
+                       d_ff=64, cache_block=8, cache_layout=layout)
+    params, _ = M.init_params(base, jax.random.PRNGKey(0))
+    prompt = jnp.asarray(rng.integers(0, 97, size=(2, 21)).astype(np.int32))
+
+    def run(backend):
+        cfg = dc.replace(base, attn_backend=backend)
+        logits, state = jax.jit(
+            lambda p, t: M.prefill(p, cfg, {"tokens": t}, 64))(params, prompt)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        pos = jnp.full((2,), prompt.shape[1], jnp.int32)
+        toks = [tok]
+        step = jax.jit(lambda p, t, po, st: M.decode_step(p, cfg, t, po, st))
+        for _ in range(12):
+            logits, state = step(params, tok, pos, state)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            toks.append(tok)
+            pos = pos + 1
+        return np.stack([np.asarray(t) for t in toks])
+
+    t_xla = run("xla")
+    t_fused = run("fused")
+    np.testing.assert_array_equal(t_xla, t_fused)
+
+
+def test_spec_backend_dispatch_respected(rng):
+    """CacheSpec.attn_backend="fused" routes through the kernel path even on
+    CPU (oracle impl), and the result still tracks the blockwise path."""
+    spec = C.CacheSpec(layout="packed", block_size=16, max_seq=64,
+                       attn_backend="fused")
+    k, v, q = _mk(rng, 1, 2, 2, 40, 16)
+    cache = C.prefill(spec, k, v)
+    out = C.attend(cache, q)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(ops.cache_decode_attention(cache, q)), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(C.attend_blockwise(cache, q)),
+                               atol=5e-3)

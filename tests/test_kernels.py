@@ -10,34 +10,39 @@ import pytest
 from repro.core import cache as C
 from repro.core import huffman
 from repro.kernels import ops, ref
-from repro.kernels.fused_kv_attn import fused_decode_attention_pallas
+from repro.kernels.fused_kv_attn import fused_cache_attention_pallas
 from repro.kernels.huffman_decode import (huffman_attn_scores_pallas,
                                           huffman_decode_pallas)
 from repro.kernels.pack_encode import quant_pack_pallas
 
 
+def _kernel_args(c):
+    return (c.k_store, c.k_min, c.k_step, c.v_store, c.v_min, c.v_step,
+            c.k_buf, c.v_buf,
+            jnp.minimum(c.n_flushed, c.spec.n_blocks), c.buf_len)
+
+
+@pytest.mark.parametrize("layout", ["packed", "raw"])
 @pytest.mark.parametrize("B,Hkv,G,S,D,T", [
     (1, 1, 1, 32, 16, 8),
     (2, 2, 3, 96, 32, 16),
     (1, 4, 2, 64, 64, 16),    # MXU-ish head_dim
     (2, 1, 8, 48, 24, 8),     # odd head_dim
 ])
-def test_fused_decode_attention_sweep(B, Hkv, G, S, D, T, rng):
-    spec = C.CacheSpec(layout="packed", block_size=T, max_seq=2 * S,
+def test_fused_cache_attention_sweep(B, Hkv, G, S, D, T, layout, rng):
+    """Kernel (buffer tail folded in) vs the vmapped tile-decode oracle,
+    through both the packed unpack decoder and the raw passthrough."""
+    spec = C.CacheSpec(layout=layout, block_size=T, max_seq=2 * S,
                        rel_scale_k=0.05, rel_scale_v=0.15)
     k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
     v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype(np.float32))
     q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
     c = C.prefill(spec, k, v)
-    args = (q, c.k_store, c.k_min, c.k_step, c.v_store, c.v_min, c.v_step,
-            c.n_flushed)
-    kw = dict(bits_k=spec.bits_k, bits_v=spec.bits_v, block_size=T)
-    acc_r, m_r, l_r = ref.fused_decode_attention_ref(*args, **kw)
-    acc_p, m_p, l_p = fused_decode_attention_pallas(*args, **kw)
-    np.testing.assert_allclose(np.asarray(acc_p), np.asarray(acc_r),
-                               atol=1e-4, rtol=1e-4)
-    np.testing.assert_allclose(np.asarray(m_p), np.asarray(m_r), atol=1e-5)
-    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_r),
+    tile = spec.impl.tile_decode(spec, D)
+    kw = dict(tile=tile, block_size=T)
+    out_r = ref.fused_cache_attention_ref(q, *_kernel_args(c), **kw)
+    out_p = fused_cache_attention_pallas(q, *_kernel_args(c), **kw)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
                                atol=1e-4, rtol=1e-4)
 
 
