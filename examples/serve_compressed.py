@@ -59,6 +59,26 @@ def main():
         "utf8", errors="replace")
     print(f"sample continuation (kvcomp): {txt!r}")
 
+    # paged block pool (DESIGN.md §10): same workload through the shared
+    # arena — admission is bounded by compressed bytes, not slot count, and
+    # stats() exposes the pool occupancy the scheduler admits against.
+    c = dataclasses.replace(cfg, cache_layout="packed")
+    server = api.serve(c, params, max_slots=len(prompts), max_seq=256,
+                       cache_mode="paged", q_chunk=64, kv_chunk=64)
+    handles = [server.submit(api.Request(prompt=p, max_new_tokens=24))
+               for p in prompts]
+    server.run()
+    paged_toks = [h.result().tokens for h in handles]
+    agree = np.mean([(r.tokens == t).mean()
+                     for r, t in zip(results["packed"][0], paged_toks)])
+    st = server.stats()
+    pl = st["pool"]
+    print(f"[paged   ] packed tokens agree with dense: {agree:5.1%}  "
+          f"pool={pl['pages_total']} pages x {pl['bytes_per_page']}B  "
+          f"high-water {pl['high_water_pages']} pages "
+          f"({pl['high_water_pages'] * pl['bytes_per_page']:,}B live peak)  "
+          f"preemptions={st['preemptions']}")
+
 
 if __name__ == "__main__":
     main()

@@ -49,6 +49,8 @@ register_backend = kernel_ops.register_backend
 def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
           pad_id: int = 0, policy: str = "fcfs",
           attn_backend: str | None = None,
+          cache_mode: str | None = None,
+          pool_hbm_bytes: int | None = None,
           q_chunk: int = 512, kv_chunk: int = 512) -> Server:
     """Launch a continuous-batching server over ``cfg``'s cache policy.
 
@@ -59,11 +61,19 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
     ``attn_backend`` overrides the decode-attention backend (DESIGN.md §9;
     None keeps ``cfg.attn_backend`` — "auto" runs the fused
     in-situ-decompression kernel on TPU, the blockwise scan elsewhere).
+    ``cache_mode`` overrides ``cfg.cache_mode`` (DESIGN.md §10): "paged"
+    pools compressed blocks in shared per-layer arenas sized by
+    ``pool_hbm_bytes`` and admits by memory pressure — slots oversubscribe
+    the dense reservation by the compression ratio, preempting + requeueing
+    the youngest request if the pool runs dry (tokens are unaffected);
+    ``server.stats()`` reports live pool occupancy.
     """
     return Server(cfg, params,
                   ServerConfig(max_slots=max_slots, max_seq=max_seq,
                                pad_id=pad_id, policy=policy,
-                               attn_backend=attn_backend),
+                               attn_backend=attn_backend,
+                               cache_mode=cache_mode,
+                               pool_hbm_bytes=pool_hbm_bytes),
                   q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 
@@ -110,7 +120,11 @@ def compress(k, v, *, policy: CompressionPolicy | None = None, layer: int = 0,
 def decompress(cache: kvcache.LayerKVCache):
     """Reconstruct (k, v) [B, Hkv, S, D] from a cache — decoded store blocks
     followed by the exact raw-buffer tail.  Host-side convenience: the cache
-    lengths must be concrete (outside jit)."""
+    lengths must be concrete (outside jit).  Paged caches are first gathered
+    back into a private dense ring (``repro.core.pool.to_dense``)."""
+    from repro.core import pool as blockpool
+
+    cache = blockpool.to_dense(cache)
     spec = cache.spec
     k_deq, v_deq = spec.impl.fetch(spec, cache)
     B, H, NB, T, D = k_deq.shape

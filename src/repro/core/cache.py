@@ -47,7 +47,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitpack, layouts
+from repro.core import bitpack, layouts, pool
 
 Array = jax.Array
 
@@ -67,6 +67,12 @@ class CacheSpec:
     ``attn_backend`` selects the decode-attention backend
     (``repro.kernels.ops``): ``"auto"`` | ``"xla"`` | ``"fused"`` | any
     ``register_backend``-ed name.
+
+    ``mode`` picks the storage container (DESIGN.md §10): ``"dense"`` gives
+    every row its own ``n_blocks`` ring; ``"paged"`` stores blocks in one
+    shared arena of ``pool_pages`` physical pages (store batch axis 1) that
+    rows address through a per-row page table — the serving scheduler owns
+    page allocation (``repro.core.pool``).
     """
 
     layout: str = "packed"  # any name in layouts.available_layouts()
@@ -79,10 +85,30 @@ class CacheSpec:
     bits_k_override: int | None = None
     bits_v_override: int | None = None
     attn_backend: str = "auto"  # decode-attention backend (DESIGN.md §9)
+    mode: str = "dense"  # "dense" | "paged" (shared-arena, page-indirect)
+    pool_pages: int = 0  # paged: physical pages in the shared arena
+
+    def __post_init__(self):
+        if self.mode not in ("dense", "paged"):
+            raise ValueError(f"mode must be dense|paged, got {self.mode!r}")
+        if self.mode == "paged" and self.pool_pages < 1:
+            raise ValueError(
+                f"paged mode needs pool_pages >= 1, got {self.pool_pages}")
+        if self.window is not None and self.window % self.block_size:
+            # A non-divisible window would make the ring silently retain
+            # block_size-aligned spans shorter than the window claims.
+            raise ValueError(
+                f"block_size ({self.block_size}) must divide window "
+                f"({self.window}): the sliding-window ring evicts whole "
+                f"compression blocks")
 
     @property
     def impl(self) -> layouts.CacheLayout:
         return layouts.get_layout(self.layout)
+
+    @property
+    def paged(self) -> bool:
+        return self.mode == "paged"
 
     @property
     def bits_k(self) -> int:
@@ -98,8 +124,16 @@ class CacheSpec:
 
     @property
     def n_blocks(self) -> int:
+        """Logical ring length: blocks addressable per row (page-table width
+        in paged mode)."""
         span = self.max_seq if self.window is None else min(self.window, self.max_seq)
         return max(1, math.ceil(span / self.block_size))
+
+    @property
+    def store_blocks(self) -> int:
+        """Physical extent of the store's block axis: the shared arena's
+        page count in paged mode, the per-row ring length in dense mode."""
+        return self.pool_pages if self.paged else self.n_blocks
 
     def words_k(self, head_dim: int) -> int:
         return bitpack.nostraddle_words(self.block_size * head_dim, self.bits_k)
@@ -124,6 +158,11 @@ class LayerKVCache:
       k_buf / v_buf : bf16 [B, Hkv, T, D] — raw append buffer (residual window)
       n_flushed : i32 [B] — per-row total blocks ever flushed (ring index)
       buf_len   : i32 [B] — per-row valid entries in the buffer
+      page_tab  : i32 [B, NB] — paged mode only: logical slot -> physical
+                  arena page (-1 unassigned); dense mode holds a [1] dummy.
+                  In paged mode the six store arrays carry batch extent 1
+                  (the shared arena) with ``spec.pool_pages`` on the block
+                  axis, while buffers/lengths stay per-row (DESIGN.md §10).
     """
 
     k_store: Array
@@ -136,13 +175,14 @@ class LayerKVCache:
     v_buf: Array
     n_flushed: Array
     buf_len: Array
+    page_tab: Array
     spec: CacheSpec
 
     # -- pytree ---------------------------------------------------------------
     # Keys are part of the flatten so path-based sharding rules
     # (distributed.sharding.cache_shardings) can match leaves by name.
     _FIELDS = ("k_store", "k_min", "k_step", "v_store", "v_min", "v_step",
-               "k_buf", "v_buf", "n_flushed", "buf_len")
+               "k_buf", "v_buf", "n_flushed", "buf_len", "page_tab")
 
     def tree_flatten_with_keys(self):
         leaves = [(jax.tree_util.GetAttrKey(f), getattr(self, f))
@@ -175,8 +215,13 @@ class LayerKVCache:
 def init_layer_cache(spec: CacheSpec, batch: int, n_kv_heads: int, head_dim: int,
                      dtype=jnp.bfloat16) -> LayerKVCache:
     B, H, T, D = batch, n_kv_heads, spec.block_size, head_dim
+    # Paged mode: the stores are ONE shared arena (batch extent 1, pool_pages
+    # on the block axis — see spec.store_blocks); rows address it through
+    # page_tab.  Buffers and length vectors stay per-row either way.
     k_store, k_min, k_step, v_store, v_min, v_step = spec.impl.init_store(
-        spec, B, H, D, dtype)
+        spec, 1 if spec.paged else B, H, D, dtype)
+    page_tab = (jnp.full((B, spec.n_blocks), -1, jnp.int32) if spec.paged
+                else jnp.zeros((1,), jnp.int32))
     return LayerKVCache(
         k_store=k_store, k_min=k_min, k_step=k_step,
         v_store=v_store, v_min=v_min, v_step=v_step,
@@ -184,6 +229,7 @@ def init_layer_cache(spec: CacheSpec, batch: int, n_kv_heads: int, head_dim: int
         v_buf=jnp.zeros((B, H, T, D), dtype),
         n_flushed=jnp.zeros((B,), jnp.int32),
         buf_len=jnp.zeros((B,), jnp.int32),
+        page_tab=page_tab,
         spec=spec,
     )
 
@@ -196,6 +242,13 @@ def init_layer_cache(spec: CacheSpec, batch: int, n_kv_heads: int, head_dim: int
 def prefill(spec: CacheSpec, k: Array, v: Array, dtype=jnp.bfloat16) -> LayerKVCache:
     """Build a cache from prompt KV [B, Hkv, S, D]; whole blocks are
     compressed, the remainder lands in the raw buffer."""
+    if spec.paged:
+        # Bulk prefill writes a private dense ring; paged arenas are
+        # populated by the serving scheduler (solo dense prefill spliced via
+        # pool.splice_row) or by pool.from_dense.  See DESIGN.md §10.
+        raise ValueError(
+            "prefill builds dense caches; compress under the dense twin of "
+            "this spec and re-house it with repro.core.pool.from_dense")
     B, H, S, D = k.shape
     T, NB = spec.block_size, spec.n_blocks
     n_full = S // T
@@ -245,6 +298,12 @@ def append(cache: LayerKVCache, k_new: Array, v_new: Array) -> LayerKVCache:
     vb = v_buf[:, :, None]
     # NB = out-of-range drop sentinel for rows whose buffer did not fill.
     slots = jnp.where(will_flush, cache.n_flushed % NB, NB)[:, None]  # [B, 1]
+    if spec.paged:
+        # Page-indirect flush: logical ring slots translate through the page
+        # table to physical arena pages (the scheduler assigned them before
+        # this step); unassigned slots become the arena's drop sentinel, so
+        # a retired row's garbage flush can never corrupt a reused page.
+        slots = pool.lookup_slots(cache.page_tab, slots, NB, spec.pool_pages)
     staged = dataclasses.replace(cache, k_buf=k_buf, v_buf=v_buf)
     # Skip the encode entirely on the (T-1)/T steps where no row flushes —
     # every write would be dropped, and for entropy-coding layouts the dead
@@ -260,6 +319,7 @@ def append(cache: LayerKVCache, k_new: Array, v_new: Array) -> LayerKVCache:
         k_buf=k_buf, v_buf=v_buf,
         n_flushed=cache.n_flushed + will_flush.astype(jnp.int32),
         buf_len=jnp.where(will_flush, 0, pos + 1),
+        page_tab=cache.page_tab,
         spec=spec,
     )
 
@@ -336,7 +396,14 @@ def attend_blockwise(cache: LayerKVCache, q: Array,
         # before n0 in the clamped window were already consumed, so the mask
         # drops them alongside not-yet-flushed slots.
         start = jnp.minimum(n0, NB - span)
-        kc, k_mn, k_st, vc, v_mn, v_st = impl.decode_span(spec, cache, start, span)
+        if spec.paged:
+            # Gather the span's pages out of the shared arena into a dense
+            # per-row view; the layout decodes it unchanged from block 0.
+            kc, k_mn, k_st, vc, v_mn, v_st = impl.decode_span(
+                spec, pool.span_view(cache, start, span), 0, span)
+        else:
+            kc, k_mn, k_st, vc, v_mn, v_st = impl.decode_span(
+                spec, cache, start, span)
         has_scales = k_mn is not None
         # q·(mn + st∘c) = q·mn + q·(st∘c): the rank-1 mn term stays separate
         # (dequantized values are never formed); the step scales fold into
@@ -402,6 +469,7 @@ def attend_materialized(cache: LayerKVCache, q: Array,
     backend-parity tests and as ``benchmarks/decode_path.py``'s baseline.
     Never dispatched to by the serving decode path.
     """
+    cache = pool.to_dense(cache)  # paged: gather pages into a private ring
     spec = cache.spec
     B, Hq, D = q.shape
     Hkv = cache.k_buf.shape[1]

@@ -251,14 +251,26 @@ class _BlockView:
 
 
 def scatter_slots(store: Array, slots: Array, vals: Array) -> Array:
-    """Write per-row block payloads into ring slots of a store array.
+    """Write per-row block payloads into block slots of a store array.
 
-    store : [B, H, NB, ...]; slots : i32 [B, n] (out-of-range slot = drop
-    sentinel — that row writes nothing); vals : [B, H, n, ...].  Rows of a
-    continuous batch flush at different times, so every row addresses its own
-    slot.
+    store : [B, H, NB, ...] (dense ring) or [1, H, P, ...] (a paged arena
+    shared by every row — DESIGN.md §10); slots : i32 [B, n] *physical*
+    block indices (out-of-range = drop sentinel — that row writes nothing;
+    paged callers translate logical ring slots through the page table
+    first, see ``pool.lookup_slots``); vals : [B, H, n, ...].  Rows of a
+    continuous batch flush at different times, so every row addresses its
+    own slot.  Arena writes rely on the pool's no-alias invariant: live
+    rows never share a page, so the scatter is collision-free.
     """
-    B = store.shape[0]
+    B = slots.shape[0]
+    if store.shape[0] == 1 and B > 1:
+        # Shared arena: every row's blocks land in its own pages of the one
+        # store.  (B == 1 degenerates to the dense branch, which writes
+        # store[0, :, slot] — the identical arena update.)
+        flat = slots.reshape(-1)  # [B*n]
+        upd = jnp.moveaxis(vals, 1, 0).reshape(
+            vals.shape[1], -1, *vals.shape[3:])  # [H, B*n, ...]
+        return store[0].at[:, flat].set(upd, mode="drop")[None]
     bidx = jnp.arange(B)[:, None]  # broadcasts against slots [B, n]
     # Advanced indices at axes (0, 2) are separated by the H slice, so the
     # indexed dims move to the front: the update value is [B, n, H, ...].
@@ -433,7 +445,7 @@ class RawLayout(CacheLayout):
         return RAW_BITS_PER_VALUE
 
     def init_store(self, spec, batch, n_kv_heads, head_dim, dtype):
-        B, H, T, D, NB = batch, n_kv_heads, spec.block_size, head_dim, spec.n_blocks
+        B, H, T, D, NB = batch, n_kv_heads, spec.block_size, head_dim, spec.store_blocks
         k_store = jnp.zeros((B, H, NB, T, D), dtype)
         v_store = jnp.zeros((B, H, NB, T, D), dtype)
         dummy = jnp.zeros((1,), dtype)
@@ -492,7 +504,7 @@ class PackedLayout(CacheLayout):
         return bits_for_rel_scale(spec.rel_scale_v)
 
     def init_store(self, spec, batch, n_kv_heads, head_dim, dtype):
-        B, H, T, D, NB = batch, n_kv_heads, spec.block_size, head_dim, spec.n_blocks
+        B, H, T, D, NB = batch, n_kv_heads, spec.block_size, head_dim, spec.store_blocks
         k_store = jnp.zeros((B, H, NB, spec.words_k(D)), jnp.uint32)
         v_store = jnp.zeros((B, H, NB, spec.words_v(D)), jnp.uint32)
         k_min = jnp.zeros((B, H, NB, D), dtype)
@@ -697,7 +709,7 @@ class HuffmanLayout(PackedLayout):
         return hdr, payload
 
     def init_store(self, spec, batch, n_kv_heads, head_dim, dtype):
-        B, H, T, D, NB = batch, n_kv_heads, spec.block_size, head_dim, spec.n_blocks
+        B, H, T, D, NB = batch, n_kv_heads, spec.block_size, head_dim, spec.store_blocks
         hk, pk = self._slot_words(spec, D, self.book_k(spec))
         hv, pv = self._slot_words(spec, D, self.book_v(spec))
         k_store = jnp.zeros((B, H, NB, hk + pk), jnp.uint32)

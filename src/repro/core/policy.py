@@ -59,6 +59,15 @@ class CompressionPolicy:
     dispatches through (``repro.kernels.ops``): ``"auto"`` (fused on TPU for
     fused-capable layouts, blockwise-XLA elsewhere), ``"xla"``, ``"fused"``,
     or any ``register_backend``-ed name; overridable per layer.
+
+    ``mode`` picks the storage container (DESIGN.md §10): ``"dense"``
+    reserves a full per-row block ring per slot; ``"paged"`` stores blocks
+    in one shared arena per layer addressed through per-row page tables, so
+    the serving scheduler admits by memory pressure instead of slot count.
+    The mode is whole-model (not per-layer overridable): every layer must
+    flush the same logical block at the same step for one page id to serve
+    all layers, which also means paged policies reject per-layer
+    ``block_size`` overrides.
     """
 
     layout: str = "packed"
@@ -67,13 +76,21 @@ class CompressionPolicy:
     v: TensorPolicy = TensorPolicy(rel_scale=DEFAULT_REL_SCALE_V)
     kivi_bits: int = 2
     attn_backend: str = "auto"
+    mode: str = "dense"  # "dense" | "paged" (repro.core.pool)
     overrides: tuple[LayerOverride, ...] = ()
 
     def __post_init__(self):
         get_layout(self.layout)  # fail fast on unknown names
+        if self.mode not in ("dense", "paged"):
+            raise ValueError(f"mode must be dense|paged, got {self.mode!r}")
         for ov in self.overrides:
             if ov.layout is not None:
                 get_layout(ov.layout)
+            if self.mode == "paged" and ov.block_size is not None:
+                raise ValueError(
+                    "paged mode needs a uniform block_size across layers "
+                    "(one page id serves every layer's arena); drop the "
+                    f"block_size override on layers {ov.layers}")
 
     @property
     def uniform(self) -> bool:
@@ -92,11 +109,24 @@ class CompressionPolicy:
                 v = ov.v.merged(v)
                 backend = ov.attn_backend if ov.attn_backend is not None else backend
         return CompressionPolicy(layout=layout, block_size=block, k=k, v=v,
-                                 kivi_bits=self.kivi_bits, attn_backend=backend)
+                                 kivi_bits=self.kivi_bits, attn_backend=backend,
+                                 mode=self.mode)
 
     def spec_for_layer(self, layer: int, *, max_seq: int,
-                       window: int | None = None) -> CacheSpec:
+                       window: int | None = None,
+                       pool_pages: int = 0) -> CacheSpec:
+        """Resolve one layer's CacheSpec.
+
+        ``pool_pages`` sizes the shared paged arena and is only known where
+        a pool actually exists (the serving Server derives it from its byte
+        budget and passes it through ``model.init_decode_state``).  A paged
+        policy resolved WITHOUT a pool — solo admission prefills,
+        ``api.compress``, the dry-run — gets the dense twin: those caches
+        are private, full-ring, and are spliced into the arena page-by-page
+        at admission (``pool.splice_row``).
+        """
         r = self.resolve(layer)
+        mode = r.mode if pool_pages > 0 else "dense"
         return CacheSpec(
             layout=r.layout,
             block_size=r.block_size,
@@ -108,9 +138,13 @@ class CompressionPolicy:
             bits_k_override=r.k.bits,
             bits_v_override=r.v.bits,
             attn_backend=r.attn_backend,
+            mode=mode,
+            pool_pages=pool_pages if mode == "paged" else 0,
         )
 
     def layer_specs(self, n_layers: int, *, max_seq: int,
-                    window: int | None = None) -> tuple[CacheSpec, ...]:
-        return tuple(self.spec_for_layer(i, max_seq=max_seq, window=window)
+                    window: int | None = None,
+                    pool_pages: int = 0) -> tuple[CacheSpec, ...]:
+        return tuple(self.spec_for_layer(i, max_seq=max_seq, window=window,
+                                         pool_pages=pool_pages)
                      for i in range(n_layers))

@@ -1,0 +1,356 @@
+"""Paged compressed-block pool (DESIGN.md §10).
+
+KVComp's point is that compressed KV blocks shrink the footprint — yet the
+dense cache mode still reserves ``max_seq / block_size`` ring blocks per
+slot up front, so server admission is bounded by ``max_slots`` rather than
+by the memory the compressed blocks actually occupy.  This module supplies
+the vLLM-style alternative at *compression-block* granularity:
+
+* one shared **arena** of physical block pages per layer (the store arrays
+  of a paged ``LayerKVCache`` carry a singleton batch axis and a page axis
+  of ``CacheSpec.pool_pages`` instead of a per-row ring),
+* a per-row **page table** ``i32 [B, NB]`` mapping each logical ring slot
+  to its physical page (``-1`` = unassigned; reads clamp, writes drop),
+* a host-side **free-list allocator** (``PagedBlockPool``) whose occupancy
+  is accounted in *post-compression* bytes per page, so the serving
+  scheduler admits by actual memory pressure and oversubscribes slots by
+  exactly the compression ratio.
+
+Page *allocation* is host-side and page *indirection* is device-side: the
+scheduler assigns pages before a row's buffer flush can land, and the jitted
+decode step only ever consumes the page table (``lookup_slots`` on the write
+path, ``span_view``/``to_dense`` gathers and the fused kernel's page-table
+scalar-prefetch operand on the read path).  Unassigned slots are write-drop
+and read-masked, so retired rows whose caches keep (garbage) decoding can
+never touch pages that were freed and re-issued to another request.
+
+Layouts stay completely unaware of paging: the logical→physical translation
+happens before ``CacheLayout.write_blocks`` (``core.cache.append``) and the
+gather views present a paged cache to ``decode_span``/``fetch`` as if it
+were dense.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+STORE_FIELDS = ("k_store", "k_min", "k_step", "v_store", "v_min", "v_step")
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=256)
+def page_nbytes(spec, n_kv_heads: int, head_dim: int, dtype=jnp.bfloat16) -> int:
+    """Post-compression bytes one physical page occupies for this layer.
+
+    One page holds one compression block across all six store arrays
+    (payload + quantization scales) for all ``n_kv_heads`` heads.  Computed
+    exactly from the layout's own store shapes by differencing a one-block
+    and a two-block allocation under ``jax.eval_shape`` (layout dummies
+    cancel), so any registered layout — including user ones — is accounted
+    without a bytes formula of its own.  This is the scheduler's admission
+    unit and the invariant the pool's occupancy tests check against.
+    """
+
+    def nbytes(n_blocks: int) -> int:
+        s = dataclasses.replace(spec, mode="dense", pool_pages=0,
+                                max_seq=n_blocks * spec.block_size, window=None)
+        shapes = jax.eval_shape(
+            lambda: s.impl.init_store(s, 1, n_kv_heads, head_dim, dtype))
+        return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in shapes)
+
+    return nbytes(2) - nbytes(1)
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator
+# ---------------------------------------------------------------------------
+
+
+class PoolExhausted(RuntimeError):
+    """Raised by ``alloc`` when the free list cannot satisfy a request."""
+
+
+class PagedBlockPool:
+    """Free-list allocator over ``n_pages`` physical block pages.
+
+    Pure host-side bookkeeping (the device only ever sees page *indices*
+    through the page tables).  ``page_nbytes_per_layer`` is the
+    post-compression bytes one page occupies in each layer's arena; a page
+    id is allocated once for ALL layers (uniform ``block_size`` means every
+    layer flushes the same logical block at the same step), so occupancy is
+    ``live_pages * sum(page_nbytes_per_layer)``.
+
+    Invariants (enforced, and property-tested in ``tests/test_pool.py``):
+    a page is never handed out twice while live, never freed twice, and
+    never freed without having been allocated.
+    """
+
+    def __init__(self, n_pages: int, page_nbytes_per_layer):
+        if n_pages < 1:
+            raise ValueError(f"pool needs >= 1 page, got {n_pages}")
+        self.n_pages = int(n_pages)
+        self.page_nbytes_per_layer = tuple(int(b) for b in page_nbytes_per_layer)
+        self._free: list[int] = list(range(self.n_pages - 1, -1, -1))
+        self._live: set[int] = set()
+        self.high_water = 0
+
+    # -- core ----------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return len(self._live)
+
+    def alloc(self, n: int) -> list[int]:
+        """Pop ``n`` pages off the free list; raises ``PoolExhausted``
+        (allocating nothing) when fewer than ``n`` are free."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"need {n} pages, {len(self._free)}/{self.n_pages} free")
+        pages = [self._free.pop() for _ in range(n)]
+        self._live.update(pages)
+        self.high_water = max(self.high_water, len(self._live))
+        return pages
+
+    def free(self, pages) -> None:
+        """Return pages to the free list; freeing a page that is not live
+        (double free, or never allocated) is a hard error."""
+        for p in pages:
+            p = int(p)
+            if p not in self._live:
+                raise RuntimeError(f"freeing page {p} that is not live")
+            self._live.remove(p)
+            self._free.append(p)
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def bytes_per_page(self) -> int:
+        return sum(self.page_nbytes_per_layer)
+
+    @property
+    def live_bytes(self) -> int:
+        return self.live_pages * self.bytes_per_page
+
+    @property
+    def total_bytes(self) -> int:
+        return self.n_pages * self.bytes_per_page
+
+    def stats(self) -> dict:
+        return {
+            "pages_total": self.n_pages,
+            "pages_live": self.live_pages,
+            "pages_free": self.free_pages,
+            "high_water_pages": self.high_water,
+            "bytes_per_page": self.bytes_per_page,
+            "bytes_live": self.live_bytes,
+            "bytes_total": self.total_bytes,
+            "bytes_live_by_layer": [self.live_pages * b
+                                    for b in self.page_nbytes_per_layer],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Device-side page indirection (all jit-safe)
+# ---------------------------------------------------------------------------
+
+
+def lookup_slots(page_tab: Array, slots: Array, n_blocks: int,
+                 pool_pages: int) -> Array:
+    """Translate logical ring slots ``[B, n]`` to physical pages.
+
+    Preserves the write-drop convention: a slot of ``n_blocks`` (the
+    cache's "this row does not flush" sentinel) or an unassigned table
+    entry (``-1``) maps to ``pool_pages`` — out of range for the arena, so
+    the scatter's ``mode="drop"`` discards the write.  The -1 case is what
+    makes retired rows harmless: the scheduler clears their table row, and
+    any flush their still-running (garbage) decode attempts lands nowhere.
+    """
+    phys = jnp.take_along_axis(page_tab, jnp.clip(slots, 0, n_blocks - 1), axis=1)
+    return jnp.where((slots >= n_blocks) | (phys < 0), pool_pages, phys)
+
+
+class _GatherView:
+    """Duck-typed dense view of a paged cache's stores over one block span.
+
+    Gathers pages ``page_tab[:, start:start+count]`` out of the shared
+    arena into per-row ``[B, H, count, ...]`` arrays, so any
+    ``CacheLayout.decode_span``/``fetch`` consumes paged storage unchanged
+    (the layout slices from block 0 of the view).  Unassigned entries clamp
+    to page 0 — the caller's ``nb_valid`` masking already excludes them.
+    """
+
+    def __init__(self, cache, start, count: int):
+        pages = jax.lax.dynamic_slice_in_dim(cache.page_tab, start, count, 1)
+        idx = jnp.clip(pages, 0, cache.spec.pool_pages - 1)  # [B, C]
+        for f in STORE_FIELDS:
+            a = getattr(cache, f)
+            if a.ndim >= 4:  # layout dummies (e.g. raw's scales) pass through
+                a = jnp.moveaxis(jnp.take(a[0], idx, axis=1), 1, 0)
+            setattr(self, f, a)
+        self.head_dim = cache.head_dim
+
+
+def span_view(cache, start, count: int) -> _GatherView:
+    """Dense-looking view of blocks ``[start, start+count)`` of every row."""
+    return _GatherView(cache, start, count)
+
+
+def to_dense(cache):
+    """Materialize a paged cache as an equivalent dense ``LayerKVCache``.
+
+    Gathers every row's pages into a private ``[B, H, NB, ...]`` ring (the
+    dense twin of the spec), for consumers that want the whole store —
+    ``attend_materialized``, ``api.decompress``, reconstruction tests.
+    Never on the decode hot path.
+    """
+    from repro.core import cache as kvcache  # late: cache imports this module
+
+    spec = cache.spec
+    if not spec.paged:
+        return cache
+    view = _GatherView(cache, 0, spec.n_blocks)
+    return kvcache.LayerKVCache(
+        k_store=view.k_store, k_min=view.k_min, k_step=view.k_step,
+        v_store=view.v_store, v_min=view.v_min, v_step=view.v_step,
+        k_buf=cache.k_buf, v_buf=cache.v_buf,
+        n_flushed=cache.n_flushed, buf_len=cache.buf_len,
+        page_tab=jnp.zeros((1,), jnp.int32),
+        spec=dataclasses.replace(spec, mode="dense", pool_pages=0),
+    )
+
+
+def from_dense(cache, pool_pages: int, pages: Array | np.ndarray | None = None):
+    """Re-house a dense cache's blocks in a fresh paged arena.
+
+    ``pages``: i32 ``[B, NB]`` physical page assignment (entries must be
+    distinct where >= 0; ``-1`` leaves a slot unassigned).  Defaults to the
+    row-major identity ``page(b, i) = b * NB + i``.  This is the
+    test/benchmark bridge: build any cache state with the dense machinery,
+    scatter it into a (permuted) page set, and check every decode path
+    agrees on the paged storage.
+    """
+    from repro.core import cache as kvcache  # late: cache imports this module
+
+    spec = cache.spec
+    if spec.paged:
+        raise ValueError("from_dense takes a dense cache")
+    B, NB = cache.batch, spec.n_blocks
+    if pages is None:
+        if pool_pages < B * NB:
+            raise ValueError(f"identity mapping needs {B * NB} pages, "
+                             f"pool has {pool_pages}")
+        pages = np.arange(B * NB, dtype=np.int32).reshape(B, NB)
+    pages = jnp.asarray(pages, jnp.int32)
+    pspec = dataclasses.replace(spec, mode="paged", pool_pages=pool_pages)
+    paged = kvcache.init_layer_cache(pspec, B, cache.k_buf.shape[1],
+                                     cache.head_dim, cache.k_buf.dtype)
+    # Unassigned (-1) must not wrap to the last page: drop applies after
+    # index normalization, so rewrite the sentinel out of range.
+    flat = jnp.where(pages < 0, pool_pages, pages).reshape(-1)
+    out = {}
+    for f in STORE_FIELDS:
+        arena, dense = getattr(paged, f), getattr(cache, f)
+        if dense.ndim < 4:  # layout dummy — shared as-is
+            out[f] = dense
+            continue
+        # [B, H, NB, ...] -> [H, B*NB, ...] then scatter into arena pages.
+        vals = jnp.moveaxis(dense, 1, 0).reshape(
+            dense.shape[1], B * NB, *dense.shape[3:]).astype(arena.dtype)
+        out[f] = arena[0].at[:, flat].set(vals, mode="drop")[None]
+    return kvcache.LayerKVCache(
+        **out, k_buf=cache.k_buf, v_buf=cache.v_buf,
+        n_flushed=cache.n_flushed, buf_len=cache.buf_len,
+        page_tab=pages, spec=pspec)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-facing splice / page-table maintenance (jit-safe; `row` traced)
+# ---------------------------------------------------------------------------
+
+
+def _lead(cache) -> int:
+    """0 for a bare LayerKVCache, 1 when stacked over layers (scan state)."""
+    return cache.n_flushed.ndim - 1
+
+
+def splice_row(dst, src, row, pages: Array):
+    """Admission splice: land a solo dense prefill in row ``row`` of a paged
+    batched cache (the paged counterpart of ``model.insert_decode_row``).
+
+    ``dst`` is paged (possibly layer-stacked: every leaf has a leading L
+    axis), ``src`` is the batch=1 *dense* cache the solo prefill produced,
+    ``pages`` is i32 ``[NB]``: the physical page for logical block ``i``
+    (``-1`` for blocks the prompt did not fill — those writes drop).  Solo
+    prefill never wraps the ring (prompt <= max_seq), so dense slot ``i``
+    IS logical block ``i`` and the splice is one page-scatter per store.
+    """
+    lead = _lead(dst)
+    pax = lead + 2  # stores: [L?, 1(arena), H, page, ...]
+
+    # ``mode="drop"`` only discards indices that stay out of bounds AFTER
+    # normalization — a raw -1 would wrap to the last page — so the empty
+    # slots' sentinel is rewritten to the (always out-of-range) page count.
+    pages_ix = jnp.where(pages < 0, dst.spec.pool_pages, pages)
+
+    def store_field(d, s):
+        if d.ndim < pax + 2:  # layout dummy scales
+            return d
+        d0 = jnp.moveaxis(d, pax, 0)  # [P, L?, 1, H, ...]
+        s0 = jnp.moveaxis(s, pax, 0)  # [NB, L?, 1, H, ...]
+        return jnp.moveaxis(d0.at[pages_ix].set(s0.astype(d.dtype), mode="drop"),
+                            0, pax)
+
+    def row_field(d, s):  # batch axis at `lead` for buffers and length vectors
+        return jax.lax.dynamic_update_slice_in_dim(d, s.astype(d.dtype), row, lead)
+
+    pt0 = jnp.moveaxis(dst.page_tab, lead, 0)  # [B, L?, NB]
+    ptv = jnp.broadcast_to(pages, pt0.shape[1:]) if lead else pages
+    page_tab = jnp.moveaxis(pt0.at[row].set(ptv), 0, lead)
+
+    return type(dst)(
+        **{f: store_field(getattr(dst, f), getattr(src, f)) for f in STORE_FIELDS},
+        k_buf=row_field(dst.k_buf, src.k_buf),
+        v_buf=row_field(dst.v_buf, src.v_buf),
+        n_flushed=row_field(dst.n_flushed, src.n_flushed),
+        buf_len=row_field(dst.buf_len, src.buf_len),
+        page_tab=page_tab, spec=dst.spec)
+
+
+def assign_pages(cache, rows: Array, slots: Array, pages: Array):
+    """Point ``page_tab[rows[i], slots[i]] = pages[i]`` (vectorized, padded
+    entries use ``rows < 0`` and drop).  The scheduler calls this just
+    before the decode step that will flush those blocks."""
+    lead = _lead(cache)
+    pt = cache.page_tab
+    # Negative padding rows must stay out of bounds (drop happens after
+    # index normalization, so -1 would wrap to the last slot's row).
+    rows = jnp.where(rows < 0, pt.shape[lead], rows)
+    if lead:
+        pt = pt.at[:, rows, slots].set(pages[None], mode="drop")
+    else:
+        pt = pt.at[rows, slots].set(pages, mode="drop")
+    return dataclasses.replace(cache, page_tab=pt)
+
+
+def clear_row(cache, row):
+    """Unassign every page of one row (retire / preempt): subsequent flushes
+    from that slot's garbage decode drop, reads stay masked by nb_valid."""
+    lead = _lead(cache)
+    pt0 = jnp.moveaxis(cache.page_tab, lead, 0)
+    pt = jnp.moveaxis(pt0.at[row].set(-1), 0, lead)
+    return dataclasses.replace(cache, page_tab=pt)

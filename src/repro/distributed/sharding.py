@@ -249,11 +249,14 @@ def cache_shardings(state_shapes, mesh: Mesh):
                               NB→"model" (sequence parallelism: the paper's
                               compression blocks are the SP sharding unit)
       kv k/v_buf            : [L, B, Hkv, T, D]    -> batch→data
-      kv scalars            : [L]                  -> replicated
+      kv scalars + page_tab : [L] / [L, B, NB]     -> replicated
       ssm "conv"            : [..., B, K, C]       -> batch→data, C→"model"
       ssm "ssm"             : [..., B, H, N, P]    -> batch→data, H→"model"
 
-    Any axis that fails divisibility falls back to replication.
+    Any axis that fails divisibility falls back to replication — which is
+    also how paged arenas (store batch extent 1, DESIGN.md §10) degrade
+    gracefully: the batch rule can't divide 1, so the shared arena
+    replicates while its page axis still shards on "model".
     """
     da = data_axes(mesh)
     da_n = int(np.prod([_mesh_size(mesh, a) for a in da])) if da else 1

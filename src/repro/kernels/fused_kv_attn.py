@@ -23,6 +23,10 @@ normalized output, so no separate XLA combine pass runs after the kernel.
 Per-row ``nb_valid``/``buf_len`` arrive as scalar-prefetch args (indexed by
 the batch grid axis before the body runs): every row of a continuous batch
 attends at its own position, the contract the serving scheduler relies on.
+Paged caches (DESIGN.md §10) add the per-row page table as a third
+scalar-prefetch operand: the store BlockSpec index maps resolve logical
+block ``n`` of row ``b`` to its physical arena page before the tile streams
+HBM→VMEM, so the kernel body decodes pooled storage completely unchanged.
 
 Block shapes keep the MXU happy when ``D`` and ``block_size`` are multiples
 of 128/8; odd head_dims (80, 112, 160 in the assigned archs) run via the
@@ -56,7 +60,14 @@ def _kernel(
     head_dim: int,
     scale: float,
     nb_total: int,
+    paged: bool = False,
 ):
+    if paged:
+        # The page table rides as a third scalar-prefetch operand; only the
+        # BlockSpec index maps consume it (they resolve logical block n to
+        # its arena page before the tile streams HBM→VMEM), so the body just
+        # skips past the ref.
+        refs = refs[1:]
     if has_scales:
         (q_ref, ks_ref, kmn_ref, kst_ref, vs_ref, vmn_ref, vst_ref,
          kbuf_ref, vbuf_ref, out_ref, acc_s, m_s, l_s) = refs
@@ -129,15 +140,29 @@ def fused_cache_attention_pallas(
     k_buf: Array, v_buf: Array,
     nb_valid: Array,  # i32 [B] per-row valid block counts (scalar broadcasts)
     buf_len: Array,   # i32 [B] per-row buffer lengths (scalar broadcasts)
+    page_tab: Array | None = None,  # i32 [B, NB] paged: slot -> arena page
     *,
     tile,             # layouts.FusedTileSpec (memoized — see fused_tile_spec)
     block_size: int,
     scale: float | None = None,
     interpret: bool | str = "auto",
 ) -> Array:
-    """Full decode attention over (store ∥ buffer) -> [B, Hq, D] f32."""
+    """Full decode attention over (store ∥ buffer) -> [B, Hq, D] f32.
+
+    With ``page_tab`` the stores are a shared paged arena (batch extent 1,
+    ``P`` pages on the block axis — DESIGN.md §10): the table joins
+    ``nb_valid``/``buf_len`` as a scalar-prefetch operand and every store
+    BlockSpec index map resolves logical block ``n`` of row ``b`` to
+    ``page_tab[b, n]`` before the tile streams HBM→VMEM — the kernel body
+    (decode, flash softmax) is untouched by paging.  Unassigned entries
+    (-1) clamp to page 0; those grid steps are already skipped by the
+    per-row ``nb_valid`` guard.
+    """
     B, Hq, D = q.shape
-    Hkv, NB = k_store.shape[1], k_store.shape[2]
+    paged = page_tab is not None
+    Hkv = k_store.shape[1]
+    NB = page_tab.shape[1] if paged else k_store.shape[2]
+    P = k_store.shape[2]  # physical block extent (arena pages when paged)
     G, T = Hq // Hkv, block_size
     if scale is None:
         scale = 1.0 / math.sqrt(D)
@@ -146,23 +171,33 @@ def fused_cache_attention_pallas(
         _kernel,
         decode_k=tile.decode_k, decode_v=tile.decode_v,
         has_scales=tile.has_scales,
-        block_size=T, head_dim=D, scale=scale, nb_total=NB,
+        block_size=T, head_dim=D, scale=scale, nb_total=NB, paged=paged,
     )
     grid = (B, Hkv, NB + 1)
 
     # Index maps take the scalar-prefetch refs as trailing args; store tiles
-    # clamp to the last block on the buffer step (loaded but unused).
+    # clamp to the last block on the buffer step (loaded but unused).  The
+    # paged variants get one extra trailing ref (the page table).
     in_specs = []
     inputs = []
 
-    in_specs.append(pl.BlockSpec((1, G, D), lambda b, h, n, nb, bl: (b, h, 0)))
+    def fixed_map(*idx):
+        return lambda b, h, n, *scalars: tuple(
+            b if i == "b" else h if i == "h" else i for i in idx)
+
+    in_specs.append(pl.BlockSpec((1, G, D), fixed_map("b", "h", 0)))
     inputs.append(q)
 
     def add_store(arr, tile_shape):
         r = len(tile_shape)
-        in_specs.append(pl.BlockSpec(
-            (1, 1, 1) + tuple(tile_shape),
-            lambda b, h, n, nb, bl, r=r: (b, h, jnp.minimum(n, NB - 1)) + (0,) * r))
+        if paged:
+            def imap(b, h, n, nb, bl, pt, r=r):
+                page = pt[b, jnp.minimum(n, NB - 1)]
+                return (0, h, jnp.clip(page, 0, P - 1)) + (0,) * r
+        else:
+            def imap(b, h, n, nb, bl, r=r):
+                return (b, h, jnp.minimum(n, NB - 1)) + (0,) * r
+        in_specs.append(pl.BlockSpec((1, 1, 1) + tuple(tile_shape), imap))
         inputs.append(arr)
 
     add_store(k_store, tile.k_tile)
@@ -174,15 +209,20 @@ def fused_cache_attention_pallas(
         add_store(v_min, (T,))
         add_store(v_step, (T,))
     for buf in (k_buf, v_buf):
-        in_specs.append(pl.BlockSpec((1, 1, T, D),
-                                     lambda b, h, n, nb, bl: (b, h, 0, 0)))
+        in_specs.append(pl.BlockSpec((1, 1, T, D), fixed_map("b", "h", 0, 0)))
         inputs.append(buf)
 
-    out_spec = pl.BlockSpec((1, G, D), lambda b, h, n, nb, bl: (b, h, 0))
+    out_spec = pl.BlockSpec((1, G, D), fixed_map("b", "h", 0))
+    scalars = [
+        jnp.broadcast_to(jnp.atleast_1d(nb_valid), (B,)).astype(jnp.int32),
+        jnp.broadcast_to(jnp.atleast_1d(buf_len), (B,)).astype(jnp.int32),
+    ]
+    if paged:
+        scalars.append(page_tab.astype(jnp.int32))
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=len(scalars),
             grid=grid,
             in_specs=in_specs,
             out_specs=out_spec,
@@ -194,6 +234,4 @@ def fused_cache_attention_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
         interpret=resolve_interpret(interpret),
-    )(jnp.broadcast_to(jnp.atleast_1d(nb_valid), (B,)).astype(jnp.int32),
-      jnp.broadcast_to(jnp.atleast_1d(buf_len), (B,)).astype(jnp.int32),
-      *inputs)
+    )(*scalars, *inputs)

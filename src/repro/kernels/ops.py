@@ -133,6 +133,7 @@ def fused_cache_attention(
     v_store: Array, v_min: Array, v_step: Array,
     k_buf: Array, v_buf: Array,
     nb_valid: Array, buf_len: Array,
+    page_tab: Array | None = None,
     *,
     tile,  # layouts.FusedTileSpec (memoized — hashable static arg)
     block_size: int,
@@ -143,7 +144,11 @@ def fused_cache_attention(
     """Full decode attention over (store ∥ buffer) -> [B, Hq, D].
 
     ``impl="pallas"`` runs the single fused kernel (buffer tail folded into
-    its softmax combine); ``impl="xla"`` runs the vmapped oracle.
+    its softmax combine); ``impl="xla"`` runs the vmapped oracle.  A
+    ``page_tab`` (i32 [B, NB]) marks the stores as a shared paged arena
+    (DESIGN.md §10): both impls gather K/V tiles through the table —
+    the kernel in its scalar-prefetch index maps, the oracle by an explicit
+    per-row gather.
     """
     impl = resolve_impl(impl)
     D = q.shape[-1]
@@ -153,11 +158,12 @@ def fused_cache_attention(
     if impl == "pallas":
         out = fused_cache_attention_pallas(
             q, k_store, k_min, k_step, v_store, v_min, v_step,
-            k_buf, v_buf, nb_valid, buf_len, interpret=interpret, **kw)
+            k_buf, v_buf, nb_valid, buf_len, page_tab, interpret=interpret,
+            **kw)
     else:
         out = ref.fused_cache_attention_ref(
             q, k_store, k_min, k_step, v_store, v_min, v_step,
-            k_buf, v_buf, nb_valid, buf_len, **kw)
+            k_buf, v_buf, nb_valid, buf_len, page_tab, **kw)
     return out.astype(q.dtype)
 
 
@@ -182,6 +188,7 @@ def cache_decode_attention(cache, q: Array, scale: float | None = None,
         cache.v_store, cache.v_min, cache.v_step,
         cache.k_buf, cache.v_buf,
         jnp.minimum(cache.n_flushed, spec.n_blocks), cache.buf_len,
+        cache.page_tab if spec.paged else None,
         tile=tile, block_size=spec.block_size, scale=scale,
         impl=impl, interpret=interpret,
     )

@@ -31,7 +31,7 @@ def dequant_v(codes: Array, v_min: Array, v_step: Array) -> Array:
 
 def fused_cache_attention_ref(
     q: Array,          # [B, Hq, D]
-    k_store: Array,    # [B, Hkv, NB, *tile.k_tile]
+    k_store: Array,    # [B, Hkv, NB, *tile.k_tile]  (paged: [1, Hkv, P, ...])
     k_min: Array,      # [B, Hkv, NB, D] (ignored when not tile.has_scales)
     k_step: Array,
     v_store: Array,    # [B, Hkv, NB, *tile.v_tile]
@@ -40,6 +40,7 @@ def fused_cache_attention_ref(
     k_buf: Array, v_buf: Array,  # [B, Hkv, T, D]
     nb_valid: Array,   # i32 [B] per-row valid block counts (scalar broadcasts)
     buf_len: Array,    # i32 [B] per-row buffer lengths (scalar broadcasts)
+    page_tab: Array | None = None,  # i32 [B, NB] paged: slot -> arena page
     *,
     tile,              # layouts.FusedTileSpec — same decode the kernel runs
     block_size: int,
@@ -50,9 +51,21 @@ def fused_cache_attention_ref(
     vmaps the layout's per-tile decode over (B, Hkv, NB) — deliberately
     materializing the dequantized store, because that is what makes it an
     oracle rather than a second implementation of the lazily-decoded paths.
+    With ``page_tab`` the stores are a shared paged arena (DESIGN.md §10):
+    each row's tiles are gathered through its page-table entries first —
+    the same indirection the kernel performs in its index maps — and
+    unassigned slots clamp to page 0 under the ``nb_valid`` mask.
     Returns the normalized output [B, Hq, D] f32 (buffer tail included).
     """
     B, Hq, D = q.shape
+    if page_tab is not None:
+        P = k_store.shape[2]
+        idx = jnp.clip(page_tab, 0, P - 1)  # [B, NB]
+        gather = lambda a: jnp.moveaxis(jnp.take(a[0], idx, axis=1), 1, 0)
+        k_store, v_store = gather(k_store), gather(v_store)
+        if tile.has_scales:
+            k_min, k_step = gather(k_min), gather(k_step)
+            v_min, v_step = gather(v_min), gather(v_step)
     Hkv, NB = k_store.shape[1], k_store.shape[2]
     G, T = Hq // Hkv, block_size
     if scale is None:

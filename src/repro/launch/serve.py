@@ -40,13 +40,21 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--cache-mode", default="dense", choices=["dense", "paged"],
+                    help="paged: pool compressed blocks in a shared arena "
+                         "and admit by memory pressure (DESIGN.md §10)")
+    ap.add_argument("--pool-bytes", type=int, default=None,
+                    help="paged: byte budget for the block pool (default: "
+                         "the dense-equivalent footprint of --max-slots)")
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config(args.arch)
     cfg = dataclasses.replace(cfg, cache_layout=args.layout)
     params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
     server = api.serve(cfg, params, max_slots=args.max_slots,
-                       max_seq=args.max_seq, attn_backend=args.backend)
+                       max_seq=args.max_seq, attn_backend=args.backend,
+                       cache_mode=args.cache_mode,
+                       pool_hbm_bytes=args.pool_bytes)
     rng = np.random.default_rng(0)
     handles = []
     for i in range(args.requests):
@@ -63,10 +71,17 @@ def main():
     results = [h.result() for h in handles]
     total = sum(len(r.tokens) for r in results)
     rep = server.memory_report()
-    print(f"layout={args.layout} requests={len(results)} "
-          f"slots={args.max_slots} tokens={total} "
+    print(f"layout={args.layout} mode={args.cache_mode} "
+          f"requests={len(results)} slots={args.max_slots} tokens={total} "
           f"throughput={total / wall:.1f} tok/s "
           f"kv_cache_bytes={rep['kv_bytes']:,}")
+    st = server.stats()
+    if "pool" in st:
+        pl = st["pool"]
+        print(f"  pool: {pl['pages_total']} pages x {pl['bytes_per_page']}B "
+              f"(high water {pl['high_water_pages']}, "
+              f"{pl['bytes_total']:,}B total) "
+              f"preemptions={st['preemptions']}")
     for i, r in enumerate(results[:4]):
         print(f"  req{i}: prompt_len={r.prompt_len} n_tokens={len(r.tokens)} "
               f"prefill={r.prefill_s * 1e3:.0f}ms gen={r.gen_s * 1e3:.0f}ms "

@@ -57,6 +57,12 @@ class ModelConfig:
     rel_scale_v: float = 0.15
     kivi_bits: int = 2
     cache_overrides: tuple = ()
+    # Cache storage container (DESIGN.md §10): "dense" reserves a full block
+    # ring per decode slot; "paged" pools compressed blocks in one shared
+    # arena per layer (page-table indirection) so the Server admits by
+    # memory pressure and oversubscribes slots.  The pool itself is sized by
+    # the Server (ServerConfig.pool_hbm_bytes).
+    cache_mode: str = "dense"
     # Decode-attention backend (repro.kernels.ops registry): "auto" runs the
     # fused in-situ-decompression Pallas kernel on TPU for fused-capable
     # layouts and the blockwise-XLA scan elsewhere; "xla"/"fused" pin a path.
@@ -75,6 +81,7 @@ class ModelConfig:
             v=TensorPolicy(rel_scale=self.rel_scale_v),
             kivi_bits=self.kivi_bits,
             attn_backend=self.attn_backend,
+            mode=self.cache_mode,
             overrides=tuple(self.cache_overrides),
         )
 

@@ -234,16 +234,25 @@ def n_cache_layers(cfg: ModelConfig) -> int:
     return 0
 
 
-def cache_specs(cfg: ModelConfig, max_seq: int) -> tuple[kvcache.CacheSpec, ...]:
-    """Per-cache-layer specs resolved from the model's CompressionPolicy."""
+def cache_specs(cfg: ModelConfig, max_seq: int,
+                pool_pages: int = 0) -> tuple[kvcache.CacheSpec, ...]:
+    """Per-cache-layer specs resolved from the model's CompressionPolicy.
+
+    ``pool_pages`` sizes the shared paged arena (cache_mode="paged"); with
+    the default 0 a paged policy resolves to its dense twin — prefill and
+    every non-serving consumer build private dense caches, and only the
+    Server (which owns the pool) materializes paged state.
+    """
     return cfg.compression_policy().layer_specs(
-        n_cache_layers(cfg), max_seq=max_seq, window=cfg.sliding_window)
+        n_cache_layers(cfg), max_seq=max_seq, window=cfg.sliding_window,
+        pool_pages=pool_pages)
 
 
-def cache_spec(cfg: ModelConfig, max_seq: int) -> kvcache.CacheSpec:
+def cache_spec(cfg: ModelConfig, max_seq: int,
+               pool_pages: int = 0) -> kvcache.CacheSpec:
     """Layer-0 spec (THE spec under a uniform policy — the common case)."""
     return cfg.compression_policy().spec_for_layer(
-        0, max_seq=max_seq, window=cfg.sliding_window)
+        0, max_seq=max_seq, window=cfg.sliding_window, pool_pages=pool_pages)
 
 
 def _check_nonuniform_supported(cfg: ModelConfig):
@@ -253,15 +262,19 @@ def _check_nonuniform_supported(cfg: ModelConfig):
             "(all periods share one weight-shared attention block)")
 
 
-def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                      pool_pages: int = 0):
     """Fresh (empty) decode state for all layers.
 
     Uniform policies stack the per-layer caches (scan-over-layers keeps the
     HLO small); per-layer overrides give each layer its own spec/shape, so
     the caches are held in a tuple and the layer loop unrolls.
+    ``pool_pages`` (serving only) sizes each layer's shared paged arena
+    under ``cache_mode="paged"`` — the caches then hold one arena +
+    per-row page tables instead of per-row rings (DESIGN.md §10).
     """
     policy = cfg.compression_policy()
-    spec = cache_spec(cfg, max_seq)
+    spec = cache_spec(cfg, max_seq, pool_pages)
 
     def stacked_cache(n):
         one = kvcache.init_layer_cache(
@@ -274,7 +287,7 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bflo
         return {"kv": tuple(
             kvcache.init_layer_cache(s, batch, cfg.n_kv_heads,
                                      cfg.resolved_head_dim, dtype)
-            for s in cache_specs(cfg, max_seq))}
+            for s in cache_specs(cfg, max_seq, pool_pages))}
     if not policy.uniform:
         _check_nonuniform_supported(cfg)
     if cfg.family == "ssm":
@@ -296,6 +309,16 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bflo
     raise ValueError(cfg.family)
 
 
+def _insert_leaf(d, s, row):
+    if d.shape == s.shape:
+        return s
+    axis = next(i for i, (a, b) in enumerate(zip(d.shape, s.shape))
+                if a != b)
+    if s.shape[axis] != 1:
+        raise ValueError(f"source state is not batch=1: {s.shape} at axis {axis}")
+    return jax.lax.dynamic_update_slice_in_dim(d, s.astype(d.dtype), row, axis)
+
+
 def insert_decode_row(dst_state, src_state, row):
     """Copy a batch=1 decode state into row ``row`` of a batched state.
 
@@ -308,17 +331,63 @@ def insert_decode_row(dst_state, src_state, row):
     the source wholesale.  ``row`` may be traced (one jit compilation covers
     every slot).
     """
+    return jax.tree.map(lambda d, s: _insert_leaf(d, s, row),
+                        dst_state, src_state)
 
-    def ins(d, s):
-        if d.shape == s.shape:
-            return s
-        axis = next(i for i, (a, b) in enumerate(zip(d.shape, s.shape))
-                    if a != b)
-        if s.shape[axis] != 1:
-            raise ValueError(f"source state is not batch=1: {s.shape} at axis {axis}")
-        return jax.lax.dynamic_update_slice_in_dim(d, s.astype(d.dtype), row, axis)
 
-    return jax.tree.map(ins, dst_state, src_state)
+def insert_decode_row_paged(dst_state, src_state, row, pages):
+    """Paged admission splice (DESIGN.md §10).
+
+    Like ``insert_decode_row``, but the live KV caches are paged (one
+    shared arena + page tables) while the solo prefill ``src_state`` is
+    their *dense twin* — so the KV splice scatters the solo cache's blocks
+    into the arena pages the scheduler allocated (``pages``: i32 [NB],
+    physical page for logical block i, -1 where the prompt left the slot
+    empty) and writes the page-table row, via ``pool.splice_row``.  Every
+    non-KV leaf (buffers ride inside the caches; SSM states for hybrids)
+    takes the generic per-leaf batch-axis splice.  ``row`` may be traced.
+    """
+    from repro.core import pool
+
+    out = {}
+    for key, dval in dst_state.items():
+        sval = src_state[key]
+        if key == "kv":
+            if isinstance(dval, (tuple, list)):
+                out[key] = tuple(pool.splice_row(d, s, row, pages)
+                                 for d, s in zip(dval, sval))
+            else:
+                out[key] = pool.splice_row(dval, sval, row, pages)
+        else:
+            out[key] = jax.tree.map(lambda d, s: _insert_leaf(d, s, row),
+                                    dval, sval)
+    return out
+
+
+def _map_kv(state, fn):
+    kv = state["kv"]
+    kv = (tuple(fn(c) for c in kv) if isinstance(kv, (tuple, list))
+          else fn(kv))
+    return {**state, "kv": kv}
+
+
+def assign_cache_pages(state, rows, slots, pages):
+    """Point ``page_tab[rows[i], slots[i]] = pages[i]`` in every layer's
+    cache (padded entries use rows = -1 and drop).  The scheduler calls
+    this right before the decode step whose buffer flush lands in those
+    pages."""
+    from repro.core import pool
+
+    return _map_kv(state, lambda c: pool.assign_pages(c, rows, slots, pages))
+
+
+def clear_cache_row(state, row):
+    """Unassign row ``row``'s pages in every layer's page table (retire /
+    preempt): later garbage flushes from the vacated slot drop instead of
+    corrupting pages re-issued to another request."""
+    from repro.core import pool
+
+    return _map_kv(state, lambda c: pool.clear_row(c, row))
 
 
 def prefill(params, cfg: ModelConfig, batch, max_seq: int,

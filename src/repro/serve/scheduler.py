@@ -27,6 +27,15 @@ and ``Handle.tokens`` pump ``Server.step`` until their request completes, and
 batched decode step.  Prefill runs per admission at the request's exact
 prompt length (bit-identical to a solo run — no bucket padding enters the
 cache); jit caches one compiled prefill per distinct prompt length.
+
+Under ``cache_mode="paged"`` (DESIGN.md §10) the slots stop reserving a full
+block ring each: compressed blocks live in one shared arena per layer
+(``repro.core.pool``), admission is a memory-pressure check against the
+pool's byte budget (so ``max_slots`` oversubscribes the dense-reservation
+bound by the compression ratio), a page-fault sweep assigns each row its
+next physical page just before the flush that needs it, and on pool
+exhaustion the youngest request is preempted — pages freed, prompt replayed
+on re-admission — leaving greedy tokens bit-identical to solo runs.
 """
 
 from __future__ import annotations
@@ -40,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import pool as blockpool
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
@@ -74,6 +84,19 @@ class ServerConfig:
     # keeps the model config's own attn_backend (default "auto": the fused
     # in-situ-decompression kernel on TPU, blockwise-XLA scan elsewhere).
     attn_backend: str | None = None
+    # Cache storage container override (DESIGN.md §10); None keeps the model
+    # config's own cache_mode.  "paged" pools compressed blocks in a shared
+    # per-layer arena sized by ``pool_hbm_bytes`` and admits by memory
+    # pressure: slots oversubscribe the dense-reservation bound by the
+    # compression ratio, and the youngest request is preempted + requeued
+    # (prompt replayed on re-admit, greedy tokens unchanged) if the pool
+    # runs dry mid-decode.
+    cache_mode: str | None = None
+    # Paged mode: byte budget for all layers' arenas (post-compression block
+    # bytes, the unit repro.core.pool accounts in).  None defaults to the
+    # dense-equivalent footprint (max_slots full ring reservations) — paged
+    # then behaves as pure oversubscription with no added memory.
+    pool_hbm_bytes: int | None = None
 
 
 class Handle:
@@ -152,16 +175,64 @@ class Server:
             raise ValueError(f"max_slots must be >= 1, got {scfg.max_slots}")
         if scfg.attn_backend is not None:
             cfg = dataclasses.replace(cfg, attn_backend=scfg.attn_backend)
+        if scfg.cache_mode is not None:
+            cfg = dataclasses.replace(cfg, cache_mode=scfg.cache_mode)
+        if cfg.cache_mode not in ("dense", "paged"):
+            raise ValueError(f"unknown cache_mode {cfg.cache_mode!r}")
+        self.paged = cfg.cache_mode == "paged"
+        if self.paged and M.n_cache_layers(cfg) == 0:
+            raise ValueError(
+                "paged cache mode needs attention KV caches "
+                f"(family {cfg.family!r} has none)")
         self.cfg, self.params, self.scfg = cfg, params, scfg
         B = scfg.max_slots
         self._slots: list[Handle | None] = [None] * B
         self._queue: collections.deque[Handle] = collections.deque()
         self._cur = np.full(B, scfg.pad_id, np.int32)   # last token per slot
         self._pos = np.zeros(B, np.int32)               # per-row decode position
-        self.state = M.init_decode_state(cfg, B, scfg.max_seq)
+        self._seq = 0                                   # admission counter
+        self._row_seq = [0] * B                         # admission order per row
+        self.preemptions = 0
+
+        if self.paged:
+            # Size the shared arenas from the byte budget: one page = one
+            # compression block across all layers (uniform block_size means
+            # every layer flushes the same logical block at the same step,
+            # so one page id serves all arenas), accounted in actual
+            # post-compression bytes per layer (repro.core.pool.page_nbytes).
+            specs = M.cache_specs(cfg, scfg.max_seq)  # dense twins
+            if len({(s.block_size, s.n_blocks) for s in specs}) > 1:
+                raise ValueError(
+                    "paged mode requires a uniform block_size across layers")
+            self._spec0 = specs[0]
+            per_layer = tuple(
+                blockpool.page_nbytes(s, cfg.n_kv_heads, cfg.resolved_head_dim)
+                for s in specs)
+            nb = self._spec0.n_blocks
+            budget = scfg.pool_hbm_bytes
+            if budget is None:
+                budget = B * nb * sum(per_layer)  # dense-equivalent footprint
+            n_pages = int(budget // max(sum(per_layer), 1))
+            if n_pages < 1:
+                raise ValueError(
+                    f"pool_hbm_bytes={budget} holds no page "
+                    f"(one page across layers is {sum(per_layer)} bytes)")
+            self.pool = blockpool.PagedBlockPool(n_pages, per_layer)
+            # Host mirror of the device page tables (one logical table
+            # shared by every layer): rows index slots, entries are pages.
+            self._pt_host = np.full((B, nb), -1, np.int64)
+            self.state = M.init_decode_state(cfg, B, scfg.max_seq,
+                                             pool_pages=n_pages)
+        else:
+            self.pool = None
+            self.state = M.init_decode_state(cfg, B, scfg.max_seq)
 
         # Greedy argmax runs inside the jitted closures so each step/admit is
         # one dispatch transferring [B] token ids, not [B, V] logits.
+        # Prefill always builds the DENSE twin of the cache spec (admission
+        # prefills are solo: a private full ring at the exact prompt length,
+        # bit-identical to a solo run); the paged splice scatters its blocks
+        # into the arena pages afterwards.
         def _prefill(p, t):
             logits, st = M.prefill(p, cfg, {"tokens": t}, scfg.max_seq,
                                    q_chunk=q_chunk, kv_chunk=kv_chunk)
@@ -175,7 +246,12 @@ class Server:
         # The previous state dies on reassignment every step/admission, so
         # its buffers are donated instead of copied.
         self._decode = jax.jit(_decode, donate_argnums=(3,))
-        self._insert = jax.jit(M.insert_decode_row, donate_argnums=(0,))
+        if self.paged:
+            self._insert = jax.jit(M.insert_decode_row_paged, donate_argnums=(0,))
+            self._assign = jax.jit(M.assign_cache_pages, donate_argnums=(0,))
+            self._clear = jax.jit(M.clear_cache_row, donate_argnums=(0,))
+        else:
+            self._insert = jax.jit(M.insert_decode_row, donate_argnums=(0,))
 
     # -- intake ---------------------------------------------------------------
     def submit(self, request: Request) -> Handle:
@@ -185,9 +261,29 @@ class Server:
             raise ValueError(
                 f"prompt ({len(request.prompt)}) + max_new_tokens "
                 f"({request.max_new_tokens}) exceeds max_seq {self.scfg.max_seq}")
+        if self.paged:
+            # A request must be able to run SOLO: the most pages it can ever
+            # hold (every block its prompt + budget can flush, ring-capped)
+            # has to fit the whole pool, or no amount of preemption admits it.
+            need = self._lifetime_pages(request)
+            if need > self.pool.n_pages:
+                raise ValueError(
+                    f"request needs up to {need} block pages but the pool "
+                    f"holds {self.pool.n_pages}; raise pool_hbm_bytes")
         h = Handle(self, request)
         self._queue.append(h)
         return h
+
+    def _lifetime_pages(self, request: Request) -> int:
+        """Most pages a request can ever hold at once (ring-capped)."""
+        spec = self._spec0
+        total = (len(request.prompt) + request.max_new_tokens) // spec.block_size
+        return min(total, spec.n_blocks)
+
+    def _prefill_pages(self, request: Request) -> int:
+        """Pages the admission prefill writes (full prompt blocks, ring-capped)."""
+        spec = self._spec0
+        return min(len(request.prompt) // spec.block_size, spec.n_blocks)
 
     @property
     def active(self) -> int:
@@ -202,40 +298,151 @@ class Server:
         """Prefill a queued request at its exact prompt length and splice it
         into slot ``row`` of the live decode state.  Returns False when the
         request finished at prefill (budget of 1, or instant EOS) and the
-        slot stays free."""
+        slot stays free.  Paged mode allocates the prompt's block pages and
+        scatters the solo (dense) prefill into them."""
         req = handle.request
         prompt = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
         t0 = time.monotonic()
         first_tok, solo = self._prefill(self.params, prompt)
         first = int(first_tok[0])
         t1 = time.monotonic()
-        handle._prefill_s = t1 - t0
-        handle._t_start = t1
+        # Accumulate across preemption replays: prefill_s sums every prompt
+        # (re)play and t_start keeps the FIRST admission, so Result.gen_s is
+        # the request's true wall time under pool pressure, not just the
+        # post-preemption tail.
+        handle._prefill_s += t1 - t0
+        if handle._t_start is None:
+            handle._t_start = t1
         if handle._push(first):
             return False
-        self.state = self._insert(self.state, solo, row)
+        if self.paged:
+            nb = self._spec0.n_blocks
+            n_blk = self._prefill_pages(req)
+            pages = np.full(nb, -1, np.int64)
+            pages[:n_blk] = self.pool.alloc(n_blk)  # _can_admit checked free
+            self._pt_host[row] = pages
+            self.state = self._insert(self.state, solo, row,
+                                      jnp.asarray(pages, jnp.int32))
+        else:
+            self.state = self._insert(self.state, solo, row)
         self._slots[row] = handle
         self._cur[row] = first
         self._pos[row] = len(req.prompt)
+        self._seq += 1
+        self._row_seq[row] = self._seq
         return True
+
+    def _can_admit(self, handle: Handle) -> bool:
+        """Memory-pressure admission (paged): the prompt's blocks plus one
+        page of decode headroom must be free — NOT the request's whole
+        lifetime, which is what lets slots oversubscribe; the preemption
+        path covers over-commitment later."""
+        if not self.paged:
+            return True
+        need = min(self._prefill_pages(handle.request) + 1, self.pool.n_pages)
+        return self.pool.free_pages >= need
 
     def _pop_next(self) -> Handle:
         if self.scfg.policy == "ljf":
+            # Direct index scan + del (the old double-rotate walked the
+            # deque twice).  max() keeps the FIRST maximum, so equal-budget
+            # requests still leave in arrival order.
             pick = max(range(len(self._queue)),
                        key=lambda i: self._queue[i].request.max_new_tokens)
-            self._queue.rotate(-pick)
-            h = self._queue.popleft()
-            self._queue.rotate(pick)
+            h = self._queue[pick]
+            del self._queue[pick]
             return h
         return self._queue.popleft()
 
+    # -- paged page-fault sweep / preemption ----------------------------------
+    def _live_rows_by_age(self) -> list[int]:
+        return sorted((r for r, s in enumerate(self._slots) if s is not None),
+                      key=lambda r: self._row_seq[r])
+
+    def _release_row(self, row: int) -> None:
+        """Free a row's pages and unassign its device page-table row, so the
+        slot's continuing (garbage) decode can never write into pages that
+        get re-issued to another request."""
+        held = self._pt_host[row][self._pt_host[row] >= 0]
+        if len(held):
+            self.pool.free(held.tolist())
+        self._pt_host[row] = -1
+        self.state = self._clear(self.state, jnp.int32(row))
+
+    def _preempt(self, row: int) -> None:
+        """Evict a live request: free its pages, clear its generated tokens,
+        and requeue it at the queue head.  On re-admission the prompt is
+        replayed (solo prefill) and greedy decode regenerates the exact same
+        tokens, so results — and even an in-flight ``Handle.tokens()``
+        stream — are unaffected beyond latency."""
+        handle = self._slots[row]
+        self._slots[row] = None
+        self._release_row(row)
+        handle._toks.clear()
+        self._queue.appendleft(handle)
+        self.preemptions += 1
+
+    def _ensure_pages(self) -> None:
+        """Assign a physical page to every live row whose buffer flushes on
+        the NEXT decode step (the write path drops unassigned slots, so the
+        page must exist before the flush).  Ring wraparound (sliding-window
+        specs) reuses the slot's existing page in place — block-aligned
+        eviction costs no allocation.  On exhaustion the youngest request is
+        preempted until the flush fits; submit() guarantees any request can
+        run solo, so the sweep always terminates with the oldest progressing.
+        """
+        T, nb = self._spec0.block_size, self._spec0.n_blocks
+        rows_u, slots_u, pages_u = [], [], []
+        for row in self._live_rows_by_age():
+            if self._slots[row] is None:
+                continue  # preempted earlier in this sweep
+            pos = int(self._pos[row])
+            if (pos + 1) % T:
+                continue  # this step only appends to the raw buffer
+            slot = ((pos + 1) // T - 1) % nb
+            if self._pt_host[row, slot] >= 0:
+                continue  # SWA ring reuse: overwrite the old block's page
+            while self.pool.free_pages == 0:
+                # Preempt the youngest row that actually HOLDS pages —
+                # evicting a zero-page row would destroy its progress
+                # without freeing a byte.  One always exists: free == 0
+                # means every page is held by some live row.
+                victim = next(r for r in reversed(self._live_rows_by_age())
+                              if (self._pt_host[r] >= 0).any())
+                self._preempt(victim)
+                if victim == row:
+                    break
+            if self._slots[row] is None:
+                continue
+            page = self.pool.alloc(1)[0]
+            self._pt_host[row, slot] = page
+            rows_u.append(row)
+            slots_u.append(slot)
+            pages_u.append(page)
+        if rows_u:
+            B = self.scfg.max_slots
+            pad = B - len(rows_u)
+            self.state = self._assign(
+                self.state,
+                jnp.asarray(rows_u + [-1] * pad, jnp.int32),
+                jnp.asarray(slots_u + [0] * pad, jnp.int32),
+                jnp.asarray(pages_u + [0] * pad, jnp.int32))
+
     def step(self) -> bool:
-        """Admit whatever fits, then run one batched decode step over the
-        live slots.  Returns True while work remains (active or queued)."""
+        """Admit whatever fits (slot- AND, in paged mode, memory-pressure-
+        bounded), then run one batched decode step over the live slots.
+        Returns True while work remains (active or queued)."""
         free = [i for i, s in enumerate(self._slots) if s is None]
         while free and self._queue:
-            if self._admit(self._pop_next(), free[0]):
+            handle = self._pop_next()
+            if not self._can_admit(handle):
+                # Pool pressure: park it until retirements free pages.
+                self._queue.appendleft(handle)
+                break
+            if self._admit(handle, free[0]):
                 free.pop(0)
+        if self.paged:
+            self._ensure_pages()
         rows = [i for i, s in enumerate(self._slots) if s is not None]
         if not rows:
             return bool(self._queue)
@@ -249,6 +456,8 @@ class Server:
             self._pos[row] += 1
             if self._slots[row]._push(tok):
                 self._slots[row] = None  # retire; slot reused next step
+                if self.paged:
+                    self._release_row(row)
         return bool(self._queue) or any(s is not None for s in self._slots)
 
     def run(self) -> None:
@@ -259,6 +468,19 @@ class Server:
     def memory_report(self) -> dict:
         """Measured bytes of the live decode state (all slots)."""
         return cache_memory_report(self.cfg, self.state)
+
+    def stats(self) -> dict:
+        """Live serving counters; in paged mode includes pool occupancy
+        (pages live/free, byte accounting per layer, high-water mark)."""
+        s = {
+            "cache_mode": "paged" if self.paged else "dense",
+            "active": self.active,
+            "pending": self.pending,
+            "preemptions": self.preemptions,
+        }
+        if self.paged:
+            s["pool"] = self.pool.stats()
+        return s
 
 
 def cache_memory_report(cfg: ModelConfig, state) -> dict:
