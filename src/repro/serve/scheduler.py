@@ -275,9 +275,12 @@ class Server:
         return h
 
     def _lifetime_pages(self, request: Request) -> int:
-        """Most pages a request can ever hold at once (ring-capped)."""
+        """Most pages a request can ever hold at once (ring-capped).  The
+        final generated token retires the request before it is appended, so
+        the cache peaks at prompt + max_new - 1 entries."""
         spec = self._spec0
-        total = (len(request.prompt) + request.max_new_tokens) // spec.block_size
+        total = ((len(request.prompt) + request.max_new_tokens - 1)
+                 // spec.block_size)
         return min(total, spec.n_blocks)
 
     def _prefill_pages(self, request: Request) -> int:
@@ -419,7 +422,17 @@ class Server:
             rows_u.append(row)
             slots_u.append(slot)
             pages_u.append(page)
-        if rows_u:
+        # A later row's victim scan can preempt a row recorded EARLIER in
+        # this sweep (the younger row may hold zero pages, making an older,
+        # already-granted row the youngest page holder).  That row's pages
+        # — including the one just recorded — are back in the free list and
+        # may already be re-issued to a following row, so its stale triple
+        # must not re-point the cleared device row: its full-buffer garbage
+        # flush would land in another request's page this very step.
+        live = [(r, s, p) for r, s, p in zip(rows_u, slots_u, pages_u)
+                if self._slots[r] is not None]
+        if live:
+            rows_u, slots_u, pages_u = map(list, zip(*live))
             B = self.scfg.max_slots
             pad = B - len(rows_u)
             self.state = self._assign(

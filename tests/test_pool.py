@@ -388,6 +388,54 @@ def test_streaming_survives_preemption(setup):
         assert s == h.result().tokens.tolist() and len(s) == 10
 
 
+def _device_page_tables(server):
+    """Every layer's device page table as a host [B, NB] array."""
+    kv = server.state["kv"]
+    caches = kv if isinstance(kv, (tuple, list)) else (kv,)
+    tabs = []
+    for c in caches:
+        pt = np.asarray(c.page_tab)
+        tabs.extend(pt if pt.ndim == 3 else [pt])  # layer-stacked or single
+    return tabs
+
+
+def test_same_sweep_preemption_drops_stale_page_assignment(setup):
+    """Regression: a row granted a page early in an ``_ensure_pages`` sweep
+    can be preempted LATER in the same sweep — a younger zero-page row
+    exhausts the pool and the victim scan picks the youngest page HOLDER,
+    which is the older, already-recorded row.  Its freed page is re-issued
+    (LIFO) to the younger row; the stale triple must not re-point the
+    cleared device row at it, or the vacated slot's garbage flush lands in
+    the other request's live page this very step."""
+    cfg, params, _ = setup
+    cfg = dataclasses.replace(cfg, cache_layout="packed", cache_block=8)
+    page_b, _ = _pool_page_bytes(cfg)
+    rng = np.random.default_rng(17)
+    pa = rng.integers(0, cfg.vocab_size, 14).astype(np.int32)  # 1 prefill page
+    pb = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)   # 0 prefill pages
+    # 2 pages: both admit together (A takes one for its prompt block), and
+    # one decode step later both hit a flush boundary in the SAME sweep
+    # (pos 15 and 7).  A — older, visited first — takes the last free page;
+    # B holds zero pages, so the victim scan preempts A and the LIFO free
+    # list hands B the exact page A was just granted.
+    server = Server(cfg, params,
+                    ServerConfig(max_slots=2, max_seq=256, cache_mode="paged",
+                                 pool_hbm_bytes=2 * page_b),
+                    q_chunk=32, kv_chunk=32)
+    ha = server.submit(Request(prompt=pa, max_new_tokens=6))
+    hb = server.submit(Request(prompt=pb, max_new_tokens=6))
+    while server.step():
+        # the device tables must mirror the host accounting at every step:
+        # under the bug, A's cleared device row resurrects with the stale
+        # (row, slot, page) triple pointing into B's page
+        for tab in _device_page_tables(server):
+            np.testing.assert_array_equal(tab, server._pt_host)
+    assert server.preemptions >= 1, "workload failed to force the same-sweep case"
+    assert ha.result().tokens.tolist() == _solo_greedy(cfg, params, pa, 6)
+    assert hb.result().tokens.tolist() == _solo_greedy(cfg, params, pb, 6)
+    assert server.stats()["pool"]["pages_live"] == 0
+
+
 def test_paged_admits_more_than_dense_at_same_budget(setup):
     """The capacity claim: at one fixed byte budget, paged admission holds
     >= 1.5x the concurrent requests of dense full-ring reservation for a
@@ -427,6 +475,10 @@ def test_submit_rejects_request_larger_than_pool(setup):
         server.submit(Request(prompt=np.zeros(64, np.int32), max_new_tokens=32))
     # a request that fits the pool is accepted
     server.submit(Request(prompt=np.zeros(9, np.int32), max_new_tokens=4))
+    # exact block boundary: the final generated token is never appended, so
+    # prompt + max_new = 32 peaks at 31 entries = 3 pages, filling the pool
+    # exactly — admissible solo (the old off-by-one rejected it)
+    server.submit(Request(prompt=np.zeros(25, np.int32), max_new_tokens=7))
 
 
 def test_server_stats_shape(setup):
