@@ -21,8 +21,22 @@ and sequence lengths:
 Per cell it reports attention steps/s → tok/s (steps × batch / wall) and the
 compiled peak temp memory (``memory_analysis().temp_size_in_bytes`` — the
 materialized intermediate shows up here).  Writes ``BENCH_decode.json``;
-``--require-win`` gates CI on the production path (blockwise off-TPU)
-matching or beating the materializing baseline on every grid cell.
+``--require-win`` gates CI on (a) the production path (blockwise off-TPU)
+matching or beating the materializing baseline per decode-cheap layout in
+geomean, and (b) the huffman FUSED leg existing (``supports_fused`` — the
+maximal-ratio layout must serve through the fused backend, DESIGN.md §9)
+and staying within ``FUSED_GATE_MIN`` of huffman-blockwise at the longest
+context, with one remeasure before failing.  The band, not strict >= 1.0:
+on idle hardware the fused leg wins the long-context cell (x1.2-1.4
+recorded in BENCH_decode.json; the pre-LUT deficit was x0.95 with decode
+~10x slower overall), but the CPU oracle's wide one-pass decode is
+bimodal under box state (+-2x observed), while a genuine decode
+regression — say the one-tree-step-per-BIT walk sneaking back — lands far
+below the band.  The definitive fused-vs-blockwise numbers are the
+real-TPU bench pass's to claim (ROADMAP).  Huffman's (a) is reported but
+not gated for the same variance reason: its two one-pass decode paths
+(materialized, fused-CPU-oracle) and the span-chunked scan trade places
+with context length and box load.
 
     PYTHONPATH=src python benchmarks/decode_path.py --smoke --require-win
 """
@@ -89,6 +103,11 @@ PATHS = {
     "fused": lambda c, q: ops.cache_decode_attention(c, q),
 }
 
+# --require-win floor for huffman fused-vs-blockwise at the longest context
+# (see module docstring: wins on idle hardware, band absorbs the recorded
+# +-2x box-state bimodality of the CPU oracle's one-pass decode).
+FUSED_GATE_MIN = 0.6
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -104,16 +123,19 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grid (compressed layouts, short run)")
     ap.add_argument("--require-win", action="store_true",
-                    help="exit non-zero unless, per layout, the production "
-                         "path (blockwise off-TPU, fused on TPU) >= the "
-                         "materializing baseline tok/s in geomean over the "
-                         "seq-len grid")
+                    help="exit non-zero unless, per decode-cheap layout, the "
+                         "production path (blockwise off-TPU, fused on TPU) "
+                         ">= the materializing baseline tok/s in geomean "
+                         "over the seq-len grid, AND huffman serves a fused "
+                         "leg within FUSED_GATE_MIN of blockwise at the "
+                         "longest context (see module docstring)")
     ap.add_argument("--out", default="BENCH_decode.json")
     args = ap.parse_args()
     if args.smoke:
-        # CI gate runs the production layout of the paper's TPU path; the
-        # full grid (default args) additionally reports raw/kivi/huffman.
-        args.layouts = "packed"
+        # CI gate runs the production layout of the paper's TPU path plus
+        # the maximal-ratio huffman layout (its fused-vs-blockwise win is
+        # gated); the full grid (default args) additionally reports raw/kivi.
+        args.layouts = "packed,huffman"
         args.seq_lens = "1024,4096"
         args.steps = 5
 
@@ -128,6 +150,7 @@ def main():
              "production_path": production,
              "fused_impl": ops.resolve_impl("auto"), "cells": []}
     speedups: dict[str, list[float]] = {}
+    fused_ratios: dict[str, list[float]] = {}
     for layout in args.layouts.split(","):
         for S in (int(s) for s in args.seq_lens.split(",")):
             cache = build_cache(rng, layout, args.batch, args.kv_heads,
@@ -143,6 +166,12 @@ def main():
             mem = (base["peak_temp_bytes"] / prod["peak_temp_bytes"]
                    if prod["peak_temp_bytes"] else None)
             cell["production_mem_reduction"] = mem
+            if "fused" in cell["paths"]:
+                cell["fused_vs_blockwise"] = (
+                    cell["paths"]["fused"]["tok_s"]
+                    / cell["paths"]["blockwise"]["tok_s"])
+                fused_ratios.setdefault(layout, []).append(
+                    cell["fused_vs_blockwise"])
             bench["cells"].append(cell)
             speedups.setdefault(layout, []).append(cell["production_speedup"])
             print(f"[{layout:8s} S={S:5d}] " + "  ".join(
@@ -152,17 +181,55 @@ def main():
                 for n, p in cell["paths"].items())
                 + f"  prod x{cell['production_speedup']:.2f}")
 
+    geomean = lambda xs: float(np.exp(np.mean(np.log(xs))))
     bench["layout_geomean_speedup"] = {
-        l: float(np.exp(np.mean(np.log(xs)))) for l, xs in speedups.items()}
+        l: geomean(xs) for l, xs in speedups.items()}
+    bench["layout_geomean_fused_vs_blockwise"] = {
+        l: geomean(xs) for l, xs in fused_ratios.items()}
     Path(args.out).write_text(json.dumps(bench, indent=2))
     print("per-layout geomean production speedup: " + "  ".join(
         f"{l} x{x:.2f}" for l, x in bench["layout_geomean_speedup"].items()))
+    print("per-layout geomean fused-vs-blockwise: " + "  ".join(
+        f"{l} x{x:.2f}"
+        for l, x in bench["layout_geomean_fused_vs_blockwise"].items()))
     print(f"wrote {args.out}")
-    losses = {l: x for l, x in bench["layout_geomean_speedup"].items() if x < 1.0}
-    if args.require_win and losses:
-        raise SystemExit(
-            "production decode path lost to the materializing baseline on: "
-            + ", ".join(f"{l} ({x:.2f}x)" for l, x in losses.items()))
+    if args.require_win:
+        losses = {l: x for l, x in bench["layout_geomean_speedup"].items()
+                  if x < 1.0 and l != "huffman"}  # see module docstring (b)
+        if losses:
+            raise SystemExit(
+                "production decode path lost to the materializing baseline on: "
+                + ", ".join(f"{l} ({x:.2f}x)" for l, x in losses.items()))
+        # The maximal-ratio layout must serve through the fused backend
+        # (before PR 5 it silently fell back to the blockwise scan) and its
+        # in-kernel decode must stay in the same league as blockwise at
+        # long context — see module docstring for the FUSED_GATE_MIN band.
+        hf_all = [c for c in bench["cells"] if c["layout"] == "huffman"]
+        hf_cells = [c for c in hf_all if "fused_vs_blockwise" in c]
+        if hf_all and not hf_cells:
+            raise SystemExit(
+                "huffman has no fused leg: the layout lost supports_fused")
+        if hf_cells:
+            longest = max(hf_cells, key=lambda c: c["seq_len"])
+            S, ratio = longest["seq_len"], longest["fused_vs_blockwise"]
+            if ratio < FUSED_GATE_MIN:
+                # Transient-load guard: the decisive ratio is a wall-clock
+                # measurement; remeasure the one cell before failing, so a
+                # loaded runner doesn't red the pipeline while a real
+                # regression still fails twice.
+                cache = build_cache(rng, "huffman", args.batch, args.kv_heads,
+                                    args.head_dim, S, args.block)
+                paths = bench_paths(
+                    {n: PATHS[n] for n in ("blockwise", "fused")},
+                    cache, q, args.steps, args.repeats)
+                retry = paths["fused"]["tok_s"] / paths["blockwise"]["tok_s"]
+                print(f"huffman-fused gate retry at S={S}: x{retry:.2f} "
+                      f"(first run x{ratio:.2f})")
+                ratio = max(ratio, retry)
+            if ratio < FUSED_GATE_MIN:
+                raise SystemExit(
+                    f"huffman-fused fell below x{FUSED_GATE_MIN} of "
+                    f"huffman-blockwise at S={S} ({ratio:.2f}x, twice)")
 
 
 if __name__ == "__main__":

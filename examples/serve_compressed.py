@@ -7,6 +7,12 @@ Layouts come from the ``repro.api`` registry, so a newly registered layout
 shows up in this comparison with no changes here.
 
     PYTHONPATH=src python examples/serve_compressed.py
+
+Self-contained: only ``repro.*`` imports (no repo-root ``benchmarks``
+package), so ``PYTHONPATH=src`` alone suffices.  The tiny byte-level LM it
+serves comes from ``repro.launch.tiny_lm`` — the single definition the
+benchmarks also use, sharing one ``artifacts/tiny_lm`` checkpoint so
+neither entry point retrains after the other.
 """
 
 import dataclasses
@@ -14,12 +20,12 @@ import time
 
 import numpy as np
 
-from benchmarks import common
 from repro import api
+from repro.launch.tiny_lm import get_tiny_lm
 
 
 def main():
-    cfg, params, data = common.get_tiny_lm()
+    cfg, params, data = get_tiny_lm()
     prompts = [data.batch_at(900 + i)["tokens"][0][:64].astype(np.int32)
                for i in range(4)]
 

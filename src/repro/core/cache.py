@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -87,10 +88,19 @@ class CacheSpec:
     attn_backend: str = "auto"  # decode-attention backend (DESIGN.md §9)
     mode: str = "dense"  # "dense" | "paged" (shared-arena, page-indirect)
     pool_pages: int = 0  # paged: physical pages in the shared arena
+    # Blockwise-scan tuning knobs (None = REPRO_BLOCKWISE_* env var, else the
+    # module defaults BLOCKWISE_SPAN_TOKENS / BLOCKWISE_UNROLL_MAX below) —
+    # the real-TPU tuning pass turns these instead of editing constants.
+    span_tokens: int | None = None  # ~tokens decoded per scan step
+    unroll_max: int | None = None   # unroll the span loop up to this many steps
 
     def __post_init__(self):
         if self.mode not in ("dense", "paged"):
             raise ValueError(f"mode must be dense|paged, got {self.mode!r}")
+        for f in ("span_tokens", "unroll_max"):
+            val = getattr(self, f)
+            if val is not None and val < 1:
+                raise ValueError(f"{f} must be >= 1 when set, got {val}")
         if self.mode == "paged" and self.pool_pages < 1:
             raise ValueError(
                 f"paged mode needs pool_pages >= 1, got {self.pool_pages}")
@@ -348,6 +358,37 @@ def attend(cache: LayerKVCache, q: Array, scale: float | None = None,
 BLOCKWISE_SPAN_TOKENS = 1024  # ~tokens decoded per scan step (peak-mem knob)
 BLOCKWISE_UNROLL_MAX = 64     # unroll the span loop up to this many steps
 
+ENV_SPAN_TOKENS = "REPRO_BLOCKWISE_SPAN_TOKENS"
+ENV_UNROLL_MAX = "REPRO_BLOCKWISE_UNROLL_MAX"
+
+
+def blockwise_knobs(spec: CacheSpec) -> tuple[int, int]:
+    """Resolve the blockwise scan's (span_tokens, unroll_max).
+
+    Same precedence as the attention-backend knob: an explicit ``CacheSpec``
+    field wins (threaded from ``CompressionPolicy``/``ModelConfig``, per
+    layer overridable), else the ``REPRO_BLOCKWISE_*`` env var (read at
+    trace time — the real-TPU tuning pass sweeps these without code edits),
+    else the module default.
+    """
+
+    def pick(field: int | None, env: str, default: int) -> int:
+        if field is not None:
+            return field
+        raw = os.environ.get(env)
+        if not raw:
+            return default
+        try:
+            val = int(raw)
+        except ValueError:
+            raise ValueError(f"{env}={raw!r} is not an integer") from None
+        if val < 1:  # same bound CacheSpec enforces on the field
+            raise ValueError(f"{env} must be >= 1, got {val}")
+        return val
+
+    return (pick(spec.span_tokens, ENV_SPAN_TOKENS, BLOCKWISE_SPAN_TOKENS),
+            pick(spec.unroll_max, ENV_UNROLL_MAX, BLOCKWISE_UNROLL_MAX))
+
 
 def attend_blockwise(cache: LayerKVCache, q: Array,
                      scale: float | None = None,
@@ -357,19 +398,20 @@ def attend_blockwise(cache: LayerKVCache, q: Array,
 
     Running ``(m, l, acc)`` state walks the NB block axis in spans of a few
     blocks (``span`` blocks per step, sized so one step decodes about
-    ``BLOCKWISE_SPAN_TOKENS`` tokens — enough matvec per step to amortize
-    per-step overhead, while peak temporary state stays one span).  A span
+    ``span_tokens`` tokens — enough matvec per step to amortize per-step
+    overhead, while peak temporary state stays one span; see
+    ``blockwise_knobs`` for how the spec/env/default resolve).  A span
     decodes lazily in one vectorized op through the layout's ``decode_span``
     and dequantization folds into the matvecs with the paper's algebraic
     fusion ``q·(mn + st∘c) = q·mn + q·(st∘c)`` (and its V-side mirror) —
     never the ``[B, Hkv, NB, T, D]`` store nor a ``[B, Hkv, G, NB*T+T]``
-    logits concat.  Up to ``BLOCKWISE_UNROLL_MAX`` steps the loop unrolls
+    logits concat.  Up to ``unroll_max`` steps the loop unrolls
     (XLA fuses each span chain and reuses one span's buffers — measurably
     faster than both lax.scan and the materializing attend on CPU); past
     that (very long contexts) it switches to ``lax.scan`` to keep the HLO
     bounded.  The raw buffer tail merges via the same two-part softmax
     combine the fused kernel path uses.  Any registered layout gets this
-    path for free (huffman tree-decodes one span per step).
+    path for free (huffman LUT-decodes one span per step).
     """
     from repro.kernels import ref as kref  # shared combine; late: kernels import core
 
@@ -380,8 +422,9 @@ def attend_blockwise(cache: LayerKVCache, q: Array,
     T, NB = spec.block_size, spec.n_blocks
     if scale is None:
         scale = 1.0 / math.sqrt(D)
+    span_tokens, unroll_max = blockwise_knobs(spec)
     if span is None:
-        span = max(1, BLOCKWISE_SPAN_TOKENS // T)
+        span = max(1, span_tokens // T)
     span = min(span, NB)
     n_steps = -(-NB // span)
     qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
@@ -444,7 +487,7 @@ def attend_blockwise(cache: LayerKVCache, q: Array,
     m0 = jnp.full((B, Hkv, G), kref.NEG_INIT, jnp.float32)
     l0 = jnp.zeros((B, Hkv, G), jnp.float32)
     acc0 = jnp.zeros((B, Hkv, G, D), jnp.float32)
-    if n_steps <= BLOCKWISE_UNROLL_MAX:
+    if n_steps <= unroll_max:
         carry = (m0, l0, acc0)
         for i in range(n_steps):
             carry, _ = body(carry, i * span)

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitpack, huffman, layouts, quant
@@ -93,14 +94,15 @@ class KVCompCodec:
         payload, nbits, total = huffman.encode_block_jax(streams, cl, ln, cap)
         return payload, nbits, shape
 
-    def decode_huffman(self, payload, nbits, codes_shape, which: str = "k", max_stream_bits: int | None = None):
+    def decode_huffman(self, payload, nbits, codes_shape, which: str = "k"):
+        # Chunked LUT decode is symbol-bounded (one codeword per probe pair),
+        # so the old bit-bound parameter is gone with the bit-serial walk.
         book = self.book_k if which == "k" else self.book_v
         assert book is not None
         head_dim = codes_shape[-1]
-        ch, isym, sym = book.as_device_tables()
-        if max_stream_bits is None:
-            max_stream_bits = head_dim * huffman.WORST_BITS_PER_SYMBOL
-        out = huffman.decode_block_jax(payload, nbits, ch, isym, sym, head_dim, max_stream_bits)
+        out = huffman.decode_block_lut_jax(
+            payload, nbits, jnp.asarray(book.decode_lut()),
+            head_dim, book.decode_probes)
         return out.reshape(codes_shape)
 
     # -- Packed (TPU path) ----------------------------------------------------

@@ -16,7 +16,19 @@ and reuses them during decode.  We keep that split:
   TPU-native replacement for the paper's CUB inclusive scan + global atomic:
   offsets are fully deterministic, so no write races exist by construction).
   Decoding is the paper's branchless tree walk, vectorized across streams
-  (one VPU lane plays the role of one CUDA thread).
+  (one VPU lane plays the role of one CUDA thread).  ``walk_decode_jax`` is
+  the kernel-safe core of that walk — the SAME function runs inside the
+  Pallas decode kernels (``repro.kernels.huffman_decode``) and in the
+  vmapped jnp oracles, so kernel and oracle cannot drift.
+* ``build_decode_lut`` / ``decode_block_lut_jax`` — the chunked
+  direct-lookup decoder (DESIGN.md §9).  Canonical length-limited codes
+  (``MAX_CODE_LEN`` = 16) admit a per-state 8-bit-chunk LUT: entry
+  ``[node, chunk]`` records the first symbol reached walking ``chunk``'s
+  bits from ``node`` (symbol, bits consumed, emitted flag, continuation
+  node), so one symbol decodes in at most ``ceil(max_code_len / 8)`` ≤ 2
+  table probes instead of up to 16 bit-serial tree steps.  This is the
+  decode the huffman cache layout runs — inside the fused attention kernel
+  and in the blockwise XLA floor alike.
 
 Bit order: LSB-first within little-endian u32 words — global bit position p
 lives at word ``p >> 5``, bit ``p & 31``.  Codewords are emitted
@@ -38,6 +50,8 @@ N_SYMBOLS = 256
 MAX_CODE_LEN = 16
 # Worst-case encoded bits per symbol given the length limit.
 WORST_BITS_PER_SYMBOL = MAX_CODE_LEN
+# Stream bits consumed per LUT probe of the chunked direct-lookup decoder.
+LUT_CHUNK_BITS = 8
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +161,21 @@ class CodeBook:
     def as_encode_tables(self):
         return jnp.asarray(self.codes_lsb), jnp.asarray(self.lengths.astype(np.uint32))
 
+    @property
+    def decode_probes(self) -> int:
+        """LUT probes per symbol: one per started LUT_CHUNK_BITS of the
+        longest codeword (≤ 2 under the MAX_CODE_LEN limit)."""
+        return max(1, -(-int(self.lengths.max()) // LUT_CHUNK_BITS))
+
+    def decode_lut(self) -> np.ndarray:
+        """Flat ``[n_nodes * 256]`` i32 chunked-decode LUT (built once,
+        cached on the instance — codebooks are frozen)."""
+        lut = getattr(self, "_lut", None)
+        if lut is None:
+            lut = np.ascontiguousarray(build_decode_lut(self).reshape(-1))
+            object.__setattr__(self, "_lut", lut)
+        return lut
+
 
 def _reverse_bits(code: int, length: int) -> int:
     out = 0
@@ -225,6 +254,45 @@ def build_codebook(hist) -> CodeBook:
         is_symbol=is_symbol,
         symbols=symbols,
     )
+
+
+def build_decode_lut(book: CodeBook) -> np.ndarray:
+    """Chunked-decode LUT ``[n_nodes, 256]`` i32 (host side, runs once).
+
+    Entry ``[s, c]`` walks the ``LUT_CHUNK_BITS`` bits of chunk ``c``
+    (LSB-first — stream bit order) down the array-based tree from node
+    ``s`` and stops at the FIRST leaf:
+
+        bits  0..7   symbol   (decoded symbol; 0 when no leaf was reached)
+        bits  8..11  consumed (stream bits used, ≤ 8)
+        bit   12     emit     (1 iff a leaf was reached inside the chunk)
+        bits 16..    next     (continuation node: root after a leaf, else
+                               the interior node after 8 bits)
+
+    Because canonical codes are length-limited to ``MAX_CODE_LEN`` = 16,
+    a symbol started at the root always completes within
+    ``ceil(MAX_CODE_LEN / 8)`` = 2 probes (``CodeBook.decode_probes``
+    tightens that to 1 when the fitted book's longest code is ≤ 8 bits).
+    """
+    n = book.n_nodes
+    chunks = np.arange(1 << LUT_CHUNK_BITS, dtype=np.int32)
+    idx = np.broadcast_to(np.arange(n, dtype=np.int32)[:, None],
+                          (n, chunks.size)).copy()
+    sym = np.zeros((n, chunks.size), np.int32)
+    consumed = np.zeros((n, chunks.size), np.int32)
+    emitted = np.zeros((n, chunks.size), bool)
+    for b in range(LUT_CHUNK_BITS):
+        bit = (chunks[None, :] >> b) & 1
+        nxt = book.children[idx, bit]
+        live = ~emitted
+        consumed = np.where(live, consumed + 1, consumed)
+        leaf = live & (book.is_symbol[nxt] == 1)
+        sym = np.where(leaf, book.symbols[nxt], sym)
+        idx = np.where(live, nxt, idx)
+        emitted |= leaf
+    nxt_state = np.where(emitted, 0, idx)  # reset-to-root at leaves
+    return (sym | (consumed << 8) | (emitted.astype(np.int32) << 12)
+            | (nxt_state << 16)).astype(np.int32)
 
 
 def histogram(codes: Array) -> Array:
@@ -331,6 +399,53 @@ def encode_block_jax(codes: Array, codes_lsb: Array, lengths: Array, capacity_wo
     return payload, nbits, total_bits
 
 
+def walk_decode_jax(
+    payload: Array,
+    nbits: Array,
+    children: Array,
+    is_symbol: Array,
+    symbols: Array,
+    n_per_stream: int,
+    max_bits: int,
+) -> Array:
+    """The branchless lockstep tree walk — kernel-safe shared core.
+
+    One lane per stream; iteration p processes that stream's p-th bit with
+    the paper's branchless updates (gather child, masked broadcast-write at
+    the lane's output column, multiply-reset to root at leaves).  Lanes
+    whose stream already ended are masked (is_symbol forced to 0), exactly
+    as padding behaves on the GPU.  Only per-lane gathers and elementwise
+    ops — the same function body runs inside the Pallas decode kernels
+    (``repro.kernels.huffman_decode``) and, vmapped, as their jnp oracle.
+    Returns float32 [S, n_per_stream].
+    """
+    S = nbits.shape[0]
+    nbits_i = nbits.astype(jnp.int32)
+    starts = jnp.cumsum(nbits_i) - nbits_i  # deterministic per-stream offsets
+    col = jax.lax.broadcasted_iota(jnp.int32, (S, n_per_stream), 1)
+
+    def body(p, carry):
+        idx, w, out = carry
+        gpos = starts + p  # [S]
+        bit = (payload[gpos >> 5] >> (gpos & 31).astype(jnp.uint32)) & 1
+        idx = children[idx, bit.astype(jnp.int32)]
+        active = (p < nbits_i).astype(jnp.int32)
+        isym = is_symbol[idx] * active
+        sym = symbols[idx].astype(jnp.float32)
+        # Masked broadcast-write: lane s writes column w[s] iff at a leaf.
+        hit = (col == w[:, None]) & (isym[:, None] == 1)
+        out = jnp.where(hit, sym[:, None], out)
+        w = w + isym
+        idx = idx * (1 - isym)  # branchless reset-to-root
+        return idx, w, out
+
+    idx0 = jnp.zeros((S,), jnp.int32)
+    w0 = jnp.zeros((S,), jnp.int32)
+    out0 = jnp.zeros((S, n_per_stream), jnp.float32)
+    _, _, out = jax.lax.fori_loop(0, max_bits, body, (idx0, w0, out0))
+    return out
+
+
 def decode_block_jax(
     payload: Array,
     nbits: Array,
@@ -340,33 +455,73 @@ def decode_block_jax(
     n_per_stream: int,
     max_stream_bits: int,
 ):
-    """Vectorized branchless decode: every stream walks the tree in lockstep.
+    """Vectorized branchless decode: every stream walks the tree in lockstep
+    (``walk_decode_jax``).  Returns uint8 [S, n_per_stream]."""
+    return walk_decode_jax(payload, nbits, children, is_symbol, symbols,
+                           n_per_stream, max_stream_bits).astype(jnp.uint8)
 
-    One lane per stream; iteration p processes that stream's p-th bit.  Lanes
-    whose stream already ended are masked (is_symbol forced to 0), exactly as
-    padding behaves on the GPU.  Returns uint8 [S, n_per_stream].
+
+def _peek_chunk(payload: Array, pos: Array, n_words: int) -> Array:
+    """Extract LUT_CHUNK_BITS stream bits at bit position ``pos`` (LSB-first
+    within little-endian u32 words; straddles at most two words).  Gathers
+    clamp to the payload, so garbage walks past the end stay in bounds."""
+    w = jnp.minimum(pos >> 5, n_words - 1)
+    b = (pos & 31).astype(jnp.uint32)
+    lo = payload[w] >> b
+    # (x << (31 - b)) << 1 == x << (32 - b), well-defined at b == 0.
+    hi = (payload[jnp.minimum(w + 1, n_words - 1)] << (jnp.uint32(31) - b)) << 1
+    mask = jnp.uint32((1 << LUT_CHUNK_BITS) - 1)
+    return ((lo | hi) & mask).astype(jnp.int32)
+
+
+def decode_block_lut_jax(
+    payload: Array,
+    nbits: Array,
+    lut: Array,
+    n_per_stream: int,
+    n_probes: int = 2,
+):
+    """Chunked direct-lookup decode (the production huffman Fetch path).
+
+    Same contract as ``decode_block_jax`` but driven by the flat
+    ``build_decode_lut`` table instead of the bit-serial walk: every stream
+    decodes its j-th symbol in lockstep, one symbol per loop iteration,
+    ``n_probes`` (= ``CodeBook.decode_probes``, ≤ 2) table probes each —
+    instead of one tree step per BIT.  Symbols whose codeword would extend
+    past the stream's ``nbits`` budget decode to 0, exactly as the walk's
+    lane masking leaves padding/truncated streams — bit-identical outputs.
+    Kernel-safe: per-lane gathers, elementwise selects, and a column
+    ``dynamic_update_slice`` only; runs inside the fused Pallas attention
+    kernel and vmapped in jnp.  Returns uint8 [S, n_per_stream].
     """
     S = nbits.shape[0]
+    W = payload.shape[0]
     nbits_i = nbits.astype(jnp.int32)
-    starts = jnp.cumsum(nbits_i) - nbits_i  # exclusive cumsum
+    pos0 = jnp.cumsum(nbits_i) - nbits_i  # exclusive cumsum
+    ends = pos0 + nbits_i  # first bit past each stream's budget
 
-    def body(p, carry):
-        idx, w, out = carry
-        gpos = starts + p
-        bit = (payload[gpos >> 5] >> (gpos & 31).astype(jnp.uint32)) & 1
-        idx = children[idx, bit.astype(jnp.int32)]
-        active = (p < nbits_i).astype(jnp.int32)
-        isym = is_symbol[idx] * active
-        sym = symbols[idx].astype(jnp.uint8)
-        out = out.at[jnp.arange(S), jnp.minimum(w, n_per_stream - 1)].set(
-            jnp.where(isym == 1, sym, out[jnp.arange(S), jnp.minimum(w, n_per_stream - 1)])
-        )
-        w = w + isym
-        idx = idx * (1 - isym)  # reset to root at leaves (branchless)
-        return idx, w, out
+    def body(j, carry):
+        pos, out = carry
+        state = jnp.zeros((S,), jnp.int32)
+        sym = jnp.zeros((S,), jnp.int32)
+        done = jnp.zeros((S,), bool)
+        for _ in range(n_probes):  # static ≤ 2 under MAX_CODE_LEN
+            chunk = _peek_chunk(payload, pos, W)
+            e = lut[state * (1 << LUT_CHUNK_BITS) + chunk]
+            take = ~done
+            emit = ((e >> 12) & 1) == 1
+            sym = jnp.where(take & emit, e & 0xFF, sym)
+            pos = jnp.where(take, pos + ((e >> 8) & 0xF), pos)
+            state = jnp.where(take, e >> 16, state)
+            done = done | emit
+        # Budget mask: the symbol's last bit is pos - 1; a codeword that
+        # runs past `ends` was never whole inside this stream (padding or
+        # truncation) and the walk would not have emitted it.
+        sym = jnp.where(pos <= ends, sym, 0)
+        out = jax.lax.dynamic_update_slice(
+            out, sym.astype(jnp.uint8)[:, None], (0, j))
+        return pos, out
 
-    idx0 = jnp.zeros((S,), jnp.int32)
-    w0 = jnp.zeros((S,), jnp.int32)
     out0 = jnp.zeros((S, n_per_stream), jnp.uint8)
-    _, _, out = jax.lax.fori_loop(0, max_stream_bits, body, (idx0, w0, out0))
+    _, out = jax.lax.fori_loop(0, n_per_stream, body, (pos0, out0))
     return out

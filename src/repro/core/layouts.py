@@ -36,8 +36,9 @@ A layout owns four responsibilities:
 Built-in layouts: ``raw`` (bf16, exact), ``packed`` (error-bounded quantizer
 + no-straddle bit-packing), ``kivi`` (fixed-bit baseline), and ``huffman``
 (the paper's maximal-ratio path promoted to a servable layout: per-block
-Huffman streams with u16 per-stream bit counts, decoded by the
-branch-divergence-free tree walk).  Register new ones with
+Huffman streams with u16 per-stream bit counts, decoded by the chunked
+direct-lookup decoder — in VMEM inside the fused kernel and in the
+blockwise XLA floor alike).  Register new ones with
 ``@register_layout("name")``.
 """
 
@@ -181,7 +182,7 @@ def quant_block_minmax(x: Array, rel_scale: float, bits: int,
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class FusedTileSpec:
     """Layout-owned decode hook for the fused Pallas attention kernel.
 
@@ -196,12 +197,18 @@ class FusedTileSpec:
         e.g. ``(Wk,)`` packed words or ``(T, D)`` raw values.
     has_scales      : whether (min, step) arrays accompany the store; when
         False the decode callables receive ``None`` for both.
-    decode_k(tile, mn, st) -> [T, D] f32 ; decode_v likewise (mn/st are the
-        per-block BlockQuant/TokenQuant units).
+    decode_k(tile, mn, st, *aux) -> [T, D] f32 ; decode_v likewise (mn/st
+        are the per-block BlockQuant/TokenQuant units).
+    aux             : per-LAYER operands (small numpy arrays, identical for
+        every tile) the kernel stages into VMEM alongside the tiles and
+        appends to each decode call — e.g. the huffman layout's flat
+        chunked-decode LUTs.  Block-invariant: their BlockSpec index maps
+        are constant, the oracle closes over them un-vmapped.
 
     Instances must be cached per (layout, spec, head_dim) — they carry
-    closures, and jit treats each new closure as a new static argument (see
-    ``fused_tile_spec``).
+    closures (and aux arrays), and jit statics hash them by IDENTITY
+    (``eq=False``: ndarray fields forbid structural hashing), so a fresh
+    instance per call would defeat every jit cache (see ``fused_tile_spec``).
     """
 
     k_tile: tuple[int, ...]
@@ -209,6 +216,7 @@ class FusedTileSpec:
     has_scales: bool
     decode_k: object
     decode_v: object
+    aux: tuple = ()
 
 
 @functools.lru_cache(maxsize=256)
@@ -216,9 +224,9 @@ def fused_tile_spec(layout_name: str, spec, head_dim: int) -> FusedTileSpec | No
     """Stable (memoized) tile spec so jit caches keyed on it don't retrace.
 
     ``supports_fused`` is authoritative: a layout that clears it gets None
-    even if it inherits a ``_tile_decode`` from a fused-capable base (e.g.
-    huffman subclassing packed — the packed unpacker would silently misread
-    its entropy-coded slots).
+    even if it inherits a ``_tile_decode`` from a fused-capable base (a
+    custom layout subclassing packed with a different slot encoding — the
+    packed unpacker would silently misread its slots).
     """
     lay = get_layout(layout_name)
     if not lay.supports_fused:
@@ -367,9 +375,9 @@ class CacheLayout:
     def tile_decode(self, spec, head_dim: int) -> FusedTileSpec | None:
         """The fused Pallas kernel's per-tile decode hook (memoized).
 
-        ``None`` means the layout cannot run in the fused kernel (ragged
-        payloads, symbol-serial decode, ...) and decode falls back to the
-        blockwise XLA scan.  ``supports_fused`` mirrors this statically.
+        ``None`` means the layout cannot run in the fused kernel (no
+        fixed-size tile formulation of its decode) and it falls back to
+        the blockwise XLA scan.  ``supports_fused`` mirrors this statically.
         """
         return fused_tile_spec(self.name, spec, head_dim)
 
@@ -682,11 +690,21 @@ class HuffmanLayout(PackedLayout):
     worst-case-sized payload region (``T·D·max_code_len`` bits under the
     static prior codebook).  Quantization scales are stored exactly as in
     the packed layout, so ``q·(m + s∘c)`` algebra still applies after the
-    tree-walk decode.  Allocated capacity is worst-case; ``size_report``
+    entropy decode.  Allocated capacity is worst-case; ``size_report``
     accounts the *actual* entropy-coded bits (DESIGN.md §4).
+
+    The payload is ragged INSIDE the slot, but the slot itself is a fixed
+    worst-case-padded tile — so the fused Pallas kernel streams whole slots
+    HBM→VMEM like any other layout and ``tile_decode`` re-derives the
+    per-stream offsets from the header in VMEM (``supports_fused``).  Both
+    the in-kernel decode and the blockwise XLA floor run the chunked
+    direct-lookup decoder (``huffman.decode_block_lut_jax``): ≤ 2 LUT
+    probes per symbol instead of one tree step per bit, with the canonical
+    codebooks' flat LUTs riding along as the tile spec's per-layer ``aux``
+    operands (DESIGN.md §9).
     """
 
-    supports_fused = False  # payload is ragged inside the slot
+    supports_fused = True  # fixed-size slot tiles; offsets decoded in VMEM
     needs_codebook = True
 
     # -- codebooks (static prior; see default_codebook) ----------------------
@@ -734,17 +752,21 @@ class HuffmanLayout(PackedLayout):
         return slots.reshape(B, H, n, hdr_w + pay_w)
 
     def _decode(self, spec, store: Array, head_dim: int, book: huffman.CodeBook) -> Array:
-        """slots u32 [B, H, NB, W] -> codes u8 [B, H, NB, T, D]."""
+        """slots u32 [B, H, NB, W] -> codes u8 [B, H, NB, T, D].
+
+        Chunked LUT decode (≤ 2 probes per symbol) — the same decoder the
+        fused kernel runs per tile, here vmapped over every slot for the
+        blockwise XLA floor.
+        """
         B, H, NB, _ = store.shape
         T, D = spec.block_size, head_dim
         hdr_w, _ = self._slot_words(spec, D, book)
-        maxlen = int(book.lengths.max())
-        ch, isym, sym = book.as_device_tables()
+        lut = jnp.asarray(book.decode_lut())
+        probes = book.decode_probes
 
         def dec(slot):  # [hdr+payload]
             nbits = _unpack_u16_pairs(slot[:hdr_w], T)
-            return huffman.decode_block_jax(
-                slot[hdr_w:], nbits, ch, isym, sym, D, D * maxlen)
+            return huffman.decode_block_lut_jax(slot[hdr_w:], nbits, lut, D, probes)
 
         codes = jax.vmap(dec)(store.reshape(B * H * NB, -1))
         return codes.reshape(B, H, NB, T, D)
@@ -782,8 +804,8 @@ class HuffmanLayout(PackedLayout):
         return tuple(a[:, :, 0] for a in out)
 
     def decode_span(self, spec, cache, start, count: int):
-        # Tree-walk decode of one SPAN of blocks per scan step (the vmapped
-        # walk batches over B·H·count streams) — the blockwise path never
+        # LUT decode of one SPAN of blocks per scan step (the vmapped
+        # decoder batches over B·H·count slots) — the blockwise path never
         # reconstructs the whole [B, H, NB, T, D] store.  Codes are
         # bit-identical to the packed layout's, so the downstream fused
         # matvec algebra is shared unchanged.
@@ -794,6 +816,34 @@ class HuffmanLayout(PackedLayout):
                           self.book_v(spec))
         return (kc.astype(jnp.float32), sl(cache.k_min), sl(cache.k_step),
                 vc.astype(jnp.float32), sl(cache.v_min), sl(cache.v_step))
+
+    def _tile_decode(self, spec, head_dim):
+        # One tile = one whole worst-case-padded slot (header ∥ payload);
+        # the ragged per-stream offsets are re-derived from the u16 header
+        # INSIDE the kernel, and the canonical codebooks' flat LUTs ride as
+        # per-layer aux operands the kernel stages into VMEM (DESIGN.md §9).
+        T, D = spec.block_size, head_dim
+        book_k, book_v = self.book_k(spec), self.book_v(spec)
+        hk, pk = self._slot_words(spec, D, book_k)
+        hv, pv = self._slot_words(spec, D, book_v)
+        probes_k, probes_v = book_k.decode_probes, book_v.decode_probes
+        f32 = jnp.float32
+
+        def dk(tile, mn, st, lut_k, lut_v):
+            nbits = _unpack_u16_pairs(tile[:hk], T)
+            codes = huffman.decode_block_lut_jax(
+                tile[hk:], nbits, lut_k, D, probes_k).astype(f32)  # [T, D]
+            return mn.astype(f32)[None, :] + codes * st.astype(f32)[None, :]
+
+        def dv(tile, mn, st, lut_k, lut_v):
+            nbits = _unpack_u16_pairs(tile[:hv], T)
+            codes = huffman.decode_block_lut_jax(
+                tile[hv:], nbits, lut_v, D, probes_v).astype(f32)
+            return mn.astype(f32)[:, None] + codes * st.astype(f32)[:, None]
+
+        return FusedTileSpec(k_tile=(hk + pk,), v_tile=(hv + pv,),
+                             has_scales=True, decode_k=dk, decode_v=dv,
+                             aux=(book_k.decode_lut(), book_v.decode_lut()))
 
     def size_report(self, q, *, block_size, head_dim, kivi_bits=2, book=None):
         assert book is not None, "huffman size_report needs a fitted codebook"

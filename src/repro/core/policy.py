@@ -49,6 +49,8 @@ class LayerOverride:
     k: TensorPolicy = TensorPolicy()
     v: TensorPolicy = TensorPolicy()
     attn_backend: str | None = None  # per-layer decode-attention backend
+    span_tokens: int | None = None   # per-layer blockwise-scan span knob
+    unroll_max: int | None = None    # per-layer blockwise-scan unroll knob
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +79,10 @@ class CompressionPolicy:
     kivi_bits: int = 2
     attn_backend: str = "auto"
     mode: str = "dense"  # "dense" | "paged" (repro.core.pool)
+    # Blockwise-scan tuning knobs (None = env var / module default — see
+    # ``repro.core.cache.blockwise_knobs``); per-layer overridable.
+    span_tokens: int | None = None
+    unroll_max: int | None = None
     overrides: tuple[LayerOverride, ...] = ()
 
     def __post_init__(self):
@@ -101,6 +107,7 @@ class CompressionPolicy:
         """Collapse overrides for one layer into an override-free policy."""
         layout, block, k, v = self.layout, self.block_size, self.k, self.v
         backend = self.attn_backend
+        span, unroll = self.span_tokens, self.unroll_max
         for ov in self.overrides:
             if layer in ov.layers:
                 layout = ov.layout if ov.layout is not None else layout
@@ -108,9 +115,12 @@ class CompressionPolicy:
                 k = ov.k.merged(k)
                 v = ov.v.merged(v)
                 backend = ov.attn_backend if ov.attn_backend is not None else backend
+                span = ov.span_tokens if ov.span_tokens is not None else span
+                unroll = ov.unroll_max if ov.unroll_max is not None else unroll
         return CompressionPolicy(layout=layout, block_size=block, k=k, v=v,
                                  kivi_bits=self.kivi_bits, attn_backend=backend,
-                                 mode=self.mode)
+                                 mode=self.mode, span_tokens=span,
+                                 unroll_max=unroll)
 
     def spec_for_layer(self, layer: int, *, max_seq: int,
                        window: int | None = None,
@@ -140,6 +150,8 @@ class CompressionPolicy:
             attn_backend=r.attn_backend,
             mode=mode,
             pool_pages=pool_pages if mode == "paged" else 0,
+            span_tokens=r.span_tokens,
+            unroll_max=r.unroll_max,
         )
 
     def layer_specs(self, n_layers: int, *, max_seq: int,

@@ -10,7 +10,12 @@ playing the role of GPU shared memory and the MXU taking the dot products.
 The per-tile decode is NOT hardcoded to one layout: the kernel is
 parameterized by a ``repro.core.layouts.FusedTileSpec`` — the layout-owned
 ``tile_decode`` hook (DESIGN.md §9).  ``packed``/``kivi`` share the
-no-straddle shift/mask unpack; ``raw`` plugs in a passthrough decoder, so the
+no-straddle shift/mask unpack; ``raw`` plugs in a passthrough decoder; and
+``huffman`` decodes its ragged-payload slots via the tile spec's per-layer
+``aux`` operands — block-invariant arrays (the canonical codebooks' chunked
+direct-lookup LUTs) the kernel stages into VMEM with constant index maps
+and appends to every decode call, while the per-stream u16 bit counts
+arrive as part of the fixed worst-case-padded slot tile itself.  So the
 kernel is the uniform decode path rather than a packed-only special case.
 
 Grid: ``(B, Hkv, NB + 1)``.  TPU grids execute sequentially with the last
@@ -56,6 +61,7 @@ def _kernel(
     decode_k,
     decode_v,
     has_scales: bool,
+    n_aux: int,
     block_size: int,
     head_dim: int,
     scale: float,
@@ -68,6 +74,15 @@ def _kernel(
         # its arena page before the tile streams HBM→VMEM), so the body just
         # skips past the ref.
         refs = refs[1:]
+    # Per-layer aux operands (block-invariant, e.g. huffman's decode LUTs)
+    # sit between the buffers and the output; their VMEM-resident values
+    # are appended to every decode call — read inside the decode-step guard
+    # only, so skipped steps and the buffer-combine step never load them.
+    if n_aux:
+        aux_refs = refs[-(4 + n_aux):-4]
+        refs = refs[:-(4 + n_aux)] + refs[-4:]
+    else:
+        aux_refs = ()
     if has_scales:
         (q_ref, ks_ref, kmn_ref, kst_ref, vs_ref, vmn_ref, vst_ref,
          kbuf_ref, vbuf_ref, out_ref, acc_s, m_s, l_s) = refs
@@ -89,10 +104,12 @@ def _kernel(
     # of live blocks; steps past nb_valid[b] (and the final buffer step) skip.
     @pl.when(n < nb_ref[b])
     def _update():
+        aux = tuple(r[...] for r in aux_refs)
         # --- decompress K in situ (VMEM), layout-owned decode ---
         kd = decode_k(ks_ref[0, 0, 0],
                       kmn_ref[0, 0, 0] if has_scales else None,
-                      kst_ref[0, 0, 0] if has_scales else None)  # [T, D]
+                      kst_ref[0, 0, 0] if has_scales else None,
+                      *aux)  # [T, D]
         # --- scores on the MXU ---
         qg = q_ref[0].astype(jnp.float32)  # [G, D]
         s = jax.lax.dot_general(qg, kd, (((1,), (1,)), ((), ())),
@@ -105,7 +122,8 @@ def _kernel(
         # --- decompress V in situ and accumulate ---
         vd = decode_v(vs_ref[0, 0, 0],
                       vmn_ref[0, 0, 0] if has_scales else None,
-                      vst_ref[0, 0, 0] if has_scales else None)  # [T, D]
+                      vst_ref[0, 0, 0] if has_scales else None,
+                      *aux)  # [T, D]
         acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot(
             p, vd, preferred_element_type=jnp.float32)
         l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1)
@@ -170,7 +188,7 @@ def fused_cache_attention_pallas(
     kernel = functools.partial(
         _kernel,
         decode_k=tile.decode_k, decode_v=tile.decode_v,
-        has_scales=tile.has_scales,
+        has_scales=tile.has_scales, n_aux=len(tile.aux),
         block_size=T, head_dim=D, scale=scale, nb_total=NB, paged=paged,
     )
     grid = (B, Hkv, NB + 1)
@@ -211,6 +229,12 @@ def fused_cache_attention_pallas(
     for buf in (k_buf, v_buf):
         in_specs.append(pl.BlockSpec((1, 1, T, D), fixed_map("b", "h", 0, 0)))
         inputs.append(buf)
+    for a in tile.aux:
+        # Per-layer aux operand (e.g. a codebook LUT): block-invariant, one
+        # whole-array tile staged into VMEM with a constant index map.
+        arr = jnp.asarray(a)
+        in_specs.append(pl.BlockSpec(arr.shape, fixed_map(*(0,) * arr.ndim)))
+        inputs.append(arr)
 
     out_spec = pl.BlockSpec((1, G, D), fixed_map("b", "h", 0))
     scalars = [

@@ -42,35 +42,15 @@ Array = jax.Array
 def _walk(payload, nbits, children, is_symbol, symbols, n_per_stream, max_bits, S):
     """The branchless lockstep walk shared by both kernel variants.
 
-    Returns decoded codes [S, n_per_stream] float32.
+    The walk body lives in ``repro.core.huffman.walk_decode_jax`` — the
+    SAME kernel-safe function the jnp oracle runs, so kernel and oracle
+    cannot drift.  Returns decoded codes [S, n_per_stream] float32.
     """
-    nbits_i = nbits.astype(jnp.int32)
-    starts = jnp.cumsum(nbits_i) - nbits_i  # deterministic per-stream offsets
-    lane = jax.lax.broadcasted_iota(jnp.int32, (S, n_per_stream), 0)
-    col = jax.lax.broadcasted_iota(jnp.int32, (S, n_per_stream), 1)
+    from repro.core import huffman  # kernels import core; cycle-free
 
-    def body(p, carry):
-        idx, w, out = carry
-        gpos = starts + p  # [S]
-        word = payload[gpos >> 5]  # per-lane gather (interpret-mode)
-        bit = ((word >> (gpos & 31).astype(jnp.uint32)) & 1).astype(jnp.int32)
-        idx = children[idx, bit]
-        active = (p < nbits_i).astype(jnp.int32)
-        isym = is_symbol[idx] * active
-        sym = symbols[idx].astype(jnp.float32)
-        # Masked broadcast-write: lane s writes column w[s] iff at a leaf.
-        hit = (col == w[:, None]) & (isym[:, None] == 1)
-        out = jnp.where(hit, sym[:, None], out)
-        w = w + isym
-        idx = idx * (1 - isym)  # branchless reset-to-root
-        return idx, w, out
-
-    idx0 = jnp.zeros((S,), jnp.int32)
-    w0 = jnp.zeros((S,), jnp.int32)
-    out0 = jnp.zeros((S, n_per_stream), jnp.float32)
-    _, _, out = jax.lax.fori_loop(0, max_bits, body, (idx0, w0, out0))
-    del lane
-    return out
+    del S
+    return huffman.walk_decode_jax(
+        payload, nbits, children, is_symbol, symbols, n_per_stream, max_bits)
 
 
 def _decode_kernel(payload_ref, nbits_ref, ch_ref, isym_ref, sym_ref, out_ref,

@@ -76,8 +76,9 @@ def resolve_backend(backend: str | None, layout) -> str:
     default-configured path without defeating tests that pin a backend.
     ``auto`` resolves to fused on real TPU for fused-capable layouts and to
     the blockwise scan elsewhere; a fused request against a layout without
-    ``supports_fused`` (e.g. huffman's ragged payload) falls back to the
-    blockwise scan — the portable floor every layout can serve from.
+    ``supports_fused`` (every built-in layout is fused-capable now that
+    huffman decodes in-kernel, but custom layouts need not be) falls back
+    to the blockwise scan — the portable floor every layout can serve from.
     """
     from repro.kernels.runtime import on_tpu
 

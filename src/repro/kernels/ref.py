@@ -72,11 +72,15 @@ def fused_cache_attention_ref(
         scale = 1.0 / math.sqrt(D)
     nbv = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(nb_valid, jnp.int32)), (B,))
 
+    # Per-layer aux operands (block-invariant — e.g. huffman's decode LUTs)
+    # are closed over un-vmapped, mirroring the kernel's constant index maps.
+    aux = tuple(jnp.asarray(a) for a in tile.aux)
+
     def dec3(fn, store, mn, st):
         if tile.has_scales:
-            f = jax.vmap(jax.vmap(jax.vmap(fn)))
+            f = jax.vmap(jax.vmap(jax.vmap(lambda t, m, s: fn(t, m, s, *aux))))
             return f(store, mn, st)
-        f = jax.vmap(jax.vmap(jax.vmap(lambda t: fn(t, None, None))))
+        f = jax.vmap(jax.vmap(jax.vmap(lambda t: fn(t, None, None, *aux))))
         return f(store)
 
     kd = dec3(tile.decode_k, k_store, k_min, k_step)  # [B,Hkv,NB,T,D] f32

@@ -1,0 +1,56 @@
+"""The shared tiny byte-level LM (DESIGN.md §6 accuracy proxy).
+
+One tiny LM trained on real text is the CPU-scale stand-in for the paper's
+Llama2/Ministral experiments: `benchmarks/` harvests its KV statistics and
+`examples/serve_compressed.py` serves it end to end.  Both entry points
+share THIS config and THIS checkpoint cache (``artifacts/tiny_lm``), so the
+definition lives once under ``src/repro`` — a drifted duplicate would make
+the second entry point restore a shape-mismatched checkpoint.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import jax
+
+from repro.checkpoint import store
+from repro.data.pipeline import TextCorpus
+from repro.launch.mesh import make_host_mesh
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train import step as step_lib
+from repro.train.trainer import Trainer, TrainerConfig
+
+# repo_root/artifacts/tiny_lm (this file lives at src/repro/launch/).
+CKPT = Path(__file__).resolve().parents[3] / "artifacts" / "tiny_lm"
+
+TINY = ModelConfig(
+    name="tiny-byte-lm", family="dense", n_layers=4, d_model=256,
+    vocab_size=256, n_heads=8, n_kv_heads=4, head_dim=32, d_ff=512,
+    cache_block=32, rel_scale_k=0.05, rel_scale_v=0.15)
+
+SEQ = 128
+STEPS = 300
+
+
+def get_tiny_lm(steps: int = STEPS, force: bool = False):
+    """Train (or checkpoint-load) the tiny LM. Returns (cfg, params, corpus)."""
+    data = TextCorpus(seq_len=SEQ, global_batch=8, max_bytes=2 << 20)
+    params_shape, _ = step_lib.shapes_and_axes(TINY)
+    if not force and store.latest_step(CKPT) is not None:
+        params, _ = store.restore(CKPT, params_shape)
+        return TINY, params, data
+    scfg = step_lib.TrainStepConfig(
+        remat=False, q_chunk=SEQ, kv_chunk=SEQ,
+        opt=adamw.AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=steps))
+    trainer = Trainer(TINY, make_host_mesh(), scfg,
+                      TrainerConfig(total_steps=steps, ckpt_every=0,
+                                    log_every=50, ckpt_dir=str(CKPT / "_train")),
+                      data)
+    out = trainer.run()
+    print(f"[tiny_lm] trained: {out['final_step']} steps, "
+          f"loss {out['last_loss']:.3f}")
+    params = jax.tree.map(lambda x: x, trainer.state[0])
+    store.save(CKPT, steps, params, {"loss": out["last_loss"]})
+    return TINY, params, data

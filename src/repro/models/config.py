@@ -67,6 +67,10 @@ class ModelConfig:
     # fused in-situ-decompression Pallas kernel on TPU for fused-capable
     # layouts and the blockwise-XLA scan elsewhere; "xla"/"fused" pin a path.
     attn_backend: str = "auto"
+    # Blockwise-scan tuning (None = REPRO_BLOCKWISE_* env / module default —
+    # see repro.core.cache.blockwise_knobs).
+    cache_span_tokens: int | None = None
+    cache_unroll_max: int | None = None
     # numerics
     dtype: str = "bfloat16"
 
@@ -82,6 +86,8 @@ class ModelConfig:
             kivi_bits=self.kivi_bits,
             attn_backend=self.attn_backend,
             mode=self.cache_mode,
+            span_tokens=self.cache_span_tokens,
+            unroll_max=self.cache_unroll_max,
             overrides=tuple(self.cache_overrides),
         )
 

@@ -86,8 +86,9 @@ def test_huffman_end_to_end_decode_agreement(rng):
     assert bool(jnp.all(kp == kh)) and bool(jnp.all(vp == vh))
     # Same backend for both layouts: bit-identical codes+scales through the
     # identical blockwise math must give bit-identical attention (pinning
-    # "xla" keeps this invariant under the CI REPRO_ATTN_BACKEND matrix,
-    # where packed would otherwise dispatch fused while huffman cannot).
+    # "xla" keeps this invariant under the CI REPRO_ATTN_BACKEND matrix —
+    # the fused tile decoders differ per layout, so cross-LAYOUT
+    # bit-identity is only guaranteed on the shared blockwise path).
     np.testing.assert_array_equal(np.asarray(api.attend(cp, q, backend="xla")),
                                   np.asarray(api.attend(ch, q, backend="xla")))
     # append until both flush one more block; agreement must survive

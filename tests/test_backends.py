@@ -60,11 +60,12 @@ def test_backend_parity_gqa(layout, G, rng):
                                    atol=5e-3, err_msg=name)
 
 
+@pytest.mark.parametrize("layout", ["packed", "huffman"])
 @pytest.mark.parametrize("D", [80, 112, 160])
-def test_backend_parity_odd_head_dims(D, rng):
+def test_backend_parity_odd_head_dims(D, layout, rng):
     """Odd head dims from the assigned archs (zamba2 80, chameleon 112, 160)."""
     k, v, q = _mk(rng, 2, 2, 4, 48, D)
-    spec = C.CacheSpec(layout="packed", block_size=16, max_seq=64,
+    spec = C.CacheSpec(layout=layout, block_size=16, max_seq=64,
                        rel_scale_k=0.02, rel_scale_v=0.05)
     cache = C.prefill(spec, k, v)
     outs = _all_backends(cache, q)
@@ -75,7 +76,7 @@ def test_backend_parity_odd_head_dims(D, rng):
     assert float(jnp.max(jnp.abs(outs["blockwise"] - C.reference_attend(k, v, q)))) < 0.2
 
 
-@pytest.mark.parametrize("layout", ["packed", "raw"])
+@pytest.mark.parametrize("layout", ["packed", "raw", "huffman"])
 def test_backend_parity_sliding_window_wraparound(layout, rng):
     """Ring eviction: appends past the window wrap slots; every backend must
     agree with windowed exact attention."""
@@ -151,23 +152,36 @@ def test_resolve_backend_auto_off_tpu():
             assert ops.resolve_backend("auto", layouts.get_layout(layout)) == "xla"
 
 
-def test_resolve_backend_fused_falls_back_for_ragged_layouts():
-    assert ops.resolve_backend("fused", layouts.get_layout("huffman")) == "xla"
-    assert ops.resolve_backend("fused", layouts.get_layout("packed")) == "fused"
-    assert ops.resolve_backend("fused", layouts.get_layout("raw")) == "fused"
+def test_resolve_backend_every_builtin_layout_is_fused_capable():
+    """Since the huffman in-kernel LUT decode, every built-in layout serves
+    through the fused backend when asked."""
+    for layout in LAYOUTS:
+        assert ops.resolve_backend("fused", layouts.get_layout(layout)) == "fused"
 
 
 def test_non_fused_layout_has_no_tile_spec_and_kernel_entry_rejects(rng):
     """supports_fused=False is authoritative even when a layout inherits a
-    fused-capable base's _tile_decode (huffman subclasses packed): the tile
-    spec must be None and the direct kernel entry must raise, not silently
-    unpack entropy-coded slots with the packed decoder."""
-    spec = C.CacheSpec(layout="huffman", block_size=16, max_seq=64)
-    assert spec.impl.tile_decode(spec, 16) is None
-    k, v, q = _mk(rng, 1, 2, 2, 32, 16)
-    cache = C.prefill(spec, k, v)
-    with pytest.raises(ValueError, match="fused-capable layout"):
-        ops.cache_decode_attention(cache, q)
+    fused-capable base's _tile_decode (a custom layout subclassing packed
+    with a different slot encoding): the tile spec must be None, a fused
+    request must fall back to the blockwise floor, and the direct kernel
+    entry must raise — not silently unpack the slots with the packed
+    decoder."""
+
+    class _Ragged(layouts.PackedLayout):
+        supports_fused = False
+
+    layouts.register_layout("_test_ragged")(_Ragged)
+    try:
+        lay = layouts.get_layout("_test_ragged")
+        assert ops.resolve_backend("fused", lay) == "xla"
+        spec = C.CacheSpec(layout="_test_ragged", block_size=16, max_seq=64)
+        assert spec.impl.tile_decode(spec, 16) is None
+        k, v, q = _mk(rng, 1, 2, 2, 32, 16)
+        cache = C.prefill(spec, k, v)
+        with pytest.raises(ValueError, match="fused-capable layout"):
+            ops.cache_decode_attention(cache, q)
+    finally:
+        layouts._REGISTRY.pop("_test_ragged", None)
 
 
 def test_resolve_backend_env_override_replaces_auto_only():
@@ -219,11 +233,73 @@ def test_attn_backend_threads_config_to_spec():
 
 
 # ---------------------------------------------------------------------------
+# blockwise span/unroll knobs
+# ---------------------------------------------------------------------------
+
+
+def test_blockwise_knobs_precedence(monkeypatch):
+    """Spec field > REPRO_BLOCKWISE_* env var > module default."""
+    monkeypatch.delenv(C.ENV_SPAN_TOKENS, raising=False)
+    monkeypatch.delenv(C.ENV_UNROLL_MAX, raising=False)
+    spec = C.CacheSpec(layout="packed", block_size=16, max_seq=64)
+    assert C.blockwise_knobs(spec) == (C.BLOCKWISE_SPAN_TOKENS,
+                                       C.BLOCKWISE_UNROLL_MAX)
+    monkeypatch.setenv(C.ENV_SPAN_TOKENS, "128")
+    monkeypatch.setenv(C.ENV_UNROLL_MAX, "3")
+    assert C.blockwise_knobs(spec) == (128, 3)
+    pinned = C.CacheSpec(layout="packed", block_size=16, max_seq=64,
+                         span_tokens=32, unroll_max=7)
+    assert C.blockwise_knobs(pinned) == (32, 7)  # explicit spec wins
+    with pytest.raises(ValueError, match="span_tokens"):
+        C.CacheSpec(layout="packed", span_tokens=0)
+    # env values get the same validation as spec fields, with a clear error
+    monkeypatch.setenv(C.ENV_UNROLL_MAX, "0")
+    with pytest.raises(ValueError, match=C.ENV_UNROLL_MAX):
+        C.blockwise_knobs(spec)
+    monkeypatch.setenv(C.ENV_UNROLL_MAX, "3")
+    monkeypatch.setenv(C.ENV_SPAN_TOKENS, "1k")
+    with pytest.raises(ValueError, match="not an integer"):
+        C.blockwise_knobs(spec)
+
+
+def test_blockwise_output_invariant_to_span_and_unroll(rng):
+    """Any span size / unroll-vs-scan choice computes the same attention
+    (the knob only trades peak temps for per-step overhead)."""
+    k, v, q = _mk(rng, 2, 2, 2, 96, 16)
+    base = C.attend_blockwise(
+        C.prefill(C.CacheSpec(layout="packed", block_size=16, max_seq=128),
+                  k, v), q)
+    for span_tokens, unroll_max in [(16, 64), (48, 64), (16, 1)]:
+        spec = C.CacheSpec(layout="packed", block_size=16, max_seq=128,
+                           span_tokens=span_tokens, unroll_max=unroll_max)
+        out = C.attend_blockwise(C.prefill(spec, k, v), q)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   atol=1e-5, err_msg=f"{span_tokens}/{unroll_max}")
+
+
+def test_span_knobs_thread_config_to_spec():
+    from repro.models.config import ModelConfig
+    from repro.core.policy import LayerOverride
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=4, d_model=32,
+                      vocab_size=64, n_heads=2, n_kv_heads=2,
+                      cache_span_tokens=256, cache_unroll_max=4,
+                      cache_overrides=(LayerOverride(layers=(2,),
+                                                     span_tokens=64,
+                                                     unroll_max=1),))
+    pol = cfg.compression_policy()
+    s0 = pol.spec_for_layer(0, max_seq=64)
+    assert (s0.span_tokens, s0.unroll_max) == (256, 4)
+    s2 = pol.spec_for_layer(2, max_seq=64)
+    assert (s2.span_tokens, s2.unroll_max) == (64, 1)
+
+
+# ---------------------------------------------------------------------------
 # greedy decode bit-identity across backends (the tentpole contract)
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("layout", ["packed", "raw"])
+@pytest.mark.parametrize("layout", ["packed", "raw", "huffman"])
 def test_greedy_decode_tokens_bit_identical_across_backends(layout, rng):
     import dataclasses as dc
 
@@ -254,6 +330,55 @@ def test_greedy_decode_tokens_bit_identical_across_backends(layout, rng):
     t_xla = run("xla")
     t_fused = run("fused")
     np.testing.assert_array_equal(t_xla, t_fused)
+
+
+def test_huffman_tile_decode_bit_exact_vs_blockwise_decode(rng):
+    """Losslessness of the fused path: the in-kernel chunked-LUT tile decode
+    must reproduce the layout's blockwise entropy decode bit-for-bit (same
+    codes, same dequant ops) for every slot — the kernel/oracle/blockwise
+    paths then differ only in softmax accumulation order."""
+    from repro.kernels import ref
+
+    spec = C.CacheSpec(layout="huffman", block_size=16, max_seq=128,
+                       rel_scale_k=0.02, rel_scale_v=0.05)
+    k, v, q = _mk(rng, 2, 2, 2, 64, 24)
+    cache = C.prefill(spec, k, v)
+    lay, D = spec.impl, cache.head_dim
+    tile = lay.tile_decode(spec, D)
+    assert tile is not None and len(tile.aux) == 2
+    aux = tuple(jnp.asarray(a) for a in tile.aux)
+    k_codes = lay._decode(spec, cache.k_store, D, lay.book_k(spec))
+    v_codes = lay._decode(spec, cache.v_store, D, lay.book_v(spec))
+    for b in range(2):
+        for h in range(2):
+            for n in range(4):
+                kd = tile.decode_k(cache.k_store[b, h, n], cache.k_min[b, h, n],
+                                   cache.k_step[b, h, n], *aux)
+                vd = tile.decode_v(cache.v_store[b, h, n], cache.v_min[b, h, n],
+                                   cache.v_step[b, h, n], *aux)
+                np.testing.assert_array_equal(
+                    np.asarray(kd),
+                    np.asarray(ref.dequant_k(k_codes[b, h, n],
+                                             cache.k_min[b, h, n],
+                                             cache.k_step[b, h, n])))
+                np.testing.assert_array_equal(
+                    np.asarray(vd),
+                    np.asarray(ref.dequant_v(v_codes[b, h, n],
+                                             cache.v_min[b, h, n],
+                                             cache.v_step[b, h, n])))
+
+
+def test_huffman_fused_pallas_matches_oracle_bit_level(rng):
+    """Kernel vs vmapped-oracle parity for the huffman ragged-payload tile
+    decode, through the public jit'd entry (both impls share the same
+    FusedTileSpec closures, so any drift is accumulation order only)."""
+    spec = C.CacheSpec(layout="huffman", block_size=16, max_seq=128)
+    k, v, q = _mk(rng, 2, 2, 4, 72, 16)
+    cache = C.prefill(spec, k, v)
+    o_pallas = ops.cache_decode_attention(cache, q, impl="pallas")
+    o_oracle = ops.cache_decode_attention(cache, q, impl="xla")
+    np.testing.assert_allclose(np.asarray(o_pallas), np.asarray(o_oracle),
+                               atol=1e-5, rtol=1e-5)
 
 
 def test_spec_backend_dispatch_respected(rng):

@@ -81,8 +81,7 @@ def test_full_huffman_roundtrip(codec, kv_data):
     k, _ = kv_data
     qk = codec.quantize_k(k)
     payload, nbits, shape = codec.encode_huffman(qk, "k")
-    codes = codec.decode_huffman(payload, nbits, shape, "k",
-                                 max_stream_bits=int(np.asarray(nbits).max()))
+    codes = codec.decode_huffman(payload, nbits, shape, "k")
     assert (np.asarray(codes) == np.asarray(qk.codes)).all()
 
 

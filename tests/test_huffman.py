@@ -86,6 +86,33 @@ def test_jax_decode_matches_oracle(seed):
     assert (np.asarray(dec) == codes).all()
 
 
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), skew=st.floats(0.5, 30.0),
+       S=st.integers(1, 10), L=st.integers(1, 24))
+def test_lut_decode_matches_tree_walk(seed, skew, S, L):
+    """The chunked direct-lookup decoder ≡ the bit-serial tree walk, for
+    any codebook the limiter can produce (1- and 2-probe regimes both) —
+    including padding streams (nbits = 0) and a truncated stream, which
+    both decoders must leave as zeros."""
+    rng = np.random.default_rng(seed)
+    codes = _random_codes(rng, skew, (S, L))
+    book = huffman.build_codebook(np.bincount(codes.reshape(-1), minlength=256))
+    w, nb = huffman.encode_block(codes, book)
+    # A zero-bit padding stream in the middle, and a truncated final stream
+    # (budget cut below its encoded bits so its tail codewords are partial).
+    nb = np.insert(nb, S // 2, 0).astype(np.uint16)
+    nb[-1] = nb[-1] // 2
+    pay = jnp.asarray(np.concatenate([w, np.zeros(2, np.uint32)]))
+    ch, isym, sym = book.as_device_tables()
+    walk = huffman.decode_block_jax(pay, jnp.asarray(nb), ch, isym, sym,
+                                    L, int(nb.max()))
+    lut = huffman.decode_block_lut_jax(pay, jnp.asarray(nb),
+                                       jnp.asarray(book.decode_lut()),
+                                       L, book.decode_probes)
+    assert (np.asarray(walk)[S // 2] == 0).all()  # padding stream is zeros
+    assert (np.asarray(lut) == np.asarray(walk)).all()
+
+
 def test_compression_close_to_entropy(rng):
     codes = _random_codes(rng, 2, (8192,))
     hist = np.bincount(codes, minlength=256)

@@ -134,6 +134,47 @@ def test_huffman_fused_scores_kernel(rng):
                                    atol=1e-4)
 
 
+def test_decode_lut_entries_bounded(rng):
+    """LUT invariants: consumed ∈ [1, 8], emitted entries reset to the root,
+    probes ≤ 2 under the MAX_CODE_LEN limit.  (Deterministic — lives here
+    rather than test_huffman.py so the production LUT decoder keeps tier-1
+    coverage when the optional hypothesis dep gates that module away.)"""
+    codes = np.clip(np.round(rng.normal(8, 6, (4096,))), 0, 255).astype(np.uint8)
+    book = huffman.build_codebook(np.bincount(codes, minlength=256))
+    lut = huffman.build_decode_lut(book)
+    consumed = (lut >> 8) & 0xF
+    emit = (lut >> 12) & 1
+    nxt = lut >> 16
+    assert consumed.min() >= 1 and consumed.max() <= huffman.LUT_CHUNK_BITS
+    assert (nxt[emit == 1] == 0).all()
+    assert (nxt < book.n_nodes).all()
+    assert 1 <= book.decode_probes <= 2
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_lut_decode_matches_walk_deterministic(seed):
+    """Deterministic LUT ≡ tree-walk equivalence (incl. a zero-bit padding
+    stream and a truncated final stream) — the hypothesis-gated property
+    test in test_huffman.py widens this sweep when the dep is present."""
+    rng2 = np.random.default_rng(seed)
+    skew = float(rng2.uniform(0.5, 30.0))
+    S, L = int(rng2.integers(2, 10)), int(rng2.integers(2, 24))
+    codes = np.clip(np.round(rng2.normal(8, skew, (S, L))), 0, 255).astype(np.uint8)
+    book = huffman.build_codebook(np.bincount(codes.reshape(-1), minlength=256))
+    w, nb = huffman.encode_block(codes, book)
+    nb = np.insert(nb, S // 2, 0).astype(np.uint16)
+    nb[-1] = nb[-1] // 2
+    pay = jnp.asarray(np.concatenate([w, np.zeros(2, np.uint32)]))
+    ch, isym, sym = book.as_device_tables()
+    walk = huffman.decode_block_jax(pay, jnp.asarray(nb), ch, isym, sym,
+                                    L, int(nb.max()))
+    lut = huffman.decode_block_lut_jax(pay, jnp.asarray(nb),
+                                       jnp.asarray(book.decode_lut()),
+                                       L, book.decode_probes)
+    assert (np.asarray(walk)[S // 2] == 0).all()
+    assert (np.asarray(lut) == np.asarray(walk)).all()
+
+
 # ---------------------------------------------------------------------------
 # Store-stage kernel
 # ---------------------------------------------------------------------------
