@@ -21,14 +21,34 @@ SUITES = [
     ("fused_vs_multi", "paper Fig. 9: fused vs multi-kernel"),
     ("fused_vs_matvec", "paper Fig. 10/11: fused vs plain matvec"),
     ("roofline", "dry-run roofline table"),
+    ("serve_throughput", "continuous-batching serving throughput"),
+    ("decode_path", "decode-path latency breakdown"),
+    ("pool_pressure", "paged-pool capacity vs dense reservation (§10)"),
+    ("prefix_reuse", "prefix-cache prefill savings, on vs noshare (§11)"),
 ]
 
 
 def run_one(mod_name: str) -> int:
-    """Run one suite in-process (used by the per-suite subprocess)."""
+    """Run one suite in-process (used by the per-suite subprocess).
+
+    Two suite shapes: figure modules expose a ``run()`` generator of
+    ``(name, us, derived)`` rows; serving suites are argparse scripts
+    (``main()`` + ``--smoke``) that write their own ``BENCH_*.json`` — those
+    run under ``--smoke`` and report one pass/fail CSV row here.
+    """
     mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-    for name, us, derived in mod.run():
-        print(f"{name},{us:.1f},{derived}", flush=True)
+    if hasattr(mod, "run"):
+        for name, us, derived in mod.run():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        return 0
+    argv, sys.argv = sys.argv, [f"benchmarks/{mod_name}.py", "--smoke"]
+    try:
+        t0 = time.time()
+        mod.main()
+        print(f"{mod_name},{(time.time() - t0) * 1e6:.1f},smoke_ok",
+              flush=True)
+    finally:
+        sys.argv = argv
     return 0
 
 

@@ -51,6 +51,7 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
           attn_backend: str | None = None,
           cache_mode: str | None = None,
           pool_hbm_bytes: int | None = None,
+          prefix_cache: str = "off",
           q_chunk: int = 512, kv_chunk: int = 512) -> Server:
     """Launch a continuous-batching server over ``cfg``'s cache policy.
 
@@ -67,13 +68,21 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
     the dense reservation by the compression ratio, preempting + requeueing
     the youngest request if the pool runs dry (tokens are unaffected);
     ``server.stats()`` reports live pool occupancy.
+    ``prefix_cache="on"`` (paged mode only; DESIGN.md §11) shares
+    block-aligned prompt prefixes across requests through a radix index
+    over refcounted compressed pages — admission splices cached page ids
+    and prefills only the divergent suffix, preempted requests resume from
+    cached pages, and ``server.stats()["prefix"]`` reports hit-rate /
+    reuse / copy-on-write counters ("noshare" runs the same chunked
+    admission path without sharing — the accounting baseline).
     """
     return Server(cfg, params,
                   ServerConfig(max_slots=max_slots, max_seq=max_seq,
                                pad_id=pad_id, policy=policy,
                                attn_backend=attn_backend,
                                cache_mode=cache_mode,
-                               pool_hbm_bytes=pool_hbm_bytes),
+                               pool_hbm_bytes=pool_hbm_bytes,
+                               prefix_cache=prefix_cache),
                   q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 

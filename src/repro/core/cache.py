@@ -419,15 +419,40 @@ def attend_blockwise(cache: LayerKVCache, q: Array,
     B, Hq, D = q.shape
     Hkv = cache.k_buf.shape[1]
     G = Hq // Hkv
-    T, NB = spec.block_size, spec.n_blocks
     if scale is None:
         scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    m, l, acc = _store_scan(cache, qg, scale, span)
+    out = kref.combine_with_buffer_ref(
+        acc.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq),
+        q, cache.k_buf, cache.v_buf, cache.buf_len, scale=scale)
+    return out.astype(q.dtype)
+
+
+def _store_scan(cache: LayerKVCache, qg: Array, scale: float,
+                span: int | None = None):
+    """The blockwise flash-decode scan over the FLUSHED store only: running
+    ``(m, l, acc)`` softmax state per grouped query, without the raw-buffer
+    combine (callers merge their own tail — ``attend_blockwise`` the buffer,
+    ``attend_chunk`` the chunk's intra-causal raw scores).
+
+    ``qg``: f32 ``[B, Hkv, G', D]`` — generic in the grouped-query axis, so
+    the chunked-prefill path folds its ``C`` chunk positions into
+    ``G' = C * G`` and reuses this scan unchanged (every flushed block is
+    strictly in the past of every chunk token, so all G' queries see the
+    same mask).  Returns ``(m [B,Hkv,G'], l [B,Hkv,G'], acc [B,Hkv,G',D])``
+    with ``m = NEG_INIT, l = 0`` rows where nothing is flushed.
+    """
+    from repro.kernels import ref as kref  # shared constants; late import
+
+    spec = cache.spec
+    B, Hkv, G, D = qg.shape
+    T, NB = spec.block_size, spec.n_blocks
     span_tokens, unroll_max = blockwise_knobs(spec)
     if span is None:
         span = max(1, span_tokens // T)
     span = min(span, NB)
     n_steps = -(-NB // span)
-    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
     nb_valid = jnp.minimum(cache.n_flushed, NB)  # [B]
     impl = spec.impl
     f32 = jnp.float32
@@ -491,15 +516,95 @@ def attend_blockwise(cache: LayerKVCache, q: Array,
         carry = (m0, l0, acc0)
         for i in range(n_steps):
             carry, _ = body(carry, i * span)
-        m, l, acc = carry
-    else:
-        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
-                                      jnp.arange(n_steps) * span)
+        return carry
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
+                                  jnp.arange(n_steps) * span)
+    return m, l, acc
 
-    out = kref.combine_with_buffer_ref(
-        acc.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq),
-        q, cache.k_buf, cache.v_buf, cache.buf_len, scale=scale)
-    return out.astype(q.dtype)
+
+# ---------------------------------------------------------------------------
+# Block-chunked prefill (prefix-cache admission path; DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def attend_chunk(cache: LayerKVCache, q: Array, k_new: Array, v_new: Array,
+                 scale: float | None = None) -> Array:
+    """Attention for one block-chunked prefill step: ``C`` new tokens attend
+    the flushed compressed store plus the chunk's own raw K/V causally.
+
+    ``q``: ``[B, C, Hq, D]``; ``k_new``/``v_new``: ``[B, Hkv, C, D]``.
+    Chunks start at block boundaries (the raw buffer is empty), so each
+    token's visible set is exactly what the decode path would give it: all
+    flushed blocks through the store (lazily dequantized — the lossy side)
+    plus the raw tokens of its own partial block (the exact side, self
+    included).  The store partials come from the same ``_store_scan`` the
+    decode backend runs, with the chunk axis folded into the grouped-query
+    axis (``G' = C*G`` — every flushed block is strictly past every chunk
+    token), then merge with the intra-chunk causal scores by the usual
+    two-part online-softmax combine.  Per-block output is therefore a pure
+    function of (params, pages so far, block tokens): resuming at block
+    ``j`` from cached pages is bit-identical to chunking from token 0.
+    """
+    from repro.kernels import ref as kref  # shared constants; late import
+
+    B, C, Hq, D = q.shape
+    Hkv = k_new.shape[1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    f32 = jnp.float32
+    # [B, C, Hq, D] -> [B, Hkv, C, G, D]; fold (C, G) for the store scan.
+    qf = q.astype(f32).reshape(B, C, Hkv, G, D).transpose(0, 2, 1, 3, 4)
+    m, l, acc = _store_scan(cache, qf.reshape(B, Hkv, C * G, D), scale)
+    m = m.reshape(B, Hkv, C, G)
+    l = l.reshape(B, Hkv, C, G)
+    acc = acc.reshape(B, Hkv, C, G, D)
+    # Intra-chunk causal raw scores (self included — the chunk counterpart
+    # of decode's append-before-attend buffer visibility).
+    s = jnp.einsum("bhcgd,bhxd->bhcgx", qf, k_new.astype(f32)) * scale
+    causal = jnp.arange(C)[:, None] >= jnp.arange(C)[None, :]  # [C(q), C(k)]
+    mask = causal[None, None, :, None, :]
+    s = jnp.where(mask, s, kref.NEG_INIT)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None]) * mask
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = (acc * alpha[..., None]
+               + jnp.einsum("bhcgx,bhxd->bhcgd", p, v_new.astype(f32)))
+    out = acc_new / jnp.maximum(l_new, 1e-30)[..., None]  # [B,Hkv,C,G,D]
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, C, Hq, D).astype(q.dtype)
+
+
+def append_chunk(cache: LayerKVCache, k_new: Array, v_new: Array) -> LayerKVCache:
+    """Append one chunk's KV ``[B, Hkv, C, D]`` at a block boundary (the
+    raw buffer must be empty — the chunked-prefill invariant).  A full
+    chunk (``C == block_size``) compresses straight through the layout's
+    ``write_blocks`` and leaves the buffer empty for the next chunk; a
+    final partial chunk lands in the raw buffer, exactly where a token-wise
+    decode of the same suffix would have left it."""
+    spec = cache.spec
+    T, NB = spec.block_size, spec.n_blocks
+    C = k_new.shape[2]
+    dt = cache.k_buf.dtype
+    if not 1 <= C <= T:
+        raise ValueError(f"chunk of {C} tokens vs block_size {T}")
+    if C == T:
+        slots = (cache.n_flushed % NB)[:, None]  # [B, 1]
+        if spec.paged:
+            slots = pool.lookup_slots(cache.page_tab, slots, NB, spec.pool_pages)
+        kb = k_new[:, :, None].astype(dt)  # [B, H, 1, T, D]
+        vb = v_new[:, :, None].astype(dt)
+        (k_store, k_min, k_step, v_store, v_min, v_step) = spec.impl.write_blocks(
+            spec, cache, slots, kb, vb)
+        return dataclasses.replace(
+            cache, k_store=k_store, k_min=k_min, k_step=k_step,
+            v_store=v_store, v_min=v_min, v_step=v_step,
+            n_flushed=cache.n_flushed + 1)
+    return dataclasses.replace(
+        cache,
+        k_buf=cache.k_buf.at[:, :, :C].set(k_new.astype(dt)),
+        v_buf=cache.v_buf.at[:, :, :C].set(v_new.astype(dt)),
+        buf_len=jnp.full_like(cache.buf_len, C))
 
 
 def attend_materialized(cache: LayerKVCache, q: Array,

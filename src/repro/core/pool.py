@@ -82,7 +82,7 @@ class PoolExhausted(RuntimeError):
 
 
 class PagedBlockPool:
-    """Free-list allocator over ``n_pages`` physical block pages.
+    """Refcounted free-list allocator over ``n_pages`` physical block pages.
 
     Pure host-side bookkeeping (the device only ever sees page *indices*
     through the page tables).  ``page_nbytes_per_layer`` is the
@@ -91,9 +91,15 @@ class PagedBlockPool:
     layer flushes the same logical block at the same step), so occupancy is
     ``live_pages * sum(page_nbytes_per_layer)``.
 
-    Invariants (enforced, and property-tested in ``tests/test_pool.py``):
-    a page is never handed out twice while live, never freed twice, and
-    never freed without having been allocated.
+    Pages are reference-counted (DESIGN.md §11): ``alloc`` hands a page out
+    at refcount 1, each sharer (another row's page table, the prefix index)
+    ``retain``\\ s it, and every owner drops its reference with ``release``
+    — the page returns to the free list only when the count hits zero.
+
+    Invariants (enforced, and property-tested in ``tests/test_pool.py`` /
+    ``tests/test_prefix.py``): a page is never handed out twice while any
+    reference is outstanding, never released below zero, and never retained
+    or released without having been allocated.
     """
 
     def __init__(self, n_pages: int, page_nbytes_per_layer):
@@ -103,6 +109,7 @@ class PagedBlockPool:
         self.page_nbytes_per_layer = tuple(int(b) for b in page_nbytes_per_layer)
         self._free: list[int] = list(range(self.n_pages - 1, -1, -1))
         self._live: set[int] = set()
+        self._ref: dict[int, int] = {}  # page -> outstanding references
         self.high_water = 0
 
     # -- core ----------------------------------------------------------------
@@ -115,8 +122,9 @@ class PagedBlockPool:
         return len(self._live)
 
     def alloc(self, n: int) -> list[int]:
-        """Pop ``n`` pages off the free list; raises ``PoolExhausted``
-        (allocating nothing) when fewer than ``n`` are free."""
+        """Pop ``n`` pages off the free list (each at refcount 1); raises
+        ``PoolExhausted`` (allocating nothing) when fewer than ``n`` are
+        free."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
@@ -124,18 +132,43 @@ class PagedBlockPool:
                 f"need {n} pages, {len(self._free)}/{self.n_pages} free")
         pages = [self._free.pop() for _ in range(n)]
         self._live.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         self.high_water = max(self.high_water, len(self._live))
         return pages
 
-    def free(self, pages) -> None:
-        """Return pages to the free list; freeing a page that is not live
-        (double free, or never allocated) is a hard error."""
+    def retain(self, pages) -> None:
+        """Add one reference to each page (a new sharer: another row's page
+        table, or a prefix-index node).  Retaining a page that is not live
+        is a hard error — a freed page cannot be resurrected."""
         for p in pages:
             p = int(p)
             if p not in self._live:
-                raise RuntimeError(f"freeing page {p} that is not live")
-            self._live.remove(p)
-            self._free.append(p)
+                raise RuntimeError(f"retaining page {p} that is not live")
+            self._ref[p] += 1
+
+    def release(self, pages) -> list[int]:
+        """Drop one reference per page; pages whose count reaches zero go
+        back on the free list.  Returns the pages actually freed (the
+        eviction paths use this to tell reclaimed memory from mere
+        unsharing).  Releasing a page that is not live (double release, or
+        never allocated) is a hard error."""
+        freed: list[int] = []
+        for p in pages:
+            p = int(p)
+            if p not in self._live:
+                raise RuntimeError(f"releasing page {p} that is not live")
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._live.remove(p)
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
+    def refcount(self, page) -> int:
+        """Outstanding references on one page (0 = not live)."""
+        return self._ref.get(int(page), 0)
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -156,6 +189,8 @@ class PagedBlockPool:
             "pages_live": self.live_pages,
             "pages_free": self.free_pages,
             "high_water_pages": self.high_water,
+            "refs_total": sum(self._ref.values()),
+            "pages_shared": sum(1 for c in self._ref.values() if c > 1),
             "bytes_per_page": self.bytes_per_page,
             "bytes_live": self.live_bytes,
             "bytes_total": self.total_bytes,
@@ -329,6 +364,44 @@ def splice_row(dst, src, row, pages: Array):
         n_flushed=row_field(dst.n_flushed, src.n_flushed),
         buf_len=row_field(dst.buf_len, src.buf_len),
         page_tab=page_tab, spec=dst.spec)
+
+
+def gather_pages(cache, pages: Array, n_flushed: Array):
+    """Prefix-hit seed: materialize cached arena pages as a batch-1 *dense*
+    cache positioned at a block boundary (DESIGN.md §11).
+
+    ``cache`` is the live paged cache (possibly layer-stacked), ``pages`` is
+    i32 ``[NB]`` — the physical page holding logical block ``i`` for the
+    first ``n_flushed`` blocks (``-1`` padding beyond; those slots gather
+    garbage that the ``n_flushed`` mask keeps invisible).  The result is
+    exactly the state a solo block-chunked prefill of those ``n_flushed``
+    blocks would have produced: stores gathered bit-for-bit from the arena,
+    raw buffer empty, ``buf_len = 0`` — so chunked prefill resumes from
+    block ``n_flushed`` as if it had started from token 0.  ``n_flushed``
+    may be traced (one compilation serves every hit length).
+    """
+    from repro.core import cache as kvcache  # late: cache imports this module
+
+    lead = _lead(cache)
+    pax = lead + 2  # stores: [L?, 1(arena), H, page, ...]
+    idx = jnp.clip(pages, 0, cache.spec.pool_pages - 1)
+
+    def store_field(a):
+        if a.ndim < pax + 2:  # layout dummy scales pass through
+            return a
+        return jnp.take(a, idx, axis=pax)
+
+    def row0_zeros(a):  # fresh empty buffer shaped like one row
+        return jnp.zeros_like(jax.lax.slice_in_dim(a, 0, 1, axis=lead))
+
+    nf = jnp.broadcast_to(jnp.asarray(n_flushed, jnp.int32),
+                          (*cache.n_flushed.shape[:lead], 1))
+    return kvcache.LayerKVCache(
+        **{f: store_field(getattr(cache, f)) for f in STORE_FIELDS},
+        k_buf=row0_zeros(cache.k_buf), v_buf=row0_zeros(cache.v_buf),
+        n_flushed=nf, buf_len=jnp.zeros_like(nf),
+        page_tab=jnp.zeros((*cache.n_flushed.shape[:lead], 1), jnp.int32),
+        spec=dataclasses.replace(cache.spec, mode="dense", pool_pages=0))
 
 
 def assign_pages(cache, rows: Array, slots: Array, pages: Array):

@@ -46,23 +46,47 @@ def main():
     ap.add_argument("--pool-bytes", type=int, default=None,
                     help="paged: byte budget for the block pool (default: "
                          "the dense-equivalent footprint of --max-slots)")
+    ap.add_argument("--prefix-cache", default="off",
+                    choices=["off", "on", "noshare"],
+                    help="paged: share block-aligned prompt prefixes through "
+                         "the refcounted page index (DESIGN.md §11); noshare "
+                         "runs the same chunked admission without sharing")
+    ap.add_argument("--span-tokens", type=int, default=None,
+                    help="blockwise-scan span width in tokens (mirrors "
+                         "REPRO_BLOCKWISE_SPAN_TOKENS; default: model config)")
+    ap.add_argument("--unroll-max", type=int, default=None,
+                    help="max spans unrolled before the scan falls back to "
+                         "lax.scan (mirrors REPRO_BLOCKWISE_UNROLL_MAX; "
+                         "default: model config)")
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config(args.arch)
     cfg = dataclasses.replace(cfg, cache_layout=args.layout)
+    if args.span_tokens is not None:
+        cfg = dataclasses.replace(cfg, cache_span_tokens=args.span_tokens)
+    if args.unroll_max is not None:
+        cfg = dataclasses.replace(cfg, cache_unroll_max=args.unroll_max)
     params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
     server = api.serve(cfg, params, max_slots=args.max_slots,
                        max_seq=args.max_seq, attn_backend=args.backend,
                        cache_mode=args.cache_mode,
-                       pool_hbm_bytes=args.pool_bytes)
+                       pool_hbm_bytes=args.pool_bytes,
+                       prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
+    # With the prefix cache enabled, requests share a system-prompt prefix
+    # (half of --prompt-len) so the printed hit-rate exercises real reuse.
+    shared = (rng.integers(0, cfg.vocab_size, args.prompt_len // 2)
+              .astype(np.int32) if args.prefix_cache != "off" else
+              np.zeros(0, np.int32))
     handles = []
     for i in range(args.requests):
         # heterogeneous workload: prompts from half to full --prompt-len,
         # budgets from half to full --new-tokens
         plen = max(4, args.prompt_len - (i * args.prompt_len // 2) // max(args.requests - 1, 1))
         n_new = max(2, args.new_tokens - (i * args.new_tokens // 2) // max(args.requests - 1, 1))
-        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        tail = rng.integers(0, cfg.vocab_size,
+                            max(plen - len(shared), 1)).astype(np.int32)
+        prompt = np.concatenate([shared, tail])
         handles.append(server.submit(api.Request(prompt=prompt,
                                                  max_new_tokens=n_new)))
     t0 = time.monotonic()
@@ -82,6 +106,15 @@ def main():
               f"(high water {pl['high_water_pages']}, "
               f"{pl['bytes_total']:,}B total) "
               f"preemptions={st['preemptions']}")
+    if "prefix" in st:
+        px, pl = st["prefix"], st["pool"]
+        print(f"  prefix[{px['mode']}]: hit_rate={px['hit_rate']:.2f} "
+              f"({px['hits']}/{px['lookups']} lookups) "
+              f"reused_tokens={px['reused_tokens']} "
+              f"prefill_tokens={px['prefill_tokens']} "
+              f"resumes={px['resumes']} cow_breaks={px['cow_breaks']} "
+              f"refs_total={pl['refs_total']} "
+              f"pages_shared={pl['pages_shared']}")
     for i, r in enumerate(results[:4]):
         print(f"  req{i}: prompt_len={r.prompt_len} n_tokens={len(r.tokens)} "
               f"prefill={r.prefill_s * 1e3:.0f}ms gen={r.gen_s * 1e3:.0f}ms "

@@ -220,6 +220,49 @@ def attn_block_prefill(params, cfg: ModelConfig, x: Array, positions: Array,
     return x + out_project(params["attn"], o), cache
 
 
+def attn_block_chunk(params, cfg: ModelConfig, x: Array, positions: Array,
+                     cache: kvcache.LayerKVCache):
+    """Block-chunked prefill step (prefix-cache admission; DESIGN.md §11):
+    process ``C <= block_size`` prompt tokens starting at a block boundary.
+    x: [B, C, d]; positions: i32 [B, C] — absolute sequence positions (the
+    chunk may resume mid-prompt from cached pages, so RoPE phases never
+    restart at zero).
+
+    The chunk attends the compressed store (lazily dequantized, like
+    decode) plus its own raw K/V causally, then a full chunk compresses
+    straight into the store while a partial tail lands in the raw buffer —
+    so each block's output and encoding depend only on (params, earlier
+    pages, block tokens), the invariant that makes prefix-cache hits
+    bit-identical to chunking from token 0.
+
+    Decode-exact boundary semantics: ``kvcache.append`` flushes a
+    block-completing token into the compressed store BEFORE attention runs
+    (the token attends itself lossily, with any sliding-window ring
+    eviction already applied).  A full chunk therefore splits — the first
+    ``T-1`` tokens attend old-store + raw-causal, then the chunk flushes,
+    and the boundary token attends the post-flush cache through the same
+    ``kvcache.attend`` backend dispatch decode uses.  Without the split, a
+    preempt-resume replay of a block-boundary token would attend itself
+    raw where the original decode attended it compressed, and the resumed
+    greedy tokens would diverge from the uninterrupted run."""
+    h = layers.rms_norm(x, params["ln_attn"], cfg.norm_eps)
+    q, k, v = qkv_project(params["attn"], cfg, h, positions)
+    kT = k.transpose(0, 2, 1, 3)  # [B, Hkv, C, Dh]
+    vT = v.transpose(0, 2, 1, 3)
+    C = q.shape[1]
+    if C == cache.spec.block_size:
+        o_head = (kvcache.attend_chunk(cache, q[:, :-1], kT[:, :, :-1],
+                                       vT[:, :, :-1]) if C > 1 else None)
+        cache = kvcache.append_chunk(cache, kT, vT)
+        o_last = kvcache.attend(cache, q[:, -1])[:, None]  # [B, 1, Hq, Dh]
+        o = (jnp.concatenate([o_head, o_last], axis=1)
+             if o_head is not None else o_last)
+    else:
+        o = kvcache.attend_chunk(cache, q, kT, vT)
+        cache = kvcache.append_chunk(cache, kT, vT)
+    return x + out_project(params["attn"], o), cache
+
+
 def attn_block_decode(params, cfg: ModelConfig, x: Array, position: Array,
                       cache: kvcache.LayerKVCache):
     """One-token decode: append this token's KV (compress-on-overflow) and

@@ -555,6 +555,81 @@ def decode_step(params, cfg: ModelConfig, tokens, position, state,
     return logits, new_state
 
 
+def gather_prefix_state(state, pages, n_blocks):
+    """Seed a solo (batch-1, dense) decode state from cached arena pages —
+    the prefix-cache hit path (DESIGN.md §11).  ``pages``: i32 [NB], the
+    physical page of logical block ``i`` for the first ``n_blocks`` blocks
+    (-1 padding beyond); ``n_blocks`` may be traced.  Every layer's cache
+    gathers its blocks bit-for-bit out of the live arena with an empty raw
+    buffer, so ``prefill_chunk`` resumes at block ``n_blocks`` exactly as
+    if it had chunked the whole prefix itself.  KV-only families (dense /
+    moe) — the scheduler enforces this before enabling the prefix cache."""
+    from repro.core import pool
+
+    kv = state["kv"]
+    fn = lambda c: pool.gather_pages(c, pages, n_blocks)  # noqa: E731
+    return {"kv": tuple(fn(c) for c in kv) if isinstance(kv, (tuple, list))
+            else fn(kv)}
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, pos0, state,
+                  unroll: bool = False):
+    """One block-chunked prefill step (prefix-cache admission path;
+    DESIGN.md §11).  tokens: i32 [B, C] — up to ``block_size`` prompt
+    tokens starting at the block-boundary position ``pos0`` (scalar or
+    [B]); ``state`` is a solo decode state whose caches sit exactly at that
+    boundary (raw buffers empty) — fresh, mid-chunking, or seeded from
+    cached pages by ``gather_prefix_state``.  Returns (logits [B, V] of the
+    chunk's LAST token, new state).
+
+    Each chunk attends the compressed store plus its own raw K/V causally
+    and then compresses itself (``attention.attn_block_chunk``), so the
+    computation per block is a pure function of (params, earlier blocks'
+    pages, block tokens) — chunking a suffix after a prefix-cache hit is
+    bit-identical to chunking from token 0, which is what lets greedy
+    outputs match between sharing-on and sharing-off servers."""
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            "block-chunked prefill needs pure-KV decode state "
+            f"(family {cfg.family!r})")
+    B, C = tokens.shape
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    if pos0.ndim == 0:
+        pos0 = jnp.broadcast_to(pos0, (B,))
+    positions = pos0[:, None] + jnp.arange(C)[None, :]
+    x = layers.embed_tokens(params["emb"], tokens)
+
+    def body(carry, xs):
+        x = carry
+        block_p, cache = xs
+        x, cache = attention.attn_block_chunk(block_p, cfg, x, positions, cache)
+        if cfg.family == "moe":
+            h = layers.rms_norm(x, block_p["ln_moe"], cfg.norm_eps)
+            y, _ = moe.moe_apply(block_p["moe"], cfg, h)
+            x = x + y
+        else:
+            h = layers.rms_norm(x, block_p["ln_mlp"], cfg.norm_eps)
+            x = x + layers.mlp(block_p["mlp"], h)
+        return x, cache
+
+    if isinstance(state["kv"], (tuple, list)):
+        # Per-layer cache specs (CompressionPolicy overrides): unrolled.
+        caches = []
+        for i, cache in enumerate(state["kv"]):
+            block_p = jax.tree.map(lambda p: p[i], params["blocks"])
+            x, cache = body(x, (block_p, cache))
+            caches.append(cache)
+        new_state = {"kv": tuple(caches)}
+    else:
+        x, caches = jax.lax.scan(body, x, (params["blocks"], state["kv"]),
+                                 unroll=unroll)
+        new_state = {"kv": caches}
+
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = layers.unembed(params["emb"], x[:, -1])
+    return logits, new_state
+
+
 # ---------------------------------------------------------------------------
 # loss
 # ---------------------------------------------------------------------------

@@ -1,0 +1,156 @@
+"""Block-aligned prefix-cache index over compressed pages (DESIGN.md §11).
+
+At millions-of-users scale most traffic shares long system prompts and
+few-shot prefixes; KVComp makes prefix reuse strictly better than
+vLLM-style raw-page sharing because each cached page holds ``block_size``
+tokens at the 2-4x smaller post-compression footprint.  This module is the
+host-side index: a radix tree whose edges are whole compression blocks
+(``block_size`` token ids each) and whose nodes each own ONE physical page
+of the ``repro.core.pool`` arena — the compressed encoding of that block,
+valid for any request whose prompt walks the same token path from the root
+(the block-chunked admission path makes equal-prefix pages bit-identical,
+so a cached page and a recomputed one are interchangeable).
+
+Node keys are the raw token bytes of the block, not hashes — two distinct
+prefixes can never collide into one page.  Every node holds one pool
+reference (``PagedBlockPool.retain`` on insert, ``release`` on eviction),
+so a page stays live while EITHER the index or any row's page table points
+at it, and dies only when the last reference drops.  Lookup and insert
+stamp the touched path with a logical clock; eviction releases LRU *leaf*
+blocks first (an inner block can never outlive its extensions — evicting a
+parent before its children would break every cached path through it).
+
+The index is pure host bookkeeping, like the pool allocator: the device
+only ever sees page ids that the scheduler splices into page tables.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Node:
+    __slots__ = ("key", "page", "parent", "children", "stamp")
+
+    def __init__(self, key: bytes, page: int, parent: "_Node | None"):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: dict[bytes, _Node] = {}
+        self.stamp = 0
+
+
+class PrefixIndex:
+    """Radix tree: block-aligned token prefixes -> live arena page ids."""
+
+    def __init__(self, block_size: int):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.block_size = int(block_size)
+        self._children: dict[bytes, _Node] = {}  # root's children
+        self._clock = 0
+        self._n_blocks = 0
+        self.inserted_blocks = 0
+        self.evicted_blocks = 0
+
+    # -- internals ------------------------------------------------------------
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _keys(self, tokens, n_blocks: int) -> list[bytes]:
+        T = self.block_size
+        t = np.ascontiguousarray(np.asarray(tokens, np.int32)[: n_blocks * T])
+        return [t[i * T : (i + 1) * T].tobytes() for i in range(n_blocks)]
+
+    def _leaves(self) -> list[_Node]:
+        out, stack = [], list(self._children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            else:
+                out.append(n)
+        return out
+
+    # -- queries / mutation ---------------------------------------------------
+    def lookup(self, tokens, max_blocks: int) -> list[int]:
+        """Longest cached block-aligned prefix of ``tokens``, capped at
+        ``max_blocks``; returns its page ids in block order (possibly empty)
+        and MRU-stamps the matched path so admission-pressure eviction never
+        reclaims pages about to be spliced."""
+        stamp = self._tick()
+        pages: list[int] = []
+        children = self._children
+        for key in self._keys(tokens, max(int(max_blocks), 0)):
+            node = children.get(key)
+            if node is None:
+                break
+            node.stamp = stamp
+            pages.append(node.page)
+            children = node.children
+        return pages
+
+    def insert(self, tokens, pages, pool) -> int:
+        """Index the first ``len(pages)`` blocks of ``tokens``; every newly
+        created node retains its page in ``pool`` (the index's own
+        reference).  Blocks already indexed keep their original page — by
+        chunked-admission determinism both copies hold identical bits, and
+        keeping the old one preserves existing sharers.  Returns the number
+        of nodes created."""
+        stamp = self._tick()
+        created = 0
+        parent: _Node | None = None
+        children = self._children
+        for key, page in zip(self._keys(tokens, len(pages)), pages):
+            node = children.get(key)
+            if node is None:
+                node = _Node(key, int(page), parent)
+                pool.retain([node.page])
+                children[key] = node
+                created += 1
+                self._n_blocks += 1
+                self.inserted_blocks += 1
+            node.stamp = stamp
+            parent = node
+            children = node.children
+        return created
+
+    def evict(self, pool, need_free: int, protect=()) -> int:
+        """Release LRU leaf blocks until ``pool.free_pages >= need_free`` or
+        nothing evictable remains.  ``protect`` is a set of page ids that
+        must survive (a just-looked-up hit path whose pages are not yet
+        retained by the admitting row).  Returns how many BLOCKS were
+        evicted — the caller's progress signal.  An eviction does not
+        always free a page (releasing a block a live row still references
+        merely unshares it), but it always makes progress: the row's page
+        becomes exclusively owned, so its next ring-wrap flush can reuse it
+        in place instead of allocating."""
+        protect = frozenset(int(p) for p in protect)
+        evicted = 0
+        while pool.free_pages < need_free:
+            leaves = [n for n in self._leaves() if n.page not in protect]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.stamp)
+            pool.release([victim.page])
+            siblings = (victim.parent.children if victim.parent is not None
+                        else self._children)
+            del siblings[victim.key]
+            self._n_blocks -= 1
+            self.evicted_blocks += 1
+            evicted += 1
+        return evicted
+
+    # -- reporting ------------------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        """Blocks (= nodes = retained pages) currently indexed."""
+        return self._n_blocks
+
+    def stats(self) -> dict:
+        return {
+            "blocks": self._n_blocks,
+            "inserted_blocks": self.inserted_blocks,
+            "evicted_blocks": self.evicted_blocks,
+        }

@@ -36,6 +36,15 @@ bound by the compression ratio), a page-fault sweep assigns each row its
 next physical page just before the flush that needs it, and on pool
 exhaustion the youngest request is preempted — pages freed, prompt replayed
 on re-admission — leaving greedy tokens bit-identical to solo runs.
+
+``ServerConfig.prefix_cache`` (DESIGN.md §11) layers prefix sharing on top:
+admission switches to a block-chunked prefill whose per-block computation
+depends only on (params, earlier blocks' pages, block tokens), a radix
+index maps shared block-aligned prompt prefixes to live refcounted arena
+pages, hits splice cached page ids into the new row's page table and
+prefill starts at the first divergent block, a row that wraps its ring onto
+a shared page copy-on-writes just that page, and preempted rows park their
+blocks in the index and resume from cached pages instead of replaying.
 """
 
 from __future__ import annotations
@@ -97,6 +106,19 @@ class ServerConfig:
     # dense-equivalent footprint (max_slots full ring reservations) — paged
     # then behaves as pure oversubscription with no added memory.
     pool_hbm_bytes: int | None = None
+    # Prefix cache over compressed pages (DESIGN.md §11; paged mode only).
+    #   "off"     — classic admission: solo full prefill from token 0.
+    #   "on"      — block-chunked admission with a radix prefix index:
+    #               shared prompt prefixes splice cached page ids into the
+    #               new row's page table and prefill starts at the first
+    #               divergent block; preempted rows park their blocks in
+    #               the index and resume from cached pages.
+    #   "noshare" — the accounting baseline: the identical block-chunked
+    #               admission path with lookup/insert disabled, so its
+    #               greedy outputs are bit-identical to "on" by
+    #               construction (benchmarks/prefix_reuse.py compares the
+    #               two for the prefill-FLOPs-saved gate).
+    prefix_cache: str = "off"
 
 
 class Handle:
@@ -227,6 +249,32 @@ class Server:
             self.pool = None
             self.state = M.init_decode_state(cfg, B, scfg.max_seq)
 
+        if scfg.prefix_cache not in ("off", "on", "noshare"):
+            raise ValueError(
+                f"prefix_cache must be off|on|noshare, got {scfg.prefix_cache!r}")
+        self.prefix_mode = scfg.prefix_cache != "off"
+        self._share = scfg.prefix_cache == "on"
+        self.index = None
+        if self.prefix_mode:
+            if not self.paged:
+                raise ValueError(
+                    "prefix_cache shares pages of the pooled arena; it needs "
+                    "cache_mode='paged'")
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    "prefix_cache needs a pure-KV decode state (block-chunked "
+                    f"prefill has no {cfg.family!r} step)")
+            if self._share:
+                from repro.serve.prefix import PrefixIndex
+                self.index = PrefixIndex(self._spec0.block_size)
+            self._pfx = {
+                "lookups": 0, "hits": 0, "hit_blocks": 0,
+                "reused_tokens": 0, "prefill_tokens": 0,
+                "prefill_attn_pairs": 0,
+                "resumes": 0, "resume_reused_blocks": 0,
+                "cow_breaks": 0,
+            }
+
         # Greedy argmax runs inside the jitted closures so each step/admit is
         # one dispatch transferring [B] token ids, not [B, V] logits.
         # Prefill always builds the DENSE twin of the cache spec (admission
@@ -252,6 +300,20 @@ class Server:
             self._clear = jax.jit(M.clear_cache_row, donate_argnums=(0,))
         else:
             self._insert = jax.jit(M.insert_decode_row, donate_argnums=(0,))
+        if self.prefix_mode:
+            # Block-chunked admission (DESIGN.md §11): the solo state chains
+            # through the chunk loop, so each step donates its predecessor.
+            # The gather reads the LIVE state (no donation), the fresh-state
+            # builder re-executes per call (each admission needs buffers it
+            # can donate away).
+            def _chunk(p, t, pos, st):
+                logits, st = M.prefill_chunk(p, cfg, t, pos, st)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), st
+
+            self._chunk = jax.jit(_chunk, donate_argnums=(3,))
+            self._gather = jax.jit(M.gather_prefix_state)
+            self._fresh = jax.jit(
+                lambda: M.init_decode_state(cfg, 1, scfg.max_seq))
 
     # -- intake ---------------------------------------------------------------
     def submit(self, request: Request) -> Handle:
@@ -269,7 +331,9 @@ class Server:
             if need > self.pool.n_pages:
                 raise ValueError(
                     f"request needs up to {need} block pages but the pool "
-                    f"holds {self.pool.n_pages}; raise pool_hbm_bytes")
+                    f"holds {self.pool.n_pages}; raise the pool byte budget "
+                    "(pool_hbm_bytes= via api.serve / --pool-bytes on the "
+                    "launch.serve CLI)")
         h = Handle(self, request)
         self._queue.append(h)
         return h
@@ -297,12 +361,22 @@ class Server:
         return len(self._queue)
 
     # -- slot lifecycle -------------------------------------------------------
+    def _forced(self, handle: Handle) -> np.ndarray:
+        """The tokens a (re-)admitted request's cache must come to contain:
+        its prompt plus every token already generated before a preemption
+        (prefix mode keeps them — resume continues instead of replaying)."""
+        return np.concatenate([np.asarray(handle.request.prompt, np.int32),
+                               np.asarray(handle._toks, np.int32)])
+
     def _admit(self, handle: Handle, row: int) -> bool:
         """Prefill a queued request at its exact prompt length and splice it
         into slot ``row`` of the live decode state.  Returns False when the
         request finished at prefill (budget of 1, or instant EOS) and the
         slot stays free.  Paged mode allocates the prompt's block pages and
-        scatters the solo (dense) prefill into them."""
+        scatters the solo (dense) prefill into them; prefix mode takes the
+        block-chunked path instead (``_admit_prefix``)."""
+        if self.prefix_mode:
+            return self._admit_prefix(handle, row)
         req = handle.request
         prompt = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
         t0 = time.monotonic()
@@ -335,13 +409,118 @@ class Server:
         self._row_seq[row] = self._seq
         return True
 
+    def _admit_prefix(self, handle: Handle, row: int) -> bool:
+        """Block-chunked admission (DESIGN.md §11): longest-prefix lookup,
+        splice the hit's pages, chunk-prefill only the divergent suffix.
+
+        The forced tokens (prompt + any pre-preemption generations) are
+        processed in ``block_size`` chunks starting at the first block the
+        index does not hold; each chunk attends the compressed store plus
+        its own raw K/V and compresses itself, so per-block state depends
+        only on (params, earlier pages, block tokens) — greedy outputs are
+        bit-identical whether the prefix came from the index ("on"), was
+        chunked right here ("noshare"), or survived a preemption.  Full
+        blocks of the forced tokens are inserted into the index afterwards
+        (sharing on), making this admission the next one's hit."""
+        spec = self._spec0
+        T, nb = spec.block_size, spec.n_blocks
+        forced = self._forced(handle)
+        n = len(forced)
+        n_full = n // T
+        occupied = min(n_full, nb)  # ring-capped slots the chunks will fill
+        hit = handle.__dict__.pop("_hit_pages", [])  # stashed by _can_admit
+        j = len(hit)
+        resumed = len(handle._toks) > 0
+        t0 = time.monotonic()
+        if j:
+            self.pool.retain(hit)  # the row's own references to the hit
+            seed = np.full(nb, -1, np.int64)
+            seed[:j] = hit
+            state = self._gather(self.state, jnp.asarray(seed, jnp.int32),
+                                 jnp.int32(j))
+        else:
+            state = self._fresh()
+        pos = j * T
+        tok = None
+        while pos < n:
+            C = min(T, n - pos)
+            tok, state = self._chunk(
+                self.params, jnp.asarray(forced[None, pos : pos + C]),
+                jnp.int32(pos), state)
+            self._pfx["prefill_tokens"] += C
+            # KV pairs each chunk token attends (its full causal context):
+            # the analytic prefill-FLOPs unit benchmarks/prefix_reuse.py
+            # converts with the model dims.
+            self._pfx["prefill_attn_pairs"] += C * pos + C * (C + 1) // 2
+            pos += C
+        first = int(np.asarray(tok)[0])
+        t1 = time.monotonic()
+        handle._prefill_s += t1 - t0
+        if handle._t_start is None:
+            handle._t_start = t1
+        if self._share:
+            self._pfx["lookups"] += 1
+        if j:
+            self._pfx["hits"] += 1
+            self._pfx["hit_blocks"] += j
+            self._pfx["reused_tokens"] += j * T
+        if resumed:
+            self._pfx["resumes"] += 1
+            self._pfx["resume_reused_blocks"] += j
+        if handle._push(first):
+            # Finished at admission: nothing lands in a slot; drop the row's
+            # hit references (the index's own survive) and skip the insert —
+            # pages for the new blocks were never allocated.
+            if j:
+                self.pool.release(hit)
+            return False
+        pages = np.full(nb, -1, np.int64)
+        pages[:j] = hit
+        if occupied > j:
+            pages[j:occupied] = self.pool.alloc(occupied - j)
+        self._pt_host[row] = pages
+        self.state = self._insert(self.state, state, row,
+                                  jnp.asarray(pages, jnp.int32))
+        if self._share and n_full and n_full <= nb:
+            # Index every full forced block (hit blocks re-stamp, divergent
+            # ones create retaining nodes).  Skipped when the solo chunking
+            # wrapped the ring (n_full > nb): slots no longer map block i.
+            self.index.insert(forced, pages[:n_full].tolist(), self.pool)
+        self._slots[row] = handle
+        self._cur[row] = first
+        self._pos[row] = n
+        self._seq += 1
+        self._row_seq[row] = self._seq
+        return True
+
     def _can_admit(self, handle: Handle) -> bool:
         """Memory-pressure admission (paged): the prompt's blocks plus one
         page of decode headroom must be free — NOT the request's whole
         lifetime, which is what lets slots oversubscribe; the preemption
-        path covers over-commitment later."""
+        path covers over-commitment later.  Prefix mode discounts the hit
+        blocks (they are spliced, not prefilled) and evicts cold index
+        blocks before parking the queue head."""
         if not self.paged:
             return True
+        if self.prefix_mode:
+            spec = self._spec0
+            T, nb = spec.block_size, spec.n_blocks
+            forced = self._forced(handle)
+            n_full = len(forced) // T
+            hit: list[int] = []
+            if self._share and n_full <= nb:
+                # Cap below the forced length so at least one token is left
+                # to process — the last token's logits drive the next one.
+                hit = self.index.lookup(
+                    forced, min((len(forced) - 1) // T, nb))
+            handle._hit_pages = hit  # _admit_prefix splices this exact hit
+            need = min(min(n_full, nb) - len(hit) + 1, self.pool.n_pages)
+            if self.pool.free_pages < need and self._share:
+                # Reclaim cold index blocks before giving up; the hit path
+                # was just MRU-stamped AND is protected explicitly (its
+                # pages are not yet retained by the row).
+                self.index.evict(self.pool, need, protect=hit)
+            return self.pool.free_pages >= need
         need = min(self._prefill_pages(handle.request) + 1, self.pool.n_pages)
         return self.pool.free_pages >= need
 
@@ -363,25 +542,46 @@ class Server:
                       key=lambda r: self._row_seq[r])
 
     def _release_row(self, row: int) -> None:
-        """Free a row's pages and unassign its device page-table row, so the
-        slot's continuing (garbage) decode can never write into pages that
-        get re-issued to another request."""
+        """Drop the row's references on its pages (a page shared with the
+        prefix index or another row survives; an exclusive one is freed) and
+        unassign its device page-table row, so the slot's continuing
+        (garbage) decode can never write into pages that get re-issued to
+        another request."""
         held = self._pt_host[row][self._pt_host[row] >= 0]
         if len(held):
-            self.pool.free(held.tolist())
+            self.pool.release(held.tolist())
         self._pt_host[row] = -1
         self.state = self._clear(self.state, jnp.int32(row))
 
     def _preempt(self, row: int) -> None:
-        """Evict a live request: free its pages, clear its generated tokens,
-        and requeue it at the queue head.  On re-admission the prompt is
-        replayed (solo prefill) and greedy decode regenerates the exact same
-        tokens, so results — and even an in-flight ``Handle.tokens()``
-        stream — are unaffected beyond latency."""
+        """Evict a live request and requeue it at the queue head.
+
+        Classic paged mode frees the pages and clears the generated tokens;
+        re-admission replays the prompt (solo prefill) and greedy decode
+        regenerates the identical tokens, so results — and even an
+        in-flight ``Handle.tokens()`` stream — are unaffected beyond
+        latency.  Prefix mode instead PARKS the progress: the row's flushed
+        blocks (prompt and generated alike) are inserted into the index
+        (sharing on), its generated tokens are kept, and the row's own page
+        references drop — re-admission restores from the cached pages and
+        chunk-prefills only the unflushed tail, no prompt replay."""
         handle = self._slots[row]
         self._slots[row] = None
-        self._release_row(row)
-        handle._toks.clear()
+        if self.prefix_mode:
+            if self._share:
+                nb = self._spec0.n_blocks
+                # Cache holds _pos tokens (the freshly pushed one is fed
+                # next step), so flushed = _pos // T — insertable only while
+                # the ring has not wrapped (slot i still holds block i).
+                flushed = int(self._pos[row]) // self._spec0.block_size
+                if 0 < flushed <= nb:
+                    self.index.insert(self._forced(handle),
+                                      self._pt_host[row][:flushed].tolist(),
+                                      self.pool)
+            self._release_row(row)
+        else:
+            self._release_row(row)
+            handle._toks.clear()
         self._queue.appendleft(handle)
         self.preemptions += 1
 
@@ -403,25 +603,47 @@ class Server:
             if (pos + 1) % T:
                 continue  # this step only appends to the raw buffer
             slot = ((pos + 1) // T - 1) % nb
-            if self._pt_host[row, slot] >= 0:
-                continue  # SWA ring reuse: overwrite the old block's page
-            while self.pool.free_pages == 0:
-                # Preempt the youngest row that actually HOLDS pages —
+            # Unassigned slot, or a copy-on-write break: the ring wrapped
+            # onto a page the prefix index / another row still references —
+            # the flush overwrites the whole block, so "copy" degenerates
+            # to re-pointing the slot at a private page and dropping our
+            # reference on the shared one.
+            while True:
+                existing = int(self._pt_host[row, slot])
+                if existing >= 0 and self.pool.refcount(existing) == 1:
+                    break  # SWA ring reuse: overwrite our exclusive page
+                if self.pool.free_pages:
+                    page = self.pool.alloc(1)[0]
+                    if existing >= 0:  # shared: only exists in prefix mode
+                        self.pool.release([existing])
+                        self._pfx["cow_breaks"] += 1
+                    self._pt_host[row, slot] = page
+                    rows_u.append(row)
+                    slots_u.append(slot)
+                    pages_u.append(page)
+                    break
+                # Reclaim cold prefix-index blocks first (cheap: nothing
+                # loses progress).  Progress = blocks evicted, not pages
+                # freed: releasing the index's reference on THIS row's own
+                # shared page makes it exclusive, and the re-check above
+                # then reuses it in place — without that re-check a solo
+                # row whose pages the index shares would preempt itself.
+                # Then preempt the youngest row that actually HOLDS pages —
                 # evicting a zero-page row would destroy its progress
-                # without freeing a byte.  One always exists: free == 0
-                # means every page is held by some live row.
-                victim = next(r for r in reversed(self._live_rows_by_age())
-                              if (self._pt_host[r] >= 0).any())
+                # without freeing a byte.  Each round frees a page, evicts
+                # an index block, or shrinks the live rows, so the loop
+                # terminates.
+                if self._share and self.index.evict(self.pool, 1):
+                    continue
+                victim = next(
+                    (r for r in reversed(self._live_rows_by_age())
+                     if (self._pt_host[r] >= 0).any()), None)
+                if victim is None:
+                    raise RuntimeError(
+                        "pool exhausted with no reclaimable pages")
                 self._preempt(victim)
                 if victim == row:
                     break
-            if self._slots[row] is None:
-                continue
-            page = self.pool.alloc(1)[0]
-            self._pt_host[row, slot] = page
-            rows_u.append(row)
-            slots_u.append(slot)
-            pages_u.append(page)
         # A later row's victim scan can preempt a row recorded EARLIER in
         # this sweep (the younger row may hold zero pages, making an older,
         # already-granted row the youngest page holder).  That row's pages
@@ -484,7 +706,9 @@ class Server:
 
     def stats(self) -> dict:
         """Live serving counters; in paged mode includes pool occupancy
-        (pages live/free, byte accounting per layer, high-water mark)."""
+        (pages live/free, refcounts, byte accounting per layer, high-water
+        mark), and in prefix mode hit-rate / reuse / CoW counters plus the
+        index's own block accounting."""
         s = {
             "cache_mode": "paged" if self.paged else "dense",
             "active": self.active,
@@ -493,6 +717,13 @@ class Server:
         }
         if self.paged:
             s["pool"] = self.pool.stats()
+        if self.prefix_mode:
+            p = dict(self._pfx)
+            p["mode"] = self.scfg.prefix_cache
+            p["hit_rate"] = (p["hits"] / p["lookups"]) if p["lookups"] else 0.0
+            if self._share:
+                p["index"] = self.index.stats()
+            s["prefix"] = p
         return s
 
 

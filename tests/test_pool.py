@@ -92,12 +92,14 @@ def test_pool_alloc_free_basics():
     with pytest.raises(pool.PoolExhausted):
         p.alloc(2)
     assert p.free_pages == 1  # failed alloc takes nothing
-    p.free(a[:1])
+    assert p.release(a[:1]) == [a[0]]
     assert p.free_pages == 2 and p.high_water == 3
     with pytest.raises(RuntimeError, match="not live"):
-        p.free(a[:1])  # double free
+        p.release(a[:1])  # double release
     with pytest.raises(RuntimeError, match="not live"):
-        p.free([99])  # never allocated
+        p.release([99])  # never allocated
+    with pytest.raises(RuntimeError, match="not live"):
+        p.retain([99])  # can't retain a dead page either
 
 
 def test_pool_property_invariants(rng):
@@ -121,7 +123,7 @@ def test_pool_property_invariants(rng):
                         p.alloc(n)
             elif held:
                 k = min(n, len(held))
-                p.free(held[:k])
+                assert sorted(p.release(held[:k])) == sorted(held[:k])
                 held = held[k:]
             # occupancy == sum of live page bytes, conservation holds
             assert p.live_pages == len(held) == len(set(held))
@@ -150,7 +152,7 @@ def test_page_tables_never_alias_across_rows():
             if kind == 2:  # release the row (retire / preempt)
                 held = table[row][table[row] >= 0]
                 if len(held):
-                    p.free(held.tolist())
+                    p.release(held.tolist())
                 table[row] = -1
             elif table[row, slot] < 0 and p.free_pages:
                 table[row, slot] = p.alloc(1)[0]

@@ -1,0 +1,347 @@
+"""Compressed-page prefix cache (DESIGN.md §11).
+
+Four layers of guarantees:
+
+* refcount invariants — a page is never reissued while any reference holds
+  it, double-release raises, retain/release bracket exactly (hypothesis
+  property tests over a shadow refcount model);
+* index semantics — longest-prefix lookup is block-aligned and exact
+  (token-byte keys, no hash aliasing), LRU eviction only reclaims leaves
+  and respects the protect set;
+* serving semantics — sharing on vs noshare is bit-identical at the greedy
+  tokens while actually reusing cached blocks; a preempted request resumes
+  from cached pages (no prompt replay) and still matches the ample-pool
+  run; copy-on-write never leaves a shared page as any row's writable
+  flush target (checked on every ensure-pages sweep under a sliding-window
+  ring that wraps onto shared prefix pages);
+* plumbing — prefix mode demands a paged cache, and api.serve threads the
+  mode through to the scheduler and its stats.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import pool
+from repro.models import model as M
+from repro.models import registry
+from repro.serve.prefix import PrefixIndex
+from repro.serve.scheduler import Request, Server, ServerConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_smoke_config("yi_6b")
+    cfg = dataclasses.replace(cfg, cache_layout="packed", cache_block=8)
+    params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _pool_page_bytes(cfg, max_seq=256):
+    specs = M.cache_specs(cfg, max_seq)
+    return sum(pool.page_nbytes(s, cfg.n_kv_heads, cfg.resolved_head_dim)
+               for s in specs), specs[0]
+
+
+def _serve(cfg, params, mode, pool_bytes=None, max_slots=2, max_seq=256):
+    return Server(cfg, params,
+                  ServerConfig(max_slots=max_slots, max_seq=max_seq,
+                               cache_mode="paged", pool_hbm_bytes=pool_bytes,
+                               prefix_cache=mode),
+                  q_chunk=32, kv_chunk=32)
+
+
+# ---------------------------------------------------------------------------
+# Refcount invariants (hypothesis property tests)
+# ---------------------------------------------------------------------------
+
+
+def test_refcount_lifecycle_basics():
+    p = pool.PagedBlockPool(4, (64,))
+    a = p.alloc(2)
+    assert all(p.refcount(x) == 1 for x in a)
+    p.retain(a)
+    assert all(p.refcount(x) == 2 for x in a)
+    assert p.release(a) == []          # still referenced: nothing freed
+    assert p.free_pages == 2
+    assert sorted(p.release(a)) == sorted(a)  # last ref: both freed
+    assert p.free_pages == 4
+    with pytest.raises(RuntimeError, match="not live"):
+        p.release(a[:1])
+    assert p.refcount(a[0]) == 0       # dead pages read as zero
+
+
+def test_refcount_property_no_reissue_while_referenced():
+    """Whatever interleaving of alloc / retain / release happens, a page
+    with a positive refcount is never handed out by alloc again, pages only
+    rejoin the free list at refcount zero, and a shadow model of the counts
+    stays in exact agreement."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 5)),
+                    max_size=80))
+    def run(ops_):
+        p = pool.PagedBlockPool(8, (32,))
+        refs: dict[int, int] = {}  # shadow model
+        for kind, n in ops_:
+            live = sorted(refs)
+            if kind == 0:  # alloc
+                if n <= p.free_pages:
+                    got = p.alloc(n)
+                    assert not (set(got) & set(live)), \
+                        "alloc reissued a page that still has references"
+                    refs.update((g, 1) for g in got)
+                else:
+                    with pytest.raises(pool.PoolExhausted):
+                        p.alloc(n)
+            elif kind == 1 and live:  # retain some live pages
+                take = live[: max(n, 1)]
+                p.retain(take)
+                for t in take:
+                    refs[t] += 1
+            elif kind == 2 and live:  # release some live pages
+                take = live[: max(n, 1)]
+                freed = p.release(take)
+                expect_freed = []
+                for t in take:
+                    refs[t] -= 1
+                    if refs[t] == 0:
+                        del refs[t]
+                        expect_freed.append(t)
+                assert sorted(freed) == sorted(expect_freed)
+            assert {x: p.refcount(x) for x in refs} == refs
+            assert p.live_pages == len(refs)
+            assert p.free_pages == p.n_pages - len(refs)
+            st_ = p.stats()
+            assert st_["refs_total"] == sum(refs.values())
+            assert st_["pages_shared"] == sum(v > 1 for v in refs.values())
+
+    run()
+
+
+def test_release_after_double_release_model():
+    """The satellite contract verbatim: double-release raises even when the
+    page was re-allocated in between (the new owner's count is 1, and the
+    stale releaser going through would corrupt it) — release only balances
+    retain/alloc brackets that are actually open."""
+    p = pool.PagedBlockPool(1, (16,))
+    (a,) = p.alloc(1)
+    p.release([a])
+    (b,) = p.alloc(1)
+    assert b == a  # the only page comes back
+    p.release([b])
+    with pytest.raises(RuntimeError, match="not live"):
+        p.release([b])
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex semantics
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_index_block_aligned_exact_lookup():
+    p = pool.PagedBlockPool(16, (16,))
+    idx = PrefixIndex(block_size=4)
+    toks = np.arange(12, dtype=np.int32)  # 3 full blocks
+    pages = p.alloc(3)
+    assert idx.insert(toks, pages, p) == 3
+    assert all(p.refcount(g) == 2 for g in pages)  # index holds its own ref
+
+    assert idx.lookup(toks, 3) == pages
+    assert idx.lookup(toks, 2) == pages[:2]          # cap respected
+    assert idx.lookup(toks[:8], 3) == pages[:2]      # shorter prefix
+    assert idx.lookup(toks[:7], 3) == pages[:1]      # partial block ignored
+    div = toks.copy()
+    div[5] = 99                                      # diverge inside block 1
+    assert idx.lookup(div, 3) == pages[:1]
+    assert idx.lookup(np.arange(100, 112, dtype=np.int32), 3) == []
+
+    # re-inserting the same tokens keeps the ORIGINAL pages (first writer
+    # wins — chunked admission makes the contents identical anyway)
+    other = p.alloc(3)
+    assert idx.insert(toks, other, p) == 0
+    assert idx.lookup(toks, 3) == pages
+
+
+def test_prefix_index_lru_leaf_eviction_and_protect():
+    p = pool.PagedBlockPool(8, (16,))
+    idx = PrefixIndex(block_size=4)
+    a = np.arange(8, dtype=np.int32)
+    b = np.concatenate([a[:4], np.arange(50, 54, dtype=np.int32)])
+    pa, pb = p.alloc(2), p.alloc(2)
+    idx.insert(a, pa, p)
+    idx.insert(b, pb, p)
+    p.release(pa), p.release(pb)  # only the index holds them now
+    assert p.free_pages == 8 - 3  # shared root block + two leaves
+    idx.lookup(a, 2)  # MRU-stamp chain a: chain b's leaf is now coldest
+
+    assert idx.evict(p, need_free=6) >= 1
+    assert p.free_pages >= 6
+    assert idx.lookup(a, 2) == pa  # the hot chain survived
+    assert idx.lookup(b, 2) == pa[:1]  # b's leaf is gone, shared root stays
+
+    # protect pins pages even when they are the LRU choice
+    freed = idx.evict(p, need_free=8, protect=pa)
+    assert p.refcount(pa[0]) >= 1 and p.refcount(pa[1]) >= 1
+    assert idx.lookup(a, 2) == pa
+
+
+def test_prefix_mode_requires_paged():
+    cfg = registry.get_smoke_config("yi_6b")
+    cfg = dataclasses.replace(cfg, cache_layout="packed", cache_block=8)
+    params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged"):
+        Server(cfg, params, ServerConfig(max_slots=2, max_seq=256,
+                                         prefix_cache="on"))
+    with pytest.raises(ValueError, match="prefix_cache"):
+        Server(cfg, params, ServerConfig(max_slots=2, max_seq=256,
+                                         cache_mode="paged",
+                                         pool_hbm_bytes=1 << 24,
+                                         prefix_cache="sometimes"))
+
+
+# ---------------------------------------------------------------------------
+# Serving semantics
+# ---------------------------------------------------------------------------
+
+
+def test_sharing_on_vs_noshare_bit_identical_with_real_reuse(setup):
+    """The §11 acceptance contract: same workload, same paged config —
+    prefix_cache="on" must reuse cached blocks (reused_tokens > 0, fewer
+    prefill tokens) while every greedy token stays bit-identical to the
+    noshare baseline."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)  # 3 blocks
+    reqs = [Request(prompt=np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, 1 + i).astype(np.int32)]),
+                    max_new_tokens=6) for i in range(3)]
+
+    outs, stats = {}, {}
+    for mode in ("noshare", "on"):
+        srv = _serve(cfg, params, mode)
+        hs = [srv.submit(r) for r in reqs]
+        srv.run()
+        outs[mode] = [h.result().tokens.tolist() for h in hs]
+        stats[mode] = srv.stats()
+    assert outs["on"] == outs["noshare"]
+    px = stats["on"]["prefix"]
+    assert px["reused_tokens"] >= 2 * len(shared)  # req 2 and 3 hit
+    assert px["hits"] >= 2 and px["hit_rate"] > 0
+    assert px["prefill_tokens"] < stats["noshare"]["prefix"]["prefill_tokens"]
+    # retirement dropped the rows' refs; only the index holds pages now
+    assert stats["on"]["pool"]["refs_total"] == stats["on"]["prefix"]["index"]["blocks"]
+
+
+def test_preempt_resumes_from_cached_pages(setup):
+    """A pool too small for the admitted load forces a preemption; in
+    prefix mode the victim's flushed blocks park in the index and its
+    generated tokens survive, so re-admission restores from cached pages
+    instead of replaying the prompt — and the tokens still match the
+    ample-pool run bit-exactly."""
+    cfg, params = setup
+    page_b, _ = _pool_page_bytes(cfg)
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    reqs = [Request(prompt=np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, 1 + i).astype(np.int32)]),
+                    max_new_tokens=24) for i in range(2)]
+
+    ample = _serve(cfg, params, "on")
+    ref = [ample.submit(r) for r in reqs]
+    ample.run()
+    ref_toks = [h.result().tokens.tolist() for h in ref]
+    assert ample.preemptions == 0
+
+    tiny = _serve(cfg, params, "on", pool_bytes=6 * page_b)
+    hs = [tiny.submit(r) for r in reqs]
+    tiny.run()
+    px = tiny.stats()["prefix"]
+    assert tiny.preemptions >= 1, "workload failed to force a preemption"
+    assert px["resumes"] >= 1
+    assert px["resume_reused_blocks"] >= 1, "resume replayed the prompt"
+    assert [h.result().tokens.tolist() for h in hs] == ref_toks
+
+
+class _CowAuditServer(Server):
+    """Asserts the CoW invariant on every flush sweep: once _ensure_pages
+    returns, every row flushing on the next step targets a page it owns
+    EXCLUSIVELY — a shared page (prefix index or sibling row) must never be
+    any row's writable tail."""
+
+    audited = 0
+
+    def _ensure_pages(self):
+        super()._ensure_pages()
+        T, nb = self._spec0.block_size, self._spec0.n_blocks
+        for row, h in enumerate(self._slots):
+            if h is None or (int(self._pos[row]) + 1) % T:
+                continue
+            slot = ((int(self._pos[row]) + 1) // T - 1) % nb
+            page = int(self._pt_host[row, slot])
+            assert page >= 0, "flush target unassigned after ensure sweep"
+            assert self.pool.refcount(page) == 1, \
+                f"row {row} would flush into shared page {page}"
+            type(self).audited += 1
+
+
+def test_cow_never_aliases_shared_page_into_writable_tail(setup):
+    """Sliding-window ring wrap drives rows straight onto their spliced
+    (shared) prefix pages — the audit subclass proves every flush lands on
+    an exclusively-owned page, and the outputs still match noshare."""
+    cfg, params = setup
+    cfg = dataclasses.replace(cfg, sliding_window=16)
+    params2, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)  # full window
+    reqs = [Request(prompt=prompt, max_new_tokens=20) for _ in range(2)]
+
+    _CowAuditServer.audited = 0
+    srv = _CowAuditServer(cfg, params2,
+                          ServerConfig(max_slots=2, max_seq=256,
+                                       cache_mode="paged", prefix_cache="on"),
+                          q_chunk=32, kv_chunk=32)
+    hs = [srv.submit(r) for r in reqs]
+    srv.run()
+    on = [h.result().tokens.tolist() for h in hs]
+    px = srv.stats()["prefix"]
+    assert _CowAuditServer.audited > 0, "no flush was audited"
+    assert px["cow_breaks"] >= 1, "ring never wrapped onto a shared page"
+    assert on[0] == on[1]  # identical requests, identical greedy tokens
+
+    base = _serve(cfg, params2, "noshare")
+    ns = [base.submit(r) for r in reqs]
+    base.run()
+    assert [h.result().tokens.tolist() for h in ns] == on
+
+
+def test_api_serve_threads_prefix_cache(setup):
+    cfg, params = setup
+    srv = api.serve(cfg, params, max_slots=2, max_seq=256,
+                    cache_mode="paged", prefix_cache="on",
+                    q_chunk=32, kv_chunk=32)
+    h = srv.submit(api.Request(np.arange(1, 10, dtype=np.int32),
+                               max_new_tokens=3))
+    h.result()
+    st = srv.stats()
+    assert st["prefix"]["mode"] == "on"
+    assert {"hit_rate", "reused_tokens", "cow_breaks",
+            "resumes"} <= set(st["prefix"])
+    assert "refs_total" in st["pool"] and "pages_shared" in st["pool"]
+
+
+def test_paged_submit_rejection_names_both_knobs(setup):
+    """Satellite 6: the oversized-request error must point at BOTH the
+    api.serve kwarg and the CLI flag."""
+    cfg, params = setup
+    page_b, _ = _pool_page_bytes(cfg)
+    srv = _serve(cfg, params, "off", pool_bytes=3 * page_b)
+    with pytest.raises(ValueError) as ei:
+        srv.submit(Request(prompt=np.zeros(64, np.int32), max_new_tokens=32))
+    assert "pool_hbm_bytes=" in str(ei.value)
+    assert "--pool-bytes" in str(ei.value)
