@@ -25,6 +25,7 @@ SUITES = [
     ("decode_path", "decode-path latency breakdown"),
     ("pool_pressure", "paged-pool capacity vs dense reservation (§10)"),
     ("prefix_reuse", "prefix-cache prefill savings, on vs noshare (§11)"),
+    ("shard_scaling", "mesh capacity at equal per-device budget (§12)"),
 ]
 
 

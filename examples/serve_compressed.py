@@ -84,6 +84,13 @@ def main():
           f"high-water {pl['high_water_pages']} pages "
           f"({pl['high_water_pages'] * pl['bytes_per_page']:,}B live peak)  "
           f"preemptions={st['preemptions']}")
+    if "shards" in st:
+        # multi-device serving (DESIGN.md §12) reports per-shard pressure;
+        # on a single device this is one shard covering the whole pool.
+        sh = st["shards"]
+        per = " ".join(f"s{i}:{p['pages_live']}L/{p['pages_free']}F"
+                       for i, p in enumerate(sh["per_shard"]))
+        print(f"  shards: data={sh['n_data']} model={sh['n_model']} {per}")
 
 
 if __name__ == "__main__":

@@ -52,6 +52,7 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
           cache_mode: str | None = None,
           pool_hbm_bytes: int | None = None,
           prefix_cache: str = "off",
+          mesh=None,
           q_chunk: int = 512, kv_chunk: int = 512) -> Server:
     """Launch a continuous-batching server over ``cfg``'s cache policy.
 
@@ -75,6 +76,12 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
     cached pages, and ``server.stats()["prefix"]`` reports hit-rate /
     reuse / copy-on-write counters ("noshare" runs the same chunked
     admission path without sharing — the accounting baseline).
+    ``mesh`` (DESIGN.md §12) serves across devices: a jax Mesh with
+    ("data", "model") axes — ``repro.launch.mesh.make_serve_mesh("dp,tp")``
+    builds one — shards decode slots, page tables, and the paged arena's
+    page axis over "data" and KV heads over "model", with parameters
+    replicated so greedy outputs stay bit-identical to the single-device
+    server; ``server.stats()["shards"]`` reports per-shard page pressure.
     """
     return Server(cfg, params,
                   ServerConfig(max_slots=max_slots, max_seq=max_seq,
@@ -82,7 +89,8 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
                                attn_backend=attn_backend,
                                cache_mode=cache_mode,
                                pool_hbm_bytes=pool_hbm_bytes,
-                               prefix_cache=prefix_cache),
+                               prefix_cache=prefix_cache,
+                               mesh=mesh),
                   q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 

@@ -207,6 +207,16 @@ class LayerKVCache:
         return cls(*leaves, spec=spec)
 
     # -- helpers ----------------------------------------------------------------
+    def with_spec(self, spec: "CacheSpec") -> "LayerKVCache":
+        """Same leaves under a different static spec.
+
+        The sharded serving path (``repro.distributed.serve_shard``) uses
+        this to rewrite ``attn_backend``/``pool_pages`` on views of a cache
+        — e.g. each mesh shard attends its local page slice under a spec
+        whose ``pool_pages`` is the per-shard arena extent.
+        """
+        return dataclasses.replace(self, spec=spec)
+
     @property
     def head_dim(self) -> int:
         return self.k_buf.shape[-1]
@@ -488,6 +498,13 @@ def _store_scan(cache: LayerKVCache, qg: Array, scale: float,
         # flushed blocks are whole: per-(row, block) all-or-nothing masks
         idx = start + jnp.arange(span)  # [C]
         ok = (idx[None, :] >= n0) & (idx[None, :] < nb_valid[:, None])  # [B,C]
+        if spec.paged:
+            # Unassigned table entries (-1) gathered a clamped page above;
+            # mask them out regardless of nb_valid — the shard-local table
+            # semantics of DESIGN.md §12, where blocks hosted by another
+            # shard are marked -1 and must contribute nothing.
+            pg = jax.lax.dynamic_slice_in_dim(cache.page_tab, start, span, 1)
+            ok = ok & (pg >= 0)
         okx = ok[:, None, None, :, None]
         s = jnp.where(okx, s, kref.NEG_INIT)
         s2 = s.reshape(B, Hkv, G, span * T)

@@ -100,17 +100,31 @@ class PagedBlockPool:
     ``tests/test_prefix.py``): a page is never handed out twice while any
     reference is outstanding, never released below zero, and never retained
     or released without having been allocated.
+
+    ``offset`` re-bases the page-id range to ``[offset, offset + n_pages)``
+    — the sharded-serving hook (DESIGN.md §12): each data shard's pool hands
+    out ids from its own slice of the global arena's page axis, so page ids
+    stay globally unique across shards and a table entry identifies its
+    owning shard by integer division alone.
     """
 
-    def __init__(self, n_pages: int, page_nbytes_per_layer):
+    def __init__(self, n_pages: int, page_nbytes_per_layer, offset: int = 0):
         if n_pages < 1:
             raise ValueError(f"pool needs >= 1 page, got {n_pages}")
+        if offset < 0:
+            raise ValueError(f"page-id offset must be >= 0, got {offset}")
         self.n_pages = int(n_pages)
+        self.offset = int(offset)
         self.page_nbytes_per_layer = tuple(int(b) for b in page_nbytes_per_layer)
-        self._free: list[int] = list(range(self.n_pages - 1, -1, -1))
+        self._free: list[int] = list(
+            range(self.offset + self.n_pages - 1, self.offset - 1, -1))
         self._live: set[int] = set()
         self._ref: dict[int, int] = {}  # page -> outstanding references
         self.high_water = 0
+
+    def owns(self, page) -> bool:
+        """Whether ``page`` falls in this pool's id range (live or not)."""
+        return self.offset <= int(page) < self.offset + self.n_pages
 
     # -- core ----------------------------------------------------------------
     @property

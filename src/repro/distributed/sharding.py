@@ -215,9 +215,17 @@ def set_ambient_mesh(mesh) -> None:
 
 def constrain(x, *entries):
     """with_sharding_constraint against the ambient mesh; no-op without one.
-    Entry "__data__" expands to the mesh's data axes tuple."""
+    Entry "__data__" expands to the mesh's data axes tuple.
+
+    A 1-device mesh (``make_host_mesh`` on a single-device host, or an
+    explicit ``--mesh 1,1``) is also a no-op: every constraint it could
+    express is full replication, and emitting them would still leave
+    sharding-constraint ops in the jaxpr of single-device runs — the
+    ambient mesh must leave those runs byte-for-byte untouched."""
     mesh = _AMBIENT["mesh"]
     if mesh is None or isinstance(mesh, jax.sharding.AbstractMesh):
+        return x
+    if int(np.prod([_mesh_size(mesh, a) for a in mesh.axis_names])) <= 1:
         return x
     da = data_axes(mesh)
     resolved = []

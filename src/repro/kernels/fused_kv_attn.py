@@ -68,11 +68,15 @@ def _kernel(
     nb_total: int,
     paged: bool = False,
 ):
+    pt_ref = None
     if paged:
-        # The page table rides as a third scalar-prefetch operand; only the
-        # BlockSpec index maps consume it (they resolve logical block n to
-        # its arena page before the tile streams HBM→VMEM), so the body just
-        # skips past the ref.
+        # The page table rides as a third scalar-prefetch operand.  The
+        # BlockSpec index maps consume it to resolve logical block n to its
+        # arena page before the tile streams HBM→VMEM; the body reads it
+        # once more for the validity guard below (shard-local tables mark
+        # blocks this arena does not host with -1 — DESIGN.md §12 — and
+        # those steps must contribute nothing, not decode a clamped page).
+        pt_ref = refs[0]
         refs = refs[1:]
     # Per-layer aux operands (block-invariant, e.g. huffman's decode LUTs)
     # sit between the buffers and the output; their VMEM-resident values
@@ -102,7 +106,14 @@ def _kernel(
 
     # Store blocks: each batch row of a continuous batch has its own number
     # of live blocks; steps past nb_valid[b] (and the final buffer step) skip.
-    @pl.when(n < nb_ref[b])
+    # Paged shards additionally skip blocks whose table entry is unassigned
+    # (-1): their index map clamped to page 0, which holds some other row's
+    # data, so the step must not touch the running softmax.
+    live = n < nb_ref[b]
+    if paged:
+        live = live & (pt_ref[b, jnp.minimum(n, nb_total - 1)] >= 0)
+
+    @pl.when(live)
     def _update():
         aux = tuple(r[...] for r in aux_refs)
         # --- decompress K in situ (VMEM), layout-owned decode ---
@@ -173,8 +184,10 @@ def fused_cache_attention_pallas(
     BlockSpec index map resolves logical block ``n`` of row ``b`` to
     ``page_tab[b, n]`` before the tile streams HBM→VMEM — the kernel body
     (decode, flash softmax) is untouched by paging.  Unassigned entries
-    (-1) clamp to page 0; those grid steps are already skipped by the
-    per-row ``nb_valid`` guard.
+    (-1) clamp to page 0 in the index map and their grid steps skip via
+    the body's validity guard — which also covers shard-local tables
+    (DESIGN.md §12) where blocks below ``nb_valid`` may be ``-1`` because
+    another shard hosts them.
     """
     B, Hq, D = q.shape
     paged = page_tab is not None

@@ -54,13 +54,19 @@ def fused_cache_attention_ref(
     With ``page_tab`` the stores are a shared paged arena (DESIGN.md §10):
     each row's tiles are gathered through its page-table entries first —
     the same indirection the kernel performs in its index maps — and
-    unassigned slots clamp to page 0 under the ``nb_valid`` mask.
+    unassigned slots clamp to page 0 under the ``nb_valid`` mask.  Slots
+    whose table entry is unassigned (< 0) are additionally masked
+    regardless of ``nb_valid`` — the shard-local table semantics of
+    DESIGN.md §12, where a shard sees ``-1`` for any block it does not
+    host and must contribute nothing for it.
     Returns the normalized output [B, Hq, D] f32 (buffer tail included).
     """
     B, Hq, D = q.shape
+    page_ok = None
     if page_tab is not None:
         P = k_store.shape[2]
         idx = jnp.clip(page_tab, 0, P - 1)  # [B, NB]
+        page_ok = page_tab >= 0            # [B, NB]
         gather = lambda a: jnp.moveaxis(jnp.take(a[0], idx, axis=1), 1, 0)
         k_store, v_store = gather(k_store), gather(v_store)
         if tile.has_scales:
@@ -87,7 +93,10 @@ def fused_cache_attention_ref(
     vd = dec3(tile.decode_v, v_store, v_min, v_step)
     qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
     s = jnp.einsum("bhgd,bhntd->bhgnt", qg, kd) * scale
-    ok = (jnp.arange(NB)[None, :] < nbv[:, None])[:, None, None, :, None]
+    ok_b = jnp.arange(NB)[None, :] < nbv[:, None]  # [B, NB]
+    if page_ok is not None:
+        ok_b = ok_b & page_ok
+    ok = ok_b[:, None, None, :, None]
     s = jnp.where(ok, s, NEG_INIT)
     s2 = s.reshape(B, Hkv, G, NB * T)
     m = jnp.max(s2, axis=-1)

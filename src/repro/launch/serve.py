@@ -21,6 +21,7 @@ import jax
 import numpy as np
 
 from repro import api
+from repro.launch.mesh import make_serve_mesh
 from repro.models import model as M
 from repro.models import registry
 
@@ -58,6 +59,12 @@ def main():
                     help="max spans unrolled before the scan falls back to "
                          "lax.scan (mirrors REPRO_BLOCKWISE_UNROLL_MAX; "
                          "default: model config)")
+    ap.add_argument("--mesh", default=None,
+                    help="dp,tp serving mesh (DESIGN.md §12), e.g. 2,2 — "
+                         "shards slots and the paged arena over dp and KV "
+                         "heads over tp; on CPU export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                         "first")
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config(args.arch)
@@ -67,11 +74,13 @@ def main():
     if args.unroll_max is not None:
         cfg = dataclasses.replace(cfg, cache_unroll_max=args.unroll_max)
     params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+    mesh = make_serve_mesh(args.mesh) if args.mesh else None
     server = api.serve(cfg, params, max_slots=args.max_slots,
                        max_seq=args.max_seq, attn_backend=args.backend,
                        cache_mode=args.cache_mode,
                        pool_hbm_bytes=args.pool_bytes,
-                       prefix_cache=args.prefix_cache)
+                       prefix_cache=args.prefix_cache,
+                       mesh=mesh)
     rng = np.random.default_rng(0)
     # With the prefix cache enabled, requests share a system-prompt prefix
     # (half of --prompt-len) so the printed hit-rate exercises real reuse.
@@ -106,6 +115,13 @@ def main():
               f"(high water {pl['high_water_pages']}, "
               f"{pl['bytes_total']:,}B total) "
               f"preemptions={st['preemptions']}")
+    if "shards" in st:
+        sh = st["shards"]
+        per = " ".join(
+            f"s{i}:{p['pages_live']}L/{p['pages_free']}F"
+            f"(hw {p['high_water_pages']}, pre {p['preemptions']})"
+            for i, p in enumerate(sh["per_shard"]))
+        print(f"  shards: data={sh['n_data']} model={sh['n_model']} {per}")
     if "prefix" in st:
         px, pl = st["prefix"], st["pool"]
         print(f"  prefix[{px['mode']}]: hit_rate={px['hit_rate']:.2f} "

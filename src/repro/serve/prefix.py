@@ -154,3 +154,14 @@ class PrefixIndex:
             "inserted_blocks": self.inserted_blocks,
             "evicted_blocks": self.evicted_blocks,
         }
+
+    @staticmethod
+    def merge_stats(indexes) -> dict:
+        """Aggregate ``stats()`` across several indexes — the sharded server
+        keeps one index per data shard (a prefix is only reusable by rows
+        whose pages live on the same shard; DESIGN.md §12) but reports one
+        combined prefix section."""
+        per = [ix.stats() for ix in indexes]
+        keys = per[0] if per else {"blocks": 0, "inserted_blocks": 0,
+                                   "evicted_blocks": 0}
+        return {k: sum(p[k] for p in per) for k in keys}

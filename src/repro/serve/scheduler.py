@@ -119,6 +119,14 @@ class ServerConfig:
     #               construction (benchmarks/prefix_reuse.py compares the
     #               two for the prefill-FLOPs-saved gate).
     prefix_cache: str = "off"
+    # Multi-device serving (DESIGN.md §12): a jax Mesh with ("data",
+    # "model") axes — build it with repro.launch.mesh.make_serve_mesh.
+    # "data" shards decode slots / page tables / the paged arena's page
+    # axis (each data shard runs its own page pool over its slice);
+    # "model" shards KV heads inside attention.  Parameters stay
+    # replicated, so greedy outputs are bit-identical to the unsharded
+    # server.  None (or a 1-device mesh) serves single-device.
+    mesh: object | None = None
 
 
 class Handle:
@@ -216,6 +224,32 @@ class Server:
         self._row_seq = [0] * B                         # admission order per row
         self.preemptions = 0
 
+        # Multi-device serving (DESIGN.md §12): normalize a trivial mesh to
+        # None so single-device runs trace the exact unsharded graphs, then
+        # pin the LIVE decode state's spec to the "sharded" attention
+        # backend — a shard_map over (data, model) around the inner backend.
+        mesh = scfg.mesh
+        self._n_data = self._n_model = 1
+        if mesh is not None:
+            from repro.distributed import serve_shard
+            n_d, n_m = serve_shard.mesh_counts(mesh)
+            if n_d * n_m <= 1:
+                mesh = None
+            else:
+                self._n_data, self._n_model = serve_shard.validate_serve_mesh(
+                    mesh, cfg, B)
+        self.mesh = mesh
+        # The backend the shard_map wraps per shard (what an unsharded
+        # server would have dispatched); resolved at trace time so the
+        # REPRO_ATTN_BACKEND matrix steers both paths identically.
+        self._inner_backend = cfg.attn_backend
+        cfg_live = (dataclasses.replace(cfg, attn_backend="sharded")
+                    if mesh is not None else cfg)
+        self._slots_per_shard = B // self._n_data
+        self._preempt_by_shard = [0] * self._n_data
+        if mesh is not None:
+            serve_shard.set_serve_mesh(mesh, self._inner_backend)
+
         if self.paged:
             # Size the shared arenas from the byte budget: one page = one
             # compression block across all layers (uniform block_size means
@@ -235,19 +269,38 @@ class Server:
             if budget is None:
                 budget = B * nb * sum(per_layer)  # dense-equivalent footprint
             n_pages = int(budget // max(sum(per_layer), 1))
+            # Sharded arena: the page axis splits evenly over data shards
+            # (each shard's pool owns a contiguous id slice), so round the
+            # count down to a multiple of the shard count.
+            n_pages -= n_pages % self._n_data
             if n_pages < 1:
                 raise ValueError(
-                    f"pool_hbm_bytes={budget} holds no page "
-                    f"(one page across layers is {sum(per_layer)} bytes)")
-            self.pool = blockpool.PagedBlockPool(n_pages, per_layer)
+                    f"pool_hbm_bytes={budget} holds no page per data shard "
+                    f"(one page across layers is {sum(per_layer)} bytes, "
+                    f"{self._n_data} shard(s))")
+            if self._n_data > 1:
+                self.pool = serve_shard.ShardedPagedPool(
+                    n_pages, per_layer, self._n_data)
+            else:
+                self.pool = blockpool.PagedBlockPool(n_pages, per_layer)
             # Host mirror of the device page tables (one logical table
             # shared by every layer): rows index slots, entries are pages.
             self._pt_host = np.full((B, nb), -1, np.int64)
-            self.state = M.init_decode_state(cfg, B, scfg.max_seq,
+            self.state = M.init_decode_state(cfg_live, B, scfg.max_seq,
                                              pool_pages=n_pages)
         else:
             self.pool = None
-            self.state = M.init_decode_state(cfg, B, scfg.max_seq)
+            self.state = M.init_decode_state(cfg_live, B, scfg.max_seq)
+
+        # Place the live state against its canonical shardings up front and
+        # re-constrain every state-producing closure's output to them below:
+        # stable placement across steps (no resharding thrash), and donation
+        # stays buffer-compatible.
+        if mesh is not None:
+            self._shardings = serve_shard.decode_state_shardings(self.state, mesh)
+            self.state = jax.device_put(self.state, self._shardings)
+        else:
+            self._shardings = None
 
         if scfg.prefix_cache not in ("off", "on", "noshare"):
             raise ValueError(
@@ -266,7 +319,12 @@ class Server:
                     f"prefill has no {cfg.family!r} step)")
             if self._share:
                 from repro.serve.prefix import PrefixIndex
-                self.index = PrefixIndex(self._spec0.block_size)
+                # One index per data shard: a prefix is only reusable by
+                # rows whose pages live on the same shard (a page table can
+                # only point at its own shard's arena slice).
+                self._indexes = [PrefixIndex(self._spec0.block_size)
+                                 for _ in range(self._n_data)]
+                self.index = self._indexes[0]
             self._pfx = {
                 "lookups": 0, "hits": 0, "hit_blocks": 0,
                 "reused_tokens": 0, "prefill_tokens": 0,
@@ -286,20 +344,49 @@ class Server:
                                    q_chunk=q_chunk, kv_chunk=kv_chunk)
             return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), st
 
+        # Sharded serving: every closure that produces the NEXT live state
+        # pins its output to the canonical shardings (``_c``) so placement
+        # never drifts between steps; without a mesh the closures are the
+        # exact unsharded traces.
+        shardings = self._shardings
+        if mesh is not None:
+            def _c(st):
+                return serve_shard.constrain_state(st, shardings)
+        else:
+            def _c(st):
+                return st
+
         def _decode(p, t, pos, st):
             logits, st = M.decode_step(p, cfg, t, pos, st)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), st
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), _c(st)
 
         self._prefill = jax.jit(_prefill)
         # The previous state dies on reassignment every step/admission, so
         # its buffers are donated instead of copied.
         self._decode = jax.jit(_decode, donate_argnums=(3,))
         if self.paged:
-            self._insert = jax.jit(M.insert_decode_row_paged, donate_argnums=(0,))
-            self._assign = jax.jit(M.assign_cache_pages, donate_argnums=(0,))
-            self._clear = jax.jit(M.clear_cache_row, donate_argnums=(0,))
+            self._insert = jax.jit(
+                lambda dst, src, row, pages:
+                    _c(M.insert_decode_row_paged(dst, src, row, pages)),
+                donate_argnums=(0,))
+            self._assign = jax.jit(
+                lambda st, r, s, p: _c(M.assign_cache_pages(st, r, s, p)),
+                donate_argnums=(0,))
+            self._clear = jax.jit(
+                lambda st, r: _c(M.clear_cache_row(st, r)),
+                donate_argnums=(0,))
         else:
-            self._insert = jax.jit(M.insert_decode_row, donate_argnums=(0,))
+            # Dense insert tree_maps dst against the solo prefill state, so
+            # their static specs must agree: rewrite the solo src to the live
+            # spec's backend pin first (pure aux-data relabeling — under a
+            # mesh dst is pinned to "sharded" while prefill built src under
+            # the plain cfg).
+            def _insert_dense(dst, src, row):
+                if mesh is not None:
+                    src = serve_shard.override_backend(src, "sharded")
+                return _c(M.insert_decode_row(dst, src, row))
+
+            self._insert = jax.jit(_insert_dense, donate_argnums=(0,))
         if self.prefix_mode:
             # Block-chunked admission (DESIGN.md §11): the solo state chains
             # through the chunk loop, so each step donates its predecessor.
@@ -311,7 +398,20 @@ class Server:
                 return jnp.argmax(logits, axis=-1).astype(jnp.int32), st
 
             self._chunk = jax.jit(_chunk, donate_argnums=(3,))
-            self._gather = jax.jit(M.gather_prefix_state)
+            if mesh is not None:
+                # gather_prefix_state keeps the live spec's "sharded"
+                # backend pin on the batch-1 dense seed; rewrite it to the
+                # inner backend so the solo chunk loop matches _fresh's
+                # states (specs are static aux — same jit cache, same math).
+                inner = self._inner_backend
+
+                def _gather(st, seed, j):
+                    return serve_shard.override_backend(
+                        M.gather_prefix_state(st, seed, j), inner)
+
+                self._gather = jax.jit(_gather)
+            else:
+                self._gather = jax.jit(M.gather_prefix_state)
             self._fresh = jax.jit(
                 lambda: M.init_decode_state(cfg, 1, scfg.max_seq))
 
@@ -326,12 +426,17 @@ class Server:
         if self.paged:
             # A request must be able to run SOLO: the most pages it can ever
             # hold (every block its prompt + budget can flush, ring-capped)
-            # has to fit the whole pool, or no amount of preemption admits it.
+            # has to fit its shard's slice of the pool — a row only ever
+            # allocates from its own data shard — or no amount of preemption
+            # admits it.  Unsharded, the shard IS the whole pool.
             need = self._lifetime_pages(request)
-            if need > self.pool.n_pages:
+            cap = (self.pool.n_pages if self._n_data == 1
+                   else self.pool.per_shard)
+            if need > cap:
                 raise ValueError(
-                    f"request needs up to {need} block pages but the pool "
-                    f"holds {self.pool.n_pages}; raise the pool byte budget "
+                    f"request needs up to {need} block pages but "
+                    f"{'each data shard' if self._n_data > 1 else 'the pool'} "
+                    f"holds {cap}; raise the pool byte budget "
                     "(pool_hbm_bytes= via api.serve / --pool-bytes on the "
                     "launch.serve CLI)")
         h = Handle(self, request)
@@ -359,6 +464,33 @@ class Server:
     @property
     def pending(self) -> int:
         return len(self._queue)
+
+    # -- shard-local page accounting (DESIGN.md §12) --------------------------
+    # jax shards an axis into contiguous per-device chunks, so decode slot
+    # ``row`` lives on data shard ``row // (max_slots / n_data)`` — and all
+    # of a row's pages must come from that shard's pool slice, keeping every
+    # page a live row references device-local.
+    def _row_shard(self, row: int) -> int:
+        return row // self._slots_per_shard if self._n_data > 1 else 0
+
+    def _shard_pool(self, row: int):
+        """The row's own allocator: the flat pool unsharded, else the
+        offset pool of the row's data shard."""
+        if self._n_data == 1:
+            return self.pool
+        return self.pool.shards[self._row_shard(row)]
+
+    def _shard_free(self, shard: int) -> int:
+        if self._n_data == 1:
+            return self.pool.free_pages
+        return self.pool.shards[shard].free_pages
+
+    def _alloc(self, n: int, row: int) -> list[int]:
+        return self._shard_pool(row).alloc(n)
+
+    def _index_for(self, row: int):
+        """The prefix index of the row's data shard (sharing mode only)."""
+        return self._indexes[self._row_shard(row)]
 
     # -- slot lifecycle -------------------------------------------------------
     def _forced(self, handle: Handle) -> np.ndarray:
@@ -396,7 +528,7 @@ class Server:
             nb = self._spec0.n_blocks
             n_blk = self._prefill_pages(req)
             pages = np.full(nb, -1, np.int64)
-            pages[:n_blk] = self.pool.alloc(n_blk)  # _can_admit checked free
+            pages[:n_blk] = self._alloc(n_blk, row)  # _can_admit checked free
             self._pt_host[row] = pages
             self.state = self._insert(self.state, solo, row,
                                       jnp.asarray(pages, jnp.int32))
@@ -477,7 +609,7 @@ class Server:
         pages = np.full(nb, -1, np.int64)
         pages[:j] = hit
         if occupied > j:
-            pages[j:occupied] = self.pool.alloc(occupied - j)
+            pages[j:occupied] = self._alloc(occupied - j, row)
         self._pt_host[row] = pages
         self.state = self._insert(self.state, state, row,
                                   jnp.asarray(pages, jnp.int32))
@@ -485,7 +617,8 @@ class Server:
             # Index every full forced block (hit blocks re-stamp, divergent
             # ones create retaining nodes).  Skipped when the solo chunking
             # wrapped the ring (n_full > nb): slots no longer map block i.
-            self.index.insert(forced, pages[:n_full].tolist(), self.pool)
+            self._index_for(row).insert(forced, pages[:n_full].tolist(),
+                                        self.pool)
         self._slots[row] = handle
         self._cur[row] = first
         self._pos[row] = n
@@ -493,15 +626,17 @@ class Server:
         self._row_seq[row] = self._seq
         return True
 
-    def _can_admit(self, handle: Handle) -> bool:
+    def _can_admit(self, handle: Handle, row: int) -> bool:
         """Memory-pressure admission (paged): the prompt's blocks plus one
-        page of decode headroom must be free — NOT the request's whole
-        lifetime, which is what lets slots oversubscribe; the preemption
-        path covers over-commitment later.  Prefix mode discounts the hit
+        page of decode headroom must be free ON THE ROW'S DATA SHARD — NOT
+        the request's whole lifetime, which is what lets slots
+        oversubscribe; the preemption path covers over-commitment later.
+        Prefix mode looks up the row's shard's index, discounts the hit
         blocks (they are spliced, not prefilled) and evicts cold index
         blocks before parking the queue head."""
         if not self.paged:
             return True
+        shard_pool = self._shard_pool(row)
         if self.prefix_mode:
             spec = self._spec0
             T, nb = spec.block_size, spec.n_blocks
@@ -511,18 +646,18 @@ class Server:
             if self._share and n_full <= nb:
                 # Cap below the forced length so at least one token is left
                 # to process — the last token's logits drive the next one.
-                hit = self.index.lookup(
+                hit = self._index_for(row).lookup(
                     forced, min((len(forced) - 1) // T, nb))
             handle._hit_pages = hit  # _admit_prefix splices this exact hit
-            need = min(min(n_full, nb) - len(hit) + 1, self.pool.n_pages)
-            if self.pool.free_pages < need and self._share:
+            need = min(min(n_full, nb) - len(hit) + 1, shard_pool.n_pages)
+            if shard_pool.free_pages < need and self._share:
                 # Reclaim cold index blocks before giving up; the hit path
                 # was just MRU-stamped AND is protected explicitly (its
                 # pages are not yet retained by the row).
-                self.index.evict(self.pool, need, protect=hit)
-            return self.pool.free_pages >= need
-        need = min(self._prefill_pages(handle.request) + 1, self.pool.n_pages)
-        return self.pool.free_pages >= need
+                self._index_for(row).evict(shard_pool, need, protect=hit)
+            return shard_pool.free_pages >= need
+        need = min(self._prefill_pages(handle.request) + 1, shard_pool.n_pages)
+        return shard_pool.free_pages >= need
 
     def _pop_next(self) -> Handle:
         if self.scfg.policy == "ljf":
@@ -575,15 +710,17 @@ class Server:
                 # the ring has not wrapped (slot i still holds block i).
                 flushed = int(self._pos[row]) // self._spec0.block_size
                 if 0 < flushed <= nb:
-                    self.index.insert(self._forced(handle),
-                                      self._pt_host[row][:flushed].tolist(),
-                                      self.pool)
+                    self._index_for(row).insert(
+                        self._forced(handle),
+                        self._pt_host[row][:flushed].tolist(),
+                        self.pool)
             self._release_row(row)
         else:
             self._release_row(row)
             handle._toks.clear()
         self._queue.appendleft(handle)
         self.preemptions += 1
+        self._preempt_by_shard[self._row_shard(row)] += 1
 
     def _ensure_pages(self) -> None:
         """Assign a physical page to every live row whose buffer flushes on
@@ -608,12 +745,13 @@ class Server:
             # the flush overwrites the whole block, so "copy" degenerates
             # to re-pointing the slot at a private page and dropping our
             # reference on the shared one.
+            shard = self._row_shard(row)
             while True:
                 existing = int(self._pt_host[row, slot])
                 if existing >= 0 and self.pool.refcount(existing) == 1:
                     break  # SWA ring reuse: overwrite our exclusive page
-                if self.pool.free_pages:
-                    page = self.pool.alloc(1)[0]
+                if self._shard_free(shard):
+                    page = self._alloc(1, row)[0]
                     if existing >= 0:  # shared: only exists in prefix mode
                         self.pool.release([existing])
                         self._pfx["cow_breaks"] += 1
@@ -628,16 +766,20 @@ class Server:
                 # shared page makes it exclusive, and the re-check above
                 # then reuses it in place — without that re-check a solo
                 # row whose pages the index shares would preempt itself.
-                # Then preempt the youngest row that actually HOLDS pages —
-                # evicting a zero-page row would destroy its progress
-                # without freeing a byte.  Each round frees a page, evicts
-                # an index block, or shrinks the live rows, so the loop
-                # terminates.
-                if self._share and self.index.evict(self.pool, 1):
+                # Then preempt the youngest SAME-SHARD row that actually
+                # HOLDS pages (only same-shard pages relieve this row's
+                # pressure; a zero-page victim would destroy progress
+                # without freeing a byte).  Each round frees a page, evicts
+                # an index block, or shrinks the shard's live rows, so the
+                # loop terminates — submit() guaranteed the row fits its
+                # shard solo.
+                if self._share and self._index_for(row).evict(
+                        self._shard_pool(row), 1):
                     continue
                 victim = next(
                     (r for r in reversed(self._live_rows_by_age())
-                     if (self._pt_host[r] >= 0).any()), None)
+                     if self._row_shard(r) == shard
+                     and (self._pt_host[r] >= 0).any()), None)
                 if victim is None:
                     raise RuntimeError(
                         "pool exhausted with no reclaimable pages")
@@ -667,15 +809,28 @@ class Server:
         """Admit whatever fits (slot- AND, in paged mode, memory-pressure-
         bounded), then run one batched decode step over the live slots.
         Returns True while work remains (active or queued)."""
+        if self.mesh is not None:
+            # Re-assert trace-time context before any closure compiles a
+            # new shape (another Server may have rebound it since __init__).
+            from repro.distributed import serve_shard
+            serve_shard.set_serve_mesh(self.mesh, self._inner_backend)
         free = [i for i, s in enumerate(self._slots) if s is None]
         while free and self._queue:
             handle = self._pop_next()
-            if not self._can_admit(handle):
+            # Admit onto the free slot whose data shard has the most free
+            # pages (slots pin rows to shards, pages are shard-local);
+            # stable tie-break keeps this exactly free[0] when unsharded.
+            if self.paged and self._n_data > 1:
+                row = min(free, key=lambda r:
+                          (-self._shard_free(self._row_shard(r)), r))
+            else:
+                row = free[0]
+            if not self._can_admit(handle, row):
                 # Pool pressure: park it until retirements free pages.
                 self._queue.appendleft(handle)
                 break
-            if self._admit(handle, free[0]):
-                free.pop(0)
+            if self._admit(handle, row):
+                free.remove(row)
         if self.paged:
             self._ensure_pages()
         rows = [i for i, s in enumerate(self._slots) if s is not None]
@@ -717,12 +872,31 @@ class Server:
         }
         if self.paged:
             s["pool"] = self.pool.stats()
+        if self.paged or self.mesh is not None:
+            # Per-shard serving section (DESIGN.md §12).  Unsharded paged
+            # servers report their single "shard" too, so dashboards read
+            # one schema either way.
+            per = ([p.stats() for p in self.pool.shards]
+                   if self.paged and self._n_data > 1
+                   else [self.pool.stats()] if self.paged else [])
+            s["shards"] = {
+                "n_data": self._n_data,
+                "n_model": self._n_model,
+                "per_shard": [
+                    {"pages_live": p["pages_live"],
+                     "pages_free": p["pages_free"],
+                     "high_water_pages": p["high_water_pages"],
+                     "preemptions": self._preempt_by_shard[d]
+                     if d < len(self._preempt_by_shard) else 0}
+                    for d, p in enumerate(per)],
+            }
         if self.prefix_mode:
             p = dict(self._pfx)
             p["mode"] = self.scfg.prefix_cache
             p["hit_rate"] = (p["hits"] / p["lookups"]) if p["lookups"] else 0.0
             if self._share:
-                p["index"] = self.index.stats()
+                from repro.serve.prefix import PrefixIndex
+                p["index"] = PrefixIndex.merge_stats(self._indexes)
             s["prefix"] = p
         return s
 

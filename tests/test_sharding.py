@@ -94,3 +94,22 @@ def test_batch_sharding_divisibility():
     one = jax.ShapeDtypeStruct((1,), jnp.int32)
     assert shd.batch_sharding(mesh, big).spec == P(("data",), None)
     assert shd.batch_sharding(mesh, one).spec == P()
+
+
+def test_constrain_noop_under_one_device_mesh():
+    # A concrete 1-device mesh (e.g. --mesh 1,1 on a laptop) must leave
+    # single-device runs byte-for-byte untouched: constrain returns its
+    # argument unchanged — no sharding-constraint ops enter the jaxpr.
+    x = jnp.arange(8.0).reshape(2, 4)
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    try:
+        shd.set_ambient_mesh(mesh)
+        assert shd.constrain(x, "__data__", None) is x
+        assert shd.constrain(x, "model", None) is x
+        # abstract meshes (trace-time spec construction) are no-ops too
+        shd.set_ambient_mesh(amesh((2, 4), ("data", "model")))
+        assert shd.constrain(x, "__data__", None) is x
+    finally:
+        shd.set_ambient_mesh(None)
+    assert shd.constrain(x, "__data__", None) is x
