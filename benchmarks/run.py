@@ -21,7 +21,8 @@ SUITES = [
     ("fused_vs_multi", "paper Fig. 9: fused vs multi-kernel"),
     ("fused_vs_matvec", "paper Fig. 10/11: fused vs plain matvec"),
     ("roofline", "dry-run roofline table"),
-    ("serve_throughput", "continuous-batching serving throughput"),
+    ("serve_throughput", "continuous-batching serving throughput, chunked-prefill"
+     " p99 inter-token latency (mixed long-prompt leg)"),
     ("decode_path", "decode-path latency breakdown"),
     ("pool_pressure", "paged-pool capacity vs dense reservation (§10)"),
     ("prefix_reuse", "prefix-cache prefill savings, on vs noshare (§11)"),

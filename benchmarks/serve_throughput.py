@@ -10,9 +10,19 @@ through both serving paths per cache layout:
 
 Both paths run once for jit warmup and once measured, on the same compiled
 closures, so the comparison is steady-state scheduling efficiency rather
-than compile time.  Writes ``BENCH_serve.json`` with aggregate tok/s and
-live kv-cache bytes per layout — the serving numbers behind the paper's
-"throughput-critical inference systems" claim (§5).
+than compile time.  Writes ``BENCH_serve.json`` with aggregate tok/s,
+latency decomposition (queue wait / TTFT / inter-token p50+p99 — per-token
+timestamps from ``Result.token_times``), and live kv-cache bytes per
+layout — the serving numbers behind the paper's "throughput-critical
+inference systems" claim (§5).
+
+A second, mixed long-prompt/short-decode leg (DESIGN.md §13) replays the
+tail-latency scenario chunked admission exists for: one long prompt lands
+mid-stream over a pool of short decoders, once under ``prefill_mode=
+"chunked"`` and once under ``"solo"``.  ``--require-p99-win`` gates the
+result (CI): chunked admission must cut the short decoders' p99
+inter-token latency at least 2x vs solo at >= 0.9x the aggregate tok/s,
+with bit-identical greedy outputs.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
 """
@@ -51,6 +61,24 @@ def make_workload(rng, vocab: int, n_requests: int, base_prompt: int,
     return reqs
 
 
+def _latency_block(results) -> dict:
+    """Latency decomposition from per-token timestamps: queue wait split
+    out of the old conflated mean latency, TTFT and inter-token gaps as
+    p50/p99 (the serving tail the chunked-admission gate watches)."""
+    ttfts = [r.ttft_s for r in results]
+    gaps = np.concatenate([np.diff(r.token_times) for r in results
+                           if len(r.token_times) > 1] or [np.zeros(1)])
+    return {
+        "queue_wait_s": float(np.mean([r.queue_wait_s for r in results])),
+        "mean_latency_s": float(np.mean([r.prefill_s + r.gen_s
+                                         for r in results])),
+        "ttft_p50_s": float(np.percentile(ttfts, 50)),
+        "ttft_p99_s": float(np.percentile(ttfts, 99)),
+        "itl_p50_s": float(np.percentile(gaps, 50)),
+        "itl_p99_s": float(np.percentile(gaps, 99)),
+    }
+
+
 def run_server(server: Server, reqs: list[Request]) -> dict:
     handles = [server.submit(r) for r in reqs]
     t0 = time.monotonic()
@@ -59,8 +87,53 @@ def run_server(server: Server, reqs: list[Request]) -> dict:
     results = [h.result() for h in handles]
     toks = sum(len(r.tokens) for r in results)
     return {"wall_s": wall, "tokens": toks, "tok_s": toks / wall,
-            "mean_latency_s": float(np.mean([r.prefill_s + r.gen_s
-                                             for r in results]))}
+            **_latency_block(results)}
+
+
+def run_mixed(cfg, params, mode: str, shorts: list[Request],
+              long_req: Request, *, slots: int, max_seq: int,
+              chunk_tokens: int, pre_steps: int = 3,
+              repeats: int = 3) -> dict:
+    """One long prompt arriving mid-stream over a pool of short decoders,
+    under ``prefill_mode=mode`` on the paged pool (the fused
+    encode-to-page admission path).  The short decoders' inter-token gaps
+    are the measurement: solo admission freezes them for the long
+    prompt's whole prefill, chunked admission bounds every stall at
+    ``prefill_chunk_tokens``."""
+    server = Server(cfg, params,
+                    ServerConfig(max_slots=slots, max_seq=max_seq,
+                                 cache_mode="paged", prefill_mode=mode,
+                                 prefill_chunk_tokens=chunk_tokens),
+                    q_chunk=32, kv_chunk=32)
+
+    def once():
+        hs = [server.submit(r) for r in shorts]
+        t0 = time.monotonic()
+        for _ in range(pre_steps):   # the decoders are mid-stream...
+            server.step()
+        hl = server.submit(long_req)  # ...when the long prompt lands
+        server.run()
+        wall = time.monotonic() - t0
+        return hs, hl, wall
+
+    once()  # jit warmup on the same compiled closures
+    # median-of-repeats: the short decoders' p99 inter-token gap is a tail
+    # statistic, exactly what single-shot CPU walls scatter the most
+    runs = sorted((once() for _ in range(repeats)), key=lambda r: r[2])
+    hs, hl, wall = runs[len(runs) // 2]
+    short_res = [h.result() for h in hs]
+    long_res = hl.result()
+    toks = sum(len(r.tokens) for r in short_res) + len(long_res.tokens)
+    return {"wall_s": wall, "tokens": toks, "tok_s": toks / wall,
+            "long_ttft_s": long_res.ttft_s,
+            "long_queue_wait_s": long_res.queue_wait_s,
+            "stalled_decode_steps":
+                server.stats()["prefill"]["stalled_decode_steps"],
+            "coscheduled_tokens":
+                server.stats()["prefill"]["coscheduled_tokens"],
+            **{f"short_{k}": v for k, v in _latency_block(short_res).items()},
+            "outputs": [r.tokens.tolist()
+                        for r in short_res] + [long_res.tokens.tolist()]}
 
 
 def run_lockstep(engine: LockstepEngine, reqs: list[Request]) -> dict:
@@ -86,6 +159,13 @@ def main():
     ap.add_argument("--require-speedup", action="store_true",
                     help="exit non-zero unless the server beats the legacy "
                          "bucket engine on every layout (CI gate)")
+    ap.add_argument("--long-prompt", type=int, default=8192,
+                    help="long-prompt length for the mixed leg (8-32k "
+                         "nominal; --smoke shrinks it)")
+    ap.add_argument("--require-p99-win", action="store_true",
+                    help="exit non-zero unless chunked admission cuts the "
+                         "mixed leg's p99 inter-token latency >=2x vs solo "
+                         "at >=0.9x aggregate tok/s (CI gate)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     if args.smoke:
@@ -144,6 +224,41 @@ def main():
     agg = (sum(t for _, _, t in walls) / sum(s for s, _, _ in walls)) / \
           (sum(t for _, _, t in walls) / sum(l for _, l, _ in walls))
     bench["aggregate_speedup"] = agg
+
+    # -- mixed long-prompt/short-decode leg (chunked vs solo admission) -----
+    mix_cfg = dataclasses.replace(cfg0, cache_layout="packed")
+    T = M.cache_specs(mix_cfg, 1)[0].block_size
+    long_len = (min(args.long_prompt, 30 * T) if args.smoke
+                else args.long_prompt)
+    long_len -= long_len % T  # block-multiple keeps the chunk count exact
+    mix_seq = long_len + 4 * T + 16
+    rng2 = np.random.default_rng(1)
+    shorts = [Request(prompt=rng2.integers(0, mix_cfg.vocab_size,
+                                           8 + 2 * i).astype(np.int32),
+                      max_new_tokens=40) for i in range(args.slots - 1)]
+    long_req = Request(prompt=rng2.integers(0, mix_cfg.vocab_size,
+                                            long_len).astype(np.int32),
+                       max_new_tokens=8)
+    legs = {mode: run_mixed(mix_cfg, params, mode, shorts, long_req,
+                            slots=args.slots, max_seq=mix_seq,
+                            chunk_tokens=2 * T)
+            for mode in ("chunked", "solo")}
+    match = legs["chunked"].pop("outputs") == legs["solo"].pop("outputs")
+    p99_ratio = (legs["solo"]["short_itl_p99_s"]
+                 / max(legs["chunked"]["short_itl_p99_s"], 1e-9))
+    tok_ratio = legs["chunked"]["tok_s"] / legs["solo"]["tok_s"]
+    bench["mixed_long_prompt"] = {
+        "long_prompt_len": long_len, "chunk_tokens": 2 * T,
+        "short_requests": len(shorts), "bit_identical": match,
+        "p99_itl_improvement": p99_ratio, "tok_s_ratio": tok_ratio,
+        **{mode: leg for mode, leg in legs.items()},
+    }
+    print(f"[mixed   ] long={long_len} tok: p99 ITL "
+          f"{legs['solo']['short_itl_p99_s'] * 1e3:.1f}ms solo -> "
+          f"{legs['chunked']['short_itl_p99_s'] * 1e3:.1f}ms chunked "
+          f"({p99_ratio:.2f}x better) at {tok_ratio:.2f}x tok/s, "
+          f"bit_identical={match}")
+
     Path(args.out).write_text(json.dumps(bench, indent=2))
     print(f"aggregate speedup {agg:.2f}x; wrote {args.out}")
     if args.require_speedup and agg <= 1.0:
@@ -151,6 +266,12 @@ def main():
             f"server did not beat the legacy bucket engine in aggregate "
             f"({agg:.2f}x): " +
             str({k: round(v['speedup'], 2) for k, v in bench['layouts'].items()}))
+    if args.require_p99_win and not (
+            match and p99_ratio >= 2.0 and tok_ratio >= 0.9):
+        raise SystemExit(
+            "chunked admission failed the mixed-leg gate: "
+            f"p99 ITL improvement {p99_ratio:.2f}x (need >=2), tok/s ratio "
+            f"{tok_ratio:.2f} (need >=0.9), bit_identical={match}")
 
 
 if __name__ == "__main__":

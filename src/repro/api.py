@@ -53,6 +53,8 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
           pool_hbm_bytes: int | None = None,
           prefix_cache: str = "off",
           mesh=None,
+          prefill_mode: str = "chunked",
+          prefill_chunk_tokens: int | None = None,
           q_chunk: int = 512, kv_chunk: int = 512) -> Server:
     """Launch a continuous-batching server over ``cfg``'s cache policy.
 
@@ -82,6 +84,17 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
     page axis over "data" and KV heads over "model", with parameters
     replicated so greedy outputs stay bit-identical to the single-device
     server; ``server.stats()["shards"]`` reports per-shard page pressure.
+    ``prefill_mode`` (DESIGN.md §13) picks the admission style: "chunked"
+    (the default) splits every prompt into block-multiple chunks spliced
+    between decode steps — at most ``prefill_chunk_tokens`` prompt tokens
+    (default ``8 * block_size``; must be a positive multiple of the cache
+    block size) ride alongside the live decode batch per step, so a long
+    prompt no longer stalls in-flight streams, and in paged mode each
+    chunk's KV encodes straight into pooled pages (peak admission memory
+    O(chunk), not O(prompt)); "solo" restores the blocking full-length
+    prefill. Greedy outputs are bit-identical either way;
+    ``server.stats()["prefill"]`` reports chunks in flight and tokens
+    co-scheduled with decode.
     """
     return Server(cfg, params,
                   ServerConfig(max_slots=max_slots, max_seq=max_seq,
@@ -90,7 +103,9 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
                                cache_mode=cache_mode,
                                pool_hbm_bytes=pool_hbm_bytes,
                                prefix_cache=prefix_cache,
-                               mesh=mesh),
+                               mesh=mesh,
+                               prefill_mode=prefill_mode,
+                               prefill_chunk_tokens=prefill_chunk_tokens),
                   q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 

@@ -540,7 +540,10 @@ def _store_scan(cache: LayerKVCache, qg: Array, scale: float,
 
 
 # ---------------------------------------------------------------------------
-# Block-chunked prefill (prefix-cache admission path; DESIGN.md §11)
+# Block-chunked prefill (DESIGN.md §11/§13) — since chunked admission became
+# the scheduler default, this is the path EVERY served prompt takes: solo
+# admission drains all chunks at once, chunked admission splices them
+# between decode steps, and both reduce to the same per-block computation.
 # ---------------------------------------------------------------------------
 
 

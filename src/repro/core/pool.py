@@ -380,6 +380,75 @@ def splice_row(dst, src, row, pages: Array):
         page_tab=page_tab, spec=dst.spec)
 
 
+def chunk_view(cache, pages: Array, pos0):
+    """Batch-1 view of one row's chunked prefill, writing the live arena
+    in place (DESIGN.md §13).
+
+    ``cache`` is the live *paged* batched cache (possibly layer-stacked),
+    ``pages`` is i32 ``[NB]`` — the physical page of logical block ``i``
+    for the blocks this row's prefill has flushed or is about to flush
+    (``-1`` beyond) — and ``pos0`` is the block-aligned token position the
+    next chunk starts at.  The view SHARES the arena store arrays: a chunk
+    appended through it (``core.cache.append_chunk`` →
+    ``CacheLayout.write_blocks``) quantizes/packs straight into the pooled
+    pages, so the prompt's KV never exists uncompressed beyond one
+    ``block_size`` buffer.  Buffers start empty (chunks are block-aligned
+    by construction) and the page table is the single row ``pages`` — the
+    live per-row tables are untouched, so the row stays write-dropped for
+    the concurrently decoding batch until ``install_row``.
+    """
+    lead = _lead(cache)
+    T = cache.spec.block_size
+
+    def row0_zeros(a):  # fresh empty buffer shaped like one row
+        return jnp.zeros_like(jax.lax.slice_in_dim(a, 0, 1, axis=lead))
+
+    nf = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32) // T,
+                          (*cache.n_flushed.shape[:lead], 1))
+    pt = jnp.broadcast_to(pages, (*cache.n_flushed.shape[:lead], 1,
+                                  pages.shape[0]))
+    return dataclasses.replace(
+        cache, k_buf=row0_zeros(cache.k_buf), v_buf=row0_zeros(cache.v_buf),
+        n_flushed=nf, buf_len=jnp.zeros_like(nf), page_tab=pt)
+
+
+def adopt_stores(dst, src):
+    """Fold a ``chunk_view``'s updated arena stores back into the live
+    batched cache between chunks (buffers, lengths and page tables keep the
+    live batch's values — only the shared arena advanced)."""
+    return dataclasses.replace(
+        dst, **{f: getattr(src, f) for f in STORE_FIELDS})
+
+
+def install_row(dst, src, row, pages: Array):
+    """Land a finished chunked prefill in row ``row`` of the live cache.
+
+    ``src`` is the final ``chunk_view`` state: its stores ARE the live
+    arena after the last flush (adopted wholesale — no scatter, unlike
+    ``splice_row``'s dense-to-paged copy), its batch-1 buffers hold the
+    prompt's sub-block tail, and ``pages`` is the row's page table.  Row
+    fields splice at the batch axis; the page-table row flips from
+    write-drop (-1) to live in the same update, so the very next decode
+    step attends the prefilled blocks.
+    """
+    lead = _lead(dst)
+
+    def row_field(d, s):  # batch axis at `lead` for buffers and length vectors
+        return jax.lax.dynamic_update_slice_in_dim(d, s.astype(d.dtype), row, lead)
+
+    pt0 = jnp.moveaxis(dst.page_tab, lead, 0)  # [B, L?, NB]
+    ptv = jnp.broadcast_to(pages, pt0.shape[1:]) if lead else pages
+    page_tab = jnp.moveaxis(pt0.at[row].set(ptv), 0, lead)
+
+    return type(dst)(
+        **{f: getattr(src, f) for f in STORE_FIELDS},
+        k_buf=row_field(dst.k_buf, src.k_buf),
+        v_buf=row_field(dst.v_buf, src.v_buf),
+        n_flushed=row_field(dst.n_flushed, src.n_flushed),
+        buf_len=row_field(dst.buf_len, src.buf_len),
+        page_tab=page_tab, spec=dst.spec)
+
+
 def gather_pages(cache, pages: Array, n_flushed: Array):
     """Prefix-hit seed: materialize cached arena pages as a batch-1 *dense*
     cache positioned at a block boundary (DESIGN.md §11).

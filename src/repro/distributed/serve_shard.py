@@ -27,6 +27,14 @@ supplies the mesh + inner backend at trace time, and the backend dispatches
 no mesh is set or a shape does not divide (e.g. the batch-1 gathered solo
 states the prefix-cache path builds).
 
+Chunked admission (DESIGN.md §13) under a mesh uses the *dense-state*
+chunk path: each PREFILLING row chunks through a private replicated
+batch-1 state and splices into the sharded arena at the finish, because
+encode-to-page through a batch-1 view of the GSPMD-sharded arena would
+re-partition page-axis reductions and risk bit drift.  Page reservations
+still come from the row's own data shard up front, so chunk pages stay
+shard-affine exactly like decode-flushed ones.
+
 CPU testing recipe: export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* python
 starts, then build the mesh with ``repro.launch.mesh.make_serve_mesh``.

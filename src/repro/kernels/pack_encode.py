@@ -10,6 +10,12 @@ per-block widths make every output offset affine in the block index
 
 K blocks use BlockQuant units (min/max over the T tokens, per channel);
 V blocks use TokenQuant units (min/max over D, per token).
+
+Serving feeds this kernel from the chunked-admission loop (DESIGN.md §13):
+each full prefill chunk flushes exactly one block, and on the fused paged
+path the destination rows are pooled pages — the block compresses straight
+into the arena with no dense-prompt staging, which is what holds peak
+admission memory at O(chunk) instead of O(prompt).
 """
 
 from __future__ import annotations

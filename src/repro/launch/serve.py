@@ -59,6 +59,16 @@ def main():
                     help="max spans unrolled before the scan falls back to "
                          "lax.scan (mirrors REPRO_BLOCKWISE_UNROLL_MAX; "
                          "default: model config)")
+    ap.add_argument("--prefill-mode", default="chunked",
+                    choices=["chunked", "solo"],
+                    help="chunked (default): splice admission prefills "
+                         "between decode steps in --prefill-chunk budgets "
+                         "(DESIGN.md §13); solo: drain the whole prompt at "
+                         "admission, stalling live decoders")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="per-step chunked-prefill token budget; must be a "
+                         "positive multiple of the cache block_size "
+                         "(default: 8 blocks)")
     ap.add_argument("--mesh", default=None,
                     help="dp,tp serving mesh (DESIGN.md §12), e.g. 2,2 — "
                          "shards slots and the paged arena over dp and KV "
@@ -80,6 +90,8 @@ def main():
                        cache_mode=args.cache_mode,
                        pool_hbm_bytes=args.pool_bytes,
                        prefix_cache=args.prefix_cache,
+                       prefill_mode=args.prefill_mode,
+                       prefill_chunk_tokens=args.prefill_chunk,
                        mesh=mesh)
     rng = np.random.default_rng(0)
     # With the prefix cache enabled, requests share a system-prompt prefix
@@ -109,6 +121,12 @@ def main():
           f"throughput={total / wall:.1f} tok/s "
           f"kv_cache_bytes={rep['kv_bytes']:,}")
     st = server.stats()
+    pf = st["prefill"]
+    print(f"  prefill[{pf['mode']}]: chunk_tokens={pf['chunk_tokens']} "
+          f"tokens={pf['prefill_tokens']} chunks={pf['chunks']} "
+          f"coscheduled={pf['coscheduled_tokens']} "
+          f"stalled_decode_steps={pf['stalled_decode_steps']} "
+          f"preemptions={pf['prefill_preemptions']}")
     if "pool" in st:
         pl = st["pool"]
         print(f"  pool: {pl['pages_total']} pages x {pl['bytes_per_page']}B "
@@ -133,6 +151,8 @@ def main():
               f"pages_shared={pl['pages_shared']}")
     for i, r in enumerate(results[:4]):
         print(f"  req{i}: prompt_len={r.prompt_len} n_tokens={len(r.tokens)} "
+              f"queue={r.queue_wait_s * 1e3:.0f}ms "
+              f"ttft={r.ttft_s * 1e3:.0f}ms "
               f"prefill={r.prefill_s * 1e3:.0f}ms gen={r.gen_s * 1e3:.0f}ms "
               f"finish={r.finish_reason} tokens={r.tokens[:8].tolist()}…")
 

@@ -572,6 +572,46 @@ def gather_prefix_state(state, pages, n_blocks):
             else fn(kv)}
 
 
+def _map_kv_pair(state, other, fn):
+    kv, okv = state["kv"], other["kv"]
+    if isinstance(kv, (tuple, list)):
+        return {**state, "kv": tuple(fn(d, s) for d, s in zip(kv, okv))}
+    return {**state, "kv": fn(kv, okv)}
+
+
+def chunk_state_view(state, pages, pos0):
+    """Batch-1 view of one row's chunked prefill over the LIVE paged state
+    (DESIGN.md §13): every layer's cache shares the arena stores, so
+    ``prefill_chunk`` on the view encodes each chunk's blocks straight into
+    the pooled pages ``pages`` (i32 [NB]) while the batched decode state is
+    untouched.  KV-only families (the scheduler gates chunked admission on
+    this)."""
+    from repro.core import pool
+
+    kv = state["kv"]
+    fn = lambda c: pool.chunk_view(c, pages, pos0)  # noqa: E731
+    return {"kv": tuple(fn(c) for c in kv) if isinstance(kv, (tuple, list))
+            else fn(kv)}
+
+
+def adopt_chunk_stores(state, chunked):
+    """Fold a chunk step's arena-store updates (made through a
+    ``chunk_state_view``) back into the live batched state."""
+    from repro.core import pool
+
+    return _map_kv_pair(state, chunked, pool.adopt_stores)
+
+
+def install_chunk_row(state, chunked, row, pages):
+    """Finish a chunked prefill: adopt the final view's arena stores, splice
+    its buffers/lengths into row ``row``, and point the page-table row at
+    ``pages`` — the moment the row becomes attendable by the decode batch."""
+    from repro.core import pool
+
+    return _map_kv_pair(state, chunked,
+                        lambda d, s: pool.install_row(d, s, row, pages))
+
+
 def prefill_chunk(params, cfg: ModelConfig, tokens, pos0, state,
                   unroll: bool = False):
     """One block-chunked prefill step (prefix-cache admission path;

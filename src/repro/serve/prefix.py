@@ -3,8 +3,13 @@
 At millions-of-users scale most traffic shares long system prompts and
 few-shot prefixes; KVComp makes prefix reuse strictly better than
 vLLM-style raw-page sharing because each cached page holds ``block_size``
-tokens at the 2-4x smaller post-compression footprint.  This module is the
-host-side index: a radix tree whose edges are whole compression blocks
+tokens at the 2-4x smaller post-compression footprint.  Since chunked
+admission became the scheduler default (DESIGN.md §13) the index feeds a
+single unified prefill path: a hit seeds the chunk loop at block ``j`` and
+the remaining chunks run under the per-step budget, interleaved with
+decode, with half-prefilled rows parking their flushed blocks back here on
+preemption.  This module is the host-side index: a radix tree whose edges
+are whole compression blocks
 (``block_size`` token ids each) and whose nodes each own ONE physical page
 of the ``repro.core.pool`` arena — the compressed encoding of that block,
 valid for any request whose prompt walks the same token path from the root

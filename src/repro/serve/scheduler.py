@@ -7,9 +7,26 @@ group shared one scalar position, finished rows burned masked decode steps,
 and nobody could join until the whole group drained), the server owns a ring
 of **slots** over one live decode state and runs an admission queue:
 
-    submit -> queue -> [admit: solo prefill -> splice into a free slot]
+    submit -> queue -> [admit: chunked prefill interleaved with decode]
            -> decode steps (every slot at its own position)
            -> retire at EOS / length -> slot reused by the next request
+
+Admission is **chunked by default** (DESIGN.md §13): a queued prompt claims
+a free slot as a PREFILLING row and is processed in ``block_size``-aligned
+chunks spliced *between* decode steps — at most
+``ServerConfig.prefill_chunk_tokens`` prompt tokens ride alongside the live
+decode batch per step (Sarathi/SplitFuse-style), so one 32k prompt no
+longer freezes every stream for its whole prefill.  On the paged pool the
+chunk loop runs through a batch-1 *view* of the live arena
+(``model.chunk_state_view``): each chunk's blocks quantize/pack straight
+into pooled pages (the Store-stage ``pack_encode`` path), the prompt's KV
+never materializes uncompressed at full length, and peak admission memory
+drops from O(prompt) to O(chunk) — memory-pressure admission can start a
+long prompt before the pool could hold its dense form.  Per-block chunk
+state is a pure function of (params, earlier pages, block tokens), so
+greedy outputs stay bit-identical to ``prefill_mode="solo"`` — the
+blocking legacy admission kept as the explicit baseline (and the automatic
+fallback for families without a chunk step).
 
 Per-slot state is three per-row vectors (current token, position, and the
 cache's own per-row ``n_flushed``/``buf_len``), so requests with different
@@ -77,6 +94,13 @@ class Result:
     gen_s: float         # this request's wall time from prefill end to last token
     prefill_s: float     # this request's own prefill wall time
     finish_reason: str = "length"  # "eos" | "length"
+    # Latency decomposition (benchmarks/serve_throughput.py): time queued
+    # before any prefill work started, submit-to-first-token, and the
+    # monotonic emission time of every token (first production — replays
+    # after a preemption keep the original stamps), for inter-token p50/p99.
+    queue_wait_s: float = 0.0
+    ttft_s: float = 0.0
+    token_times: tuple = ()
 
 
 @dataclasses.dataclass
@@ -127,6 +151,31 @@ class ServerConfig:
     # replicated, so greedy outputs are bit-identical to the unsharded
     # server.  None (or a 1-device mesh) serves single-device.
     mesh: object | None = None
+    # Admission prefill (DESIGN.md §13):
+    #   "chunked" — default: prompts prefill in block-aligned chunks spliced
+    #               between decode steps, at most ``prefill_chunk_tokens``
+    #               prompt tokens per server step across all PREFILLING
+    #               rows.  Greedy outputs are bit-identical to "solo".
+    #               Families without a chunk step (ssm/hybrid) and
+    #               non-uniform block sizes fall back to "solo".
+    #   "solo"    — legacy blocking admission: the whole prompt prefills in
+    #               one call while every live decode stream waits (the p99
+    #               baseline benchmarks/serve_throughput.py compares against).
+    prefill_mode: str = "chunked"
+    # Per-step chunked-prefill token budget; must be a positive multiple of
+    # the cache block_size (checked against the model's spec at Server
+    # construction, mirroring CacheSpec's window check).  None = 8 blocks.
+    prefill_chunk_tokens: int | None = None
+
+    def __post_init__(self):
+        if self.prefill_mode not in ("chunked", "solo"):
+            raise ValueError(
+                f"prefill_mode must be chunked|solo, got {self.prefill_mode!r}")
+        if (self.prefill_chunk_tokens is not None
+                and self.prefill_chunk_tokens < 1):
+            raise ValueError(
+                "prefill_chunk_tokens must be a positive multiple of the "
+                f"cache block_size, got {self.prefill_chunk_tokens}")
 
 
 class Handle:
@@ -143,8 +192,11 @@ class Handle:
         self._toks: list[int] = []
         self._finish: str | None = None
         self._prefill_s = 0.0
+        self._t_submit = time.monotonic()
+        self._t_first: float | None = None  # first prefill work (queue wait end)
         self._t_start: float | None = None
         self._t_end: float | None = None
+        self._token_times: list[float] = []
 
     @property
     def done(self) -> bool:
@@ -166,12 +218,17 @@ class Handle:
         """Block (drive the server) until this request finishes."""
         while not self.done:
             self._server.step()
+        t_first = self._t_first if self._t_first is not None else self._t_submit
         return Result(
             tokens=np.asarray(self._toks, np.int32),
             prompt_len=len(self.request.prompt),
             gen_s=self._t_end - self._t_start,
             prefill_s=self._prefill_s,
             finish_reason=self._finish,
+            queue_wait_s=t_first - self._t_submit,
+            ttft_s=(self._token_times[0] - self._t_submit
+                    if self._token_times else 0.0),
+            token_times=tuple(self._token_times),
         )
 
     # -- scheduler side -------------------------------------------------------
@@ -180,6 +237,11 @@ class Handle:
         (EOS seen or budget exhausted).  Tokens after EOS are never recorded
         — results are truncated at eos_id by construction."""
         self._toks.append(int(tok))
+        # Emission time of each NEW token index: after a (non-prefix)
+        # preemption clears + replays the list, earlier indices keep the
+        # stamp of their first production — the stream a caller saw.
+        if len(self._toks) > len(self._token_times):
+            self._token_times.append(time.monotonic())
         r = self.request
         if r.eos_id is not None and int(tok) == r.eos_id:
             self._finish = "eos"
@@ -189,6 +251,30 @@ class Handle:
             return False
         self._t_end = time.monotonic()
         return True
+
+
+@dataclasses.dataclass
+class _PrefillTask:
+    """One PREFILLING row's host-side progress (DESIGN.md §13).
+
+    ``pos`` is always block-aligned between server steps (partial tail
+    chunks only run as the finishing chunk).  ``state is None`` marks the
+    fused arena path: flushed blocks already live in this row's pooled
+    pages (``Server._pt_host[row]``) while the DEVICE page-table row stays
+    cleared — the concurrently decoding batch write-drops and read-masks
+    the row until the finish chunk installs it.  Otherwise ``state`` is a
+    private batch-1 dense chunk state (dense cache mode, or paged under a
+    mesh where the replicated solo state keeps sharded parity) spliced in
+    at the finish."""
+
+    handle: Handle
+    row: int
+    forced: np.ndarray      # prompt + pre-preemption generations, i32 [n]
+    n: int
+    pos: int                # tokens chunked so far
+    hit: list               # prefix-cache pages spliced below ``pos``
+    state: object | None    # None => fused encode-to-page path
+    chunks: int = 0
 
 
 class Server:
@@ -223,6 +309,40 @@ class Server:
         self._seq = 0                                   # admission counter
         self._row_seq = [0] * B                         # admission order per row
         self.preemptions = 0
+        # Chunked admission (DESIGN.md §13): PREFILLING rows by slot index.
+        # A slot is busy while it appears in EITHER _slots or _prefill_tasks.
+        self._prefill_tasks: dict[int, _PrefillTask] = {}
+        self._pf = {"prefill_tokens": 0, "chunks": 0,
+                    "coscheduled_tokens": 0, "stalled_decode_steps": 0,
+                    "prefill_preemptions": 0}
+
+        # Chunk capability: the block-chunked prefill step exists only for
+        # pure-KV families, and block-aligned chunks need one block_size
+        # across layers (per-layer n_blocks/windows may still differ in
+        # dense mode).  Capable families take the UNIFIED chunk-loop
+        # admission in both prefill modes — "solo" drains every chunk at
+        # admission (the stall), "chunked" interleaves them with decode —
+        # so the two modes are bit-identical by construction.  Anything
+        # else falls back to the legacy full-length-prefill admission.
+        specs = (M.cache_specs(cfg, scfg.max_seq)
+                 if M.n_cache_layers(cfg) else ())
+        uniform_t = len({s.block_size for s in specs}) == 1
+        self._spec0 = specs[0] if uniform_t else None
+        self.prefill_unified = cfg.family in ("dense", "moe") and uniform_t
+        self.prefill_chunked = (scfg.prefill_mode == "chunked"
+                                and self.prefill_unified)
+        self._chunk_budget = self._chunk_t = None
+        if self.prefill_unified:
+            T = self._spec0.block_size
+            budget = scfg.prefill_chunk_tokens
+            if budget is None:
+                budget = 8 * T
+            elif budget % T:
+                raise ValueError(
+                    f"prefill_chunk_tokens ({budget}) must be a positive "
+                    f"multiple of block_size ({T}): chunked admission "
+                    "flushes whole compression blocks between decode steps")
+            self._chunk_budget, self._chunk_t = int(budget), T
 
         # Multi-device serving (DESIGN.md §12): normalize a trivial mesh to
         # None so single-device runs trace the exact unsharded graphs, then
@@ -256,7 +376,6 @@ class Server:
             # every layer flushes the same logical block at the same step,
             # so one page id serves all arenas), accounted in actual
             # post-compression bytes per layer (repro.core.pool.page_nbytes).
-            specs = M.cache_specs(cfg, scfg.max_seq)  # dense twins
             if len({(s.block_size, s.n_blocks) for s in specs}) > 1:
                 raise ValueError(
                     "paged mode requires a uniform block_size across layers")
@@ -387,17 +506,86 @@ class Server:
                 return _c(M.insert_decode_row(dst, src, row))
 
             self._insert = jax.jit(_insert_dense, donate_argnums=(0,))
-        if self.prefix_mode:
-            # Block-chunked admission (DESIGN.md §11): the solo state chains
-            # through the chunk loop, so each step donates its predecessor.
-            # The gather reads the LIVE state (no donation), the fresh-state
-            # builder re-executes per call (each admission needs buffers it
-            # can donate away).
+        if self.prefix_mode or self.prefill_unified:
+            # Block-chunked prefill (DESIGN.md §11/§13): the solo state
+            # chains through the chunk loop, so each step donates its
+            # predecessor.  The gather reads the LIVE state (no donation),
+            # the fresh-state builder re-executes per call (each admission
+            # needs buffers it can donate away).
             def _chunk(p, t, pos, st):
                 logits, st = M.prefill_chunk(p, cfg, t, pos, st)
                 return jnp.argmax(logits, axis=-1).astype(jnp.int32), st
 
+            def _chunk_scan(p, toks, pos0, st):
+                # toks i32 [k, 1, T]: k full block_size chunks in ONE
+                # dispatch — a lax.scan of the exact per-chunk computation,
+                # so the result is bit-identical to k separate _chunk calls
+                # while the dispatch overhead is paid once.  Compiled per
+                # power-of-two k (_advance_task buckets the trip count).
+                T = toks.shape[2]
+                offs = pos0 + T * jnp.arange(toks.shape[0], dtype=jnp.int32)
+
+                def step(st, xs):
+                    t, pos = xs
+                    logits, st = M.prefill_chunk(p, cfg, t, pos, st)
+                    return st, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+                st, toks_out = jax.lax.scan(step, st, (toks, offs))
+                return toks_out[-1], st
+
             self._chunk = jax.jit(_chunk, donate_argnums=(3,))
+            self._chunk_scan = jax.jit(_chunk_scan, donate_argnums=(3,))
+            self._fresh = jax.jit(
+                lambda: M.init_decode_state(cfg, 1, scfg.max_seq))
+        if self.prefill_unified and self.paged and mesh is None:
+            # Fused encode-to-page chunking (DESIGN.md §13): the chunk loop
+            # runs through a batch-1 VIEW sharing the live arena, so each
+            # chunk's blocks compress straight into this row's pooled pages
+            # while the view's page-table row keeps the batch write-dropped.
+            # The live state threads through (donated — the arena buffers
+            # alias), and the finishing chunk installs the row in the same
+            # trace, because a sub-block tail lives only in view buffers.
+            # Under a mesh the dense-state path above is used instead: the
+            # arena is GSPMD-sharded, and chunk reductions over its page
+            # axis would not stay bit-stable across shardings.
+            def _chunk_paged(p, t, pos0, st, pages):
+                view = M.chunk_state_view(st, pages, pos0)
+                tok, view = _chunk_tok(p, t, pos0, view)
+                return tok, M.adopt_chunk_stores(st, view)
+
+            def _finish_paged(p, t, pos0, st, pages, row):
+                view = M.chunk_state_view(st, pages, pos0)
+                tok, view = _chunk_tok(p, t, pos0, view)
+                return tok, M.install_chunk_row(st, view, row, pages)
+
+            def _chunk_tok(p, t, pos0, view):
+                logits, view = M.prefill_chunk(p, cfg, t, pos0, view)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), view
+
+            def _chunk_paged_scan(p, toks, pos0, st, pages):
+                # k full chunks encode-to-page in ONE dispatch: each scan
+                # step rebuilds the batch-1 view over the threaded live
+                # state and adopts its arena stores, exactly the sequential
+                # _chunk_paged loop.  The finishing chunk never rides in a
+                # scan (install_chunk_row needs the final view's buffers),
+                # so _advance_task caps the trip count short of the end.
+                T = toks.shape[2]
+                offs = pos0 + T * jnp.arange(toks.shape[0], dtype=jnp.int32)
+
+                def step(st, xs):
+                    t, pos = xs
+                    view = M.chunk_state_view(st, pages, pos)
+                    tok, view = _chunk_tok(p, t, pos, view)
+                    return M.adopt_chunk_stores(st, view), tok
+
+                st, toks_out = jax.lax.scan(step, st, (toks, offs))
+                return toks_out[-1], st
+
+            self._chunk_paged = jax.jit(_chunk_paged, donate_argnums=(3,))
+            self._chunk_paged_scan = jax.jit(_chunk_paged_scan,
+                                             donate_argnums=(3,))
+            self._finish_paged = jax.jit(_finish_paged, donate_argnums=(3,))
+        if self.prefix_mode:
             if mesh is not None:
                 # gather_prefix_state keeps the live spec's "sharded"
                 # backend pin on the batch-1 dense seed; rewrite it to the
@@ -412,8 +600,6 @@ class Server:
                 self._gather = jax.jit(_gather)
             else:
                 self._gather = jax.jit(M.gather_prefix_state)
-            self._fresh = jax.jit(
-                lambda: M.init_decode_state(cfg, 1, scfg.max_seq))
 
     # -- intake ---------------------------------------------------------------
     def submit(self, request: Request) -> Handle:
@@ -465,6 +651,11 @@ class Server:
     def pending(self) -> int:
         return len(self._queue)
 
+    @property
+    def prefilling(self) -> int:
+        """Rows mid-chunked-prefill (claimed but not yet decoding)."""
+        return len(self._prefill_tasks)
+
     # -- shard-local page accounting (DESIGN.md §12) --------------------------
     # jax shards an axis into contiguous per-device chunks, so decode slot
     # ``row`` lives on data shard ``row // (max_slots / n_data)`` — and all
@@ -501,17 +692,25 @@ class Server:
                                np.asarray(handle._toks, np.int32)])
 
     def _admit(self, handle: Handle, row: int) -> bool:
-        """Prefill a queued request at its exact prompt length and splice it
-        into slot ``row`` of the live decode state.  Returns False when the
-        request finished at prefill (budget of 1, or instant EOS) and the
-        slot stays free.  Paged mode allocates the prompt's block pages and
-        scatters the solo (dense) prefill into them; prefix mode takes the
-        block-chunked path instead (``_admit_prefix``)."""
-        if self.prefix_mode:
-            return self._admit_prefix(handle, row)
+        """LEGACY admission for families without a block-chunked prefill
+        step (ssm/hybrid, or non-uniform per-layer block sizes): prefill
+        the queued request at its exact prompt length in one shot and
+        splice it into slot ``row`` of the live decode state.  Returns
+        False when the request finished at prefill (budget of 1, or
+        instant EOS) and the slot stays free.  Pure-KV families never come
+        through here — both prefill modes run the unified chunk loop
+        (``_start_prefill``; DESIGN.md §13), whose numerics differ from
+        this path for lossy layouts (chunks attend earlier blocks through
+        the compressed store, full-length prefill attends them raw)."""
         req = handle.request
         prompt = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+        if any(s is not None for s in self._slots):
+            # Solo admission freezes every live decode stream for the whole
+            # prompt — the stall chunked admission exists to kill.
+            self._pf["stalled_decode_steps"] += 1
         t0 = time.monotonic()
+        if handle._t_first is None:
+            handle._t_first = t0
         first_tok, solo = self._prefill(self.params, prompt)
         first = int(first_tok[0])
         t1 = time.monotonic()
@@ -541,90 +740,235 @@ class Server:
         self._row_seq[row] = self._seq
         return True
 
-    def _admit_prefix(self, handle: Handle, row: int) -> bool:
-        """Block-chunked admission (DESIGN.md §11): longest-prefix lookup,
-        splice the hit's pages, chunk-prefill only the divergent suffix.
-
-        The forced tokens (prompt + any pre-preemption generations) are
-        processed in ``block_size`` chunks starting at the first block the
-        index does not hold; each chunk attends the compressed store plus
-        its own raw K/V and compresses itself, so per-block state depends
-        only on (params, earlier pages, block tokens) — greedy outputs are
-        bit-identical whether the prefix came from the index ("on"), was
-        chunked right here ("noshare"), or survived a preemption.  Full
-        blocks of the forced tokens are inserted into the index afterwards
-        (sharing on), making this admission the next one's hit."""
-        spec = self._spec0
-        T, nb = spec.block_size, spec.n_blocks
+    # -- chunked admission (DESIGN.md §13) ------------------------------------
+    def _start_prefill(self, handle: Handle, row: int) -> None:
+        """Claim slot ``row`` as a PREFILLING task: set up the chunk state
+        (a live-arena fused path unsharded-paged; a private dense state
+        otherwise), splice any prefix hit, and reserve pages — one chunk at
+        a time on the fused path, the whole prompt up front when the blocks
+        accumulate in a private state (they only reach pages at the finish
+        splice).  The budget loop advances the task between decode steps."""
         forced = self._forced(handle)
         n = len(forced)
-        n_full = n // T
-        occupied = min(n_full, nb)  # ring-capped slots the chunks will fill
-        hit = handle.__dict__.pop("_hit_pages", [])  # stashed by _can_admit
+        hit = handle.__dict__.pop("_hit_pages", [])
         j = len(hit)
-        resumed = len(handle._toks) > 0
         t0 = time.monotonic()
-        if j:
-            self.pool.retain(hit)  # the row's own references to the hit
-            seed = np.full(nb, -1, np.int64)
+        if handle._t_first is None:
+            handle._t_first = t0
+        fused = self.paged and self.mesh is None
+        if fused:
+            state = None
+            if j:
+                self.pool.retain(hit)  # the row's own references to the hit
+        elif j:
+            self.pool.retain(hit)
+            seed = np.full(self._spec0.n_blocks, -1, np.int64)
             seed[:j] = hit
             state = self._gather(self.state, jnp.asarray(seed, jnp.int32),
                                  jnp.int32(j))
         else:
             state = self._fresh()
-        pos = j * T
-        tok = None
-        while pos < n:
-            C = min(T, n - pos)
-            tok, state = self._chunk(
-                self.params, jnp.asarray(forced[None, pos : pos + C]),
-                jnp.int32(pos), state)
-            self._pfx["prefill_tokens"] += C
-            # KV pairs each chunk token attends (its full causal context):
-            # the analytic prefill-FLOPs unit benchmarks/prefix_reuse.py
-            # converts with the model dims.
-            self._pfx["prefill_attn_pairs"] += C * pos + C * (C + 1) // 2
-            pos += C
-        first = int(np.asarray(tok)[0])
-        t1 = time.monotonic()
-        handle._prefill_s += t1 - t0
-        if handle._t_start is None:
-            handle._t_start = t1
-        if self._share:
-            self._pfx["lookups"] += 1
-        if j:
-            self._pfx["hits"] += 1
-            self._pfx["hit_blocks"] += j
-            self._pfx["reused_tokens"] += j * T
-        if resumed:
-            self._pfx["resumes"] += 1
-            self._pfx["resume_reused_blocks"] += j
-        if handle._push(first):
-            # Finished at admission: nothing lands in a slot; drop the row's
-            # hit references (the index's own survive) and skip the insert —
-            # pages for the new blocks were never allocated.
+        if self.paged:
+            T, nb = self._spec0.block_size, self._spec0.n_blocks
+            pages = np.full(nb, -1, np.int64)
+            pages[:j] = hit
+            if not fused:
+                occupied = min(n // T, nb)
+                if occupied > j:
+                    pages[j:occupied] = self._alloc(occupied - j, row)
+            self._pt_host[row] = pages
+        if self.prefix_mode:
+            if self._share:
+                self._pfx["lookups"] += 1
             if j:
-                self.pool.release(hit)
-            return False
-        pages = np.full(nb, -1, np.int64)
-        pages[:j] = hit
-        if occupied > j:
-            pages[j:occupied] = self._alloc(occupied - j, row)
-        self._pt_host[row] = pages
-        self.state = self._insert(self.state, state, row,
-                                  jnp.asarray(pages, jnp.int32))
-        if self._share and n_full and n_full <= nb:
-            # Index every full forced block (hit blocks re-stamp, divergent
-            # ones create retaining nodes).  Skipped when the solo chunking
-            # wrapped the ring (n_full > nb): slots no longer map block i.
-            self._index_for(row).insert(forced, pages[:n_full].tolist(),
-                                        self.pool)
+                self._pfx["hits"] += 1
+                self._pfx["hit_blocks"] += j
+                self._pfx["reused_tokens"] += j * self._spec0.block_size
+            if handle._toks:
+                self._pfx["resumes"] += 1
+                self._pfx["resume_reused_blocks"] += j
+        self._prefill_tasks[row] = _PrefillTask(
+            handle=handle, row=row, forced=forced, n=n,
+            pos=j * self._chunk_t, hit=hit, state=state)
+        self._seq += 1
+        self._row_seq[row] = self._seq  # age ordering covers PREFILLING rows
+        # Hygiene: the vacated slot keeps (garbage-)decoding until the
+        # finish installs it; pin its host vectors to something inert.
+        self._cur[row] = self.scfg.pad_id
+        self._pos[row] = 0
+
+    def _ensure_chunk_page(self, task: _PrefillTask, pos: int) -> bool:
+        """Fused path: the full chunk at ``pos`` flushes one block — make
+        sure its ring slot has a physical page before the chunk runs.  Same
+        reclaim ladder as the decode sweep (``_ensure_pages``): reuse an
+        exclusive page in place on ring wrap, allocate, evict cold index
+        blocks, then preempt the youngest same-shard page holder.  Returns
+        False when the reclaim preempted THIS task."""
+        T, nb = self._spec0.block_size, self._spec0.n_blocks
+        row = task.row
+        slot = (pos // T) % nb
+        shard = self._row_shard(row)
+        while True:
+            existing = int(self._pt_host[row, slot])
+            if existing >= 0 and self.pool.refcount(existing) == 1:
+                return True  # ring wrap: overwrite our exclusive page
+            if self._shard_free(shard):
+                page = self._alloc(1, row)[0]
+                if existing >= 0:  # shared: only exists in prefix mode
+                    self.pool.release([existing])
+                    if self.prefix_mode:
+                        self._pfx["cow_breaks"] += 1
+                self._pt_host[row, slot] = page
+                return True
+            if self._share and self._index_for(row).evict(
+                    self._shard_pool(row), 1):
+                continue
+            victim = next(
+                (r for r in reversed(self._live_rows_by_age())
+                 if self._row_shard(r) == shard
+                 and (self._pt_host[r] >= 0).any()), None)
+            if victim is None:
+                raise RuntimeError("pool exhausted with no reclaimable pages")
+            self._preempt(victim)
+            if victim == row:
+                return False
+
+    def _advance_task(self, task: _PrefillTask, budget: int) -> int:
+        """Run whole chunks of one PREFILLING task until the budget is
+        spent, the task finishes, or a page reclaim preempts it.  Chunks
+        are never split, so a task consumes budget in block_size units
+        (plus one sub-block finishing tail).  Returns tokens processed."""
+        T = self._chunk_t
+        handle, row = task.handle, task.row
+        spent = 0
+        t0 = time.monotonic()
+        while row in self._prefill_tasks:
+            pos = task.pos
+            C = min(T, task.n - pos)
+            if spent + C > budget:
+                break
+            fused = task.state is None and self.paged
+            # Multi-chunk fast path: when the budget covers several full
+            # chunks, bucket the trip count to a power of two (bounded jit
+            # cache) and run them as ONE scan dispatch.  The fused path
+            # ensures a physical page per block up front and keeps the
+            # finishing chunk out of the scan (install_chunk_row needs the
+            # final view in its own trace).
+            k = min((budget - spent) // T, (task.n - pos) // T, 8)
+            if fused:
+                k = min(k, (task.n - pos - 1) // T, self._spec0.n_blocks)
+            kb = 1
+            while kb * 2 <= k:
+                kb *= 2
+            if kb >= 2:
+                if fused and not all(self._ensure_chunk_page(task, pos + j * T)
+                                     for j in range(kb)):
+                    break  # the reclaim preempted this very task
+                t = jnp.asarray(
+                    task.forced[pos:pos + kb * T].reshape(kb, 1, T))
+                if fused:
+                    pages = jnp.asarray(self._pt_host[row], jnp.int32)
+                    tok, self.state = self._chunk_paged_scan(
+                        self.params, t, jnp.int32(pos), self.state, pages)
+                else:
+                    tok, task.state = self._chunk_scan(
+                        self.params, t, jnp.int32(pos), task.state)
+                task.pos = pos + kb * T
+                task.chunks += kb
+                spent += kb * T
+                self._pf["chunks"] += kb
+                if self.prefix_mode:
+                    self._pfx["prefill_tokens"] += kb * T
+                    self._pfx["prefill_attn_pairs"] += sum(
+                        T * (pos + j * T) + T * (T + 1) // 2
+                        for j in range(kb))
+                if task.pos == task.n:
+                    self._finish_task(task, int(np.asarray(tok)[0]))
+                    break
+                continue
+            if fused and C == T and not self._ensure_chunk_page(task, pos):
+                break  # the reclaim preempted this very task
+            t = jnp.asarray(task.forced[None, pos:pos + C])
+            if fused:
+                pages = jnp.asarray(self._pt_host[row], jnp.int32)
+                if pos + C == task.n:
+                    tok, self.state = self._finish_paged(
+                        self.params, t, jnp.int32(pos), self.state, pages,
+                        jnp.int32(row))
+                else:
+                    tok, self.state = self._chunk_paged(
+                        self.params, t, jnp.int32(pos), self.state, pages)
+            else:
+                tok, task.state = self._chunk(self.params, t, jnp.int32(pos),
+                                              task.state)
+            task.pos = pos + C
+            task.chunks += 1
+            spent += C
+            self._pf["chunks"] += 1
+            if self.prefix_mode:
+                self._pfx["prefill_tokens"] += C
+                self._pfx["prefill_attn_pairs"] += C * pos + C * (C + 1) // 2
+            if task.pos == task.n:
+                self._finish_task(task, int(np.asarray(tok)[0]))
+                break
+        handle._prefill_s += time.monotonic() - t0
+        self._pf["prefill_tokens"] += spent
+        return spent
+
+    def _finish_task(self, task: _PrefillTask, first: int) -> None:
+        """The finishing chunk ran: the row's cache holds all ``n`` forced
+        tokens and ``first`` is the next greedy token.  Promote the task to
+        a live decode slot (fused: the finish chunk already installed the
+        device row; dense-state: splice now), or retire immediately on a
+        budget of 1 / instant EOS."""
+        handle, row = task.handle, task.row
+        del self._prefill_tasks[row]
+        if handle._t_start is None:
+            handle._t_start = time.monotonic()
+        fused = task.state is None and self.paged
+        if handle._push(first):
+            # Finished at admission: the slot stays free.  The fused path
+            # already installed the device row, so clear it; pages (and any
+            # hit references) release either way.  Index insert is skipped,
+            # matching solo admission — nothing else rides on this prompt.
+            if self.paged:
+                self._release_row(row)
+            return
+        if self.paged:
+            T, nb = self._spec0.block_size, self._spec0.n_blocks
+            n_full = task.n // T
+            pages = self._pt_host[row]
+            if not fused:
+                self.state = self._insert(self.state, task.state, row,
+                                          jnp.asarray(pages, jnp.int32))
+            if self._share and n_full and n_full <= nb:
+                self._index_for(row).insert(task.forced,
+                                            pages[:n_full].tolist(),
+                                            self.pool)
+        else:
+            self.state = self._insert(self.state, task.state, row)
         self._slots[row] = handle
         self._cur[row] = first
-        self._pos[row] = n
-        self._seq += 1
-        self._row_seq[row] = self._seq
-        return True
+        self._pos[row] = task.n
+
+    def _run_prefill_budget(self, budget: int, decoding: bool) -> int:
+        """Spend (part of) this step's ``prefill_chunk_tokens`` across the
+        carried-over PREFILLING rows, oldest admission first — finished
+        tasks join the decode batch THIS step, so admission costs zero
+        extra decode latency beyond the chunk compute itself.  Returns the
+        unspent budget (the admission sweep hands it to new tasks)."""
+        for row in sorted(self._prefill_tasks,
+                          key=lambda r: self._row_seq[r]):
+            if budget < 1:
+                break
+            task = self._prefill_tasks.get(row)
+            if task is None:
+                continue  # preempted by an earlier task's page reclaim
+            spent = self._advance_task(task, budget)
+            budget -= spent
+            if decoding:
+                self._pf["coscheduled_tokens"] += spent
+        return budget
 
     def _can_admit(self, handle: Handle, row: int) -> bool:
         """Memory-pressure admission (paged): the prompt's blocks plus one
@@ -637,7 +981,7 @@ class Server:
         if not self.paged:
             return True
         shard_pool = self._shard_pool(row)
-        if self.prefix_mode:
+        if self.prefix_mode or self.prefill_unified:
             spec = self._spec0
             T, nb = spec.block_size, spec.n_blocks
             forced = self._forced(handle)
@@ -648,8 +992,20 @@ class Server:
                 # to process — the last token's logits drive the next one.
                 hit = self._index_for(row).lookup(
                     forced, min((len(forced) - 1) // T, nb))
-            handle._hit_pages = hit  # _admit_prefix splices this exact hit
-            need = min(min(n_full, nb) - len(hit) + 1, shard_pool.n_pages)
+            handle._hit_pages = hit  # the chunked admission splices this hit
+            occupied = min(n_full, nb)
+            if self.prefill_chunked and self.mesh is None and self.paged:
+                # Fused chunking allocates pages one chunk ahead of the
+                # flush, so admission only needs the FIRST step's chunks
+                # plus decode headroom — a long prompt can start before
+                # the pool could hold its dense form (the reclaim ladder
+                # covers the rest of its lifetime).
+                first = min(self._chunk_budget // T,
+                            max(occupied - len(hit), 0))
+                need = min(first + 1, shard_pool.n_pages)
+            else:
+                need = min(max(occupied - len(hit), 0) + 1,
+                           shard_pool.n_pages)
             if shard_pool.free_pages < need and self._share:
                 # Reclaim cold index blocks before giving up; the hit path
                 # was just MRU-stamped AND is protected explicitly (its
@@ -673,8 +1029,11 @@ class Server:
 
     # -- paged page-fault sweep / preemption ----------------------------------
     def _live_rows_by_age(self) -> list[int]:
-        return sorted((r for r, s in enumerate(self._slots) if s is not None),
-                      key=lambda r: self._row_seq[r])
+        """Decoding AND prefilling rows, oldest admission first — both hold
+        pages, so both are preemption candidates for the reclaim ladders."""
+        rows = [r for r, s in enumerate(self._slots) if s is not None]
+        rows += list(self._prefill_tasks)
+        return sorted(rows, key=lambda r: self._row_seq[r])
 
     def _release_row(self, row: int) -> None:
         """Drop the row's references on its pages (a page shared with the
@@ -699,7 +1058,37 @@ class Server:
         blocks (prompt and generated alike) are inserted into the index
         (sharing on), its generated tokens are kept, and the row's own page
         references drop — re-admission restores from the cached pages and
-        chunk-prefills only the unflushed tail, no prompt replay."""
+        chunk-prefills only the unflushed tail, no prompt replay.
+
+        A half-prefilled row (DESIGN.md §13) preempts the same way, minus
+        the device work: its page-table row was never installed, so only
+        the host mirror releases.  On the fused path the flushed blocks
+        already live in arena pages — sharing mode parks them in the index
+        and the re-admission's lookup resumes from them; the dense-state
+        path's blocks never reached pages (they die with the private chunk
+        state), so nothing is parked and re-admission re-chunks."""
+        task = self._prefill_tasks.pop(row, None)
+        if task is not None:
+            handle = task.handle
+            if self._share and task.state is None:
+                # task.pos is block-aligned mid-prefill: every full chunk
+                # so far flushed its block into this row's pages.
+                flushed = task.pos // self._spec0.block_size
+                if 0 < flushed <= self._spec0.n_blocks:
+                    self._index_for(row).insert(
+                        task.forced, self._pt_host[row][:flushed].tolist(),
+                        self.pool)
+            held = self._pt_host[row][self._pt_host[row] >= 0]
+            if len(held):
+                self.pool.release(held.tolist())
+            self._pt_host[row] = -1
+            if not self.prefix_mode:
+                handle._toks.clear()
+            self._queue.appendleft(handle)
+            self.preemptions += 1
+            self._pf["prefill_preemptions"] += 1
+            self._preempt_by_shard[self._row_shard(row)] += 1
+            return
         handle = self._slots[row]
         self._slots[row] = None
         if self.prefix_mode:
@@ -814,7 +1203,18 @@ class Server:
             # new shape (another Server may have rebound it since __init__).
             from repro.distributed import serve_shard
             serve_shard.set_serve_mesh(self.mesh, self._inner_backend)
-        free = [i for i, s in enumerate(self._slots) if s is None]
+        free = [i for i, s in enumerate(self._slots)
+                if s is None and i not in self._prefill_tasks]
+        decoding = any(s is not None for s in self._slots)
+        # Chunked admission: carried-over PREFILLING tasks spend the step's
+        # prompt-token budget FIRST (they are older than anything admitted
+        # this sweep); new admissions below chunk through whatever is left.
+        # A task finishing here joins the decode batch this very step — and
+        # inserts its blocks into the prefix index BEFORE the sweep's next
+        # lookup, so co-arriving shared prompts still reuse each other.
+        pf_budget = self._chunk_budget if self.prefill_chunked else 0
+        if self._prefill_tasks:
+            pf_budget = self._run_prefill_budget(pf_budget, decoding)
         while free and self._queue:
             handle = self._pop_next()
             # Admit onto the free slot whose data shard has the most free
@@ -829,13 +1229,35 @@ class Server:
                 # Pool pressure: park it until retirements free pages.
                 self._queue.appendleft(handle)
                 break
-            if self._admit(handle, row):
+            if self.prefill_unified:
+                self._start_prefill(handle, row)
+                free.remove(row)
+                task = self._prefill_tasks.get(row)
+                if not self.prefill_chunked:
+                    # Solo mode, unified numerics: drain every chunk right
+                    # here — the admission stall the chunked default kills,
+                    # kept as the explicit baseline (bit-identical tokens).
+                    if decoding:
+                        self._pf["stalled_decode_steps"] += 1
+                    if task is not None:
+                        self._advance_task(task, task.n)
+                elif task is not None and pf_budget >= 1:
+                    spent = self._advance_task(task, pf_budget)
+                    pf_budget -= spent
+                    if decoding:
+                        self._pf["coscheduled_tokens"] += spent
+                if self._queue and self._queue[0] is handle:
+                    break  # the chunk loop preempted itself: pool too tight
+                if (row not in self._prefill_tasks
+                        and self._slots[row] is None):
+                    free.append(row)  # finished (and retired) at admission
+            elif self._admit(handle, row):
                 free.remove(row)
         if self.paged:
             self._ensure_pages()
         rows = [i for i, s in enumerate(self._slots) if s is not None]
         if not rows:
-            return bool(self._queue)
+            return bool(self._queue) or bool(self._prefill_tasks)
         toks, self.state = self._decode(
             self.params, jnp.asarray(self._cur), jnp.asarray(self._pos),
             self.state)
@@ -848,7 +1270,8 @@ class Server:
                 self._slots[row] = None  # retire; slot reused next step
                 if self.paged:
                     self._release_row(row)
-        return bool(self._queue) or any(s is not None for s in self._slots)
+        return (bool(self._queue) or bool(self._prefill_tasks)
+                or any(s is not None for s in self._slots))
 
     def run(self) -> None:
         """Drain: step until every submitted request has finished."""
@@ -869,6 +1292,17 @@ class Server:
             "active": self.active,
             "pending": self.pending,
             "preemptions": self.preemptions,
+            # Admission observability (DESIGN.md §13): chunks in flight,
+            # prompt tokens co-scheduled with live decoders, and how often
+            # solo admissions stalled a live batch (0 by design chunked).
+            "prefill": {
+                "mode": "chunked" if self.prefill_chunked else "solo",
+                "chunk_tokens": self._chunk_budget,
+                "prefilling": len(self._prefill_tasks),
+                "inflight_tokens": sum(t.n - t.pos
+                                       for t in self._prefill_tasks.values()),
+                **self._pf,
+            },
         }
         if self.paged:
             s["pool"] = self.pool.stats()

@@ -302,11 +302,20 @@ def setup():
 
 
 def _solo_greedy(cfg, params, prompt, n_new):
-    lg, state = M.prefill(params, cfg, {"tokens": jnp.asarray(prompt)[None, :]},
-                          256, q_chunk=32, kv_chunk=32)
-    cur = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+    # B=1 block-chunked prefill (the unified admission semantics: chunks
+    # attend earlier blocks compressed, as decode will) + greedy decode.
+    prompt = np.asarray(prompt, np.int32)
+    T = M.cache_specs(cfg, 256)[0].block_size
+    state = M.init_decode_state(cfg, 1, 256)
+    lg, pos = None, 0
+    while pos < len(prompt):
+        C = min(T, len(prompt) - pos)
+        lg, state = M.prefill_chunk(params, cfg,
+                                    jnp.asarray(prompt[None, pos:pos + C]),
+                                    jnp.int32(pos), state)
+        pos += C
+    cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
     out = [int(cur[0])]
-    pos = len(prompt)
     while len(out) < n_new:
         lg, state = M.decode_step(params, cfg, cur,
                                   jnp.asarray(pos, jnp.int32), state)
@@ -529,3 +538,57 @@ def test_pop_next_fcfs_is_fifo(setup):
     handles = [server.submit(Request(prompt=np.zeros(4, np.int32),
                                      max_new_tokens=b)) for b in (2, 9, 3)]
     assert [server._pop_next() for _ in range(3)] == handles
+
+
+@pytest.mark.parametrize("layout", ["raw", "packed", "kivi", "huffman"])
+def test_chunked_vs_solo_admission_bit_identity_paged(setup, layout):
+    """Bit-identity matrix, paged leg: the fused encode-to-page chunk loop
+    (chunks quantize straight into pooled pages through a live-arena view)
+    must match the blocking solo drain token for token on every layout."""
+    cfg, params, prompts = setup
+    cfg = dataclasses.replace(cfg, cache_layout=layout, cache_block=8)
+    outs = {}
+    for mode in ("chunked", "solo"):
+        server = Server(cfg, params,
+                        ServerConfig(max_slots=2, max_seq=256,
+                                     cache_mode="paged", prefill_mode=mode,
+                                     prefill_chunk_tokens=8),
+                        q_chunk=32, kv_chunk=32)
+        hs = [server.submit(Request(prompt=p, max_new_tokens=n))
+              for p, n in zip(prompts[:3], NEWS[:3])]
+        server.run()
+        outs[mode] = [h.result().tokens.tolist() for h in hs]
+        st = server.stats()
+        assert st["prefill"]["mode"] == mode
+        assert st["pool"]["pages_live"] == 0  # drained either way
+    assert outs["chunked"] == outs["solo"]
+
+
+def test_preempt_half_prefilled_row_resumes(setup):
+    """A PREFILLING row can lose its pages mid-chunking: an older decoder
+    holds part of a pool the long prompt needs, the chunk loop's page
+    reclaim preempts the (younger) half-prefilled row itself, and its
+    re-admission must still produce solo-identical tokens."""
+    cfg, params, _ = setup
+    cfg = dataclasses.replace(cfg, cache_layout="packed", cache_block=8)
+    page_b, _ = _pool_page_bytes(cfg)
+    rng = np.random.default_rng(23)
+    short = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    long = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)  # 5 blocks
+    server = Server(cfg, params,
+                    ServerConfig(max_slots=2, max_seq=64, cache_mode="paged",
+                                 pool_hbm_bytes=5 * page_b,
+                                 prefill_chunk_tokens=8),
+                    q_chunk=32, kv_chunk=32)
+    h_short = server.submit(Request(prompt=short, max_new_tokens=16))
+    server.step()  # the short decoder admits first (it is the OLDER row)
+    h_long = server.submit(Request(prompt=long, max_new_tokens=4))
+    server.run()
+    pf = server.stats()["prefill"]
+    assert pf["prefill_preemptions"] >= 1, \
+        "workload failed to preempt a half-prefilled row"
+    assert h_short.result().tokens.tolist() == _solo_greedy(cfg, params,
+                                                            short, 16)
+    assert h_long.result().tokens.tolist() == _solo_greedy(cfg, params,
+                                                           long, 4)
+    assert server.stats()["pool"]["pages_live"] == 0

@@ -345,3 +345,30 @@ def test_paged_submit_rejection_names_both_knobs(setup):
         srv.submit(Request(prompt=np.zeros(64, np.int32), max_new_tokens=32))
     assert "pool_hbm_bytes=" in str(ei.value)
     assert "--pool-bytes" in str(ei.value)
+
+
+@pytest.mark.parametrize("share", ["on", "noshare"])
+def test_chunked_vs_solo_admission_bit_identity_prefix(setup, share):
+    """Bit-identity matrix, prefix legs: interleaved chunked admission over
+    the radix index (hits splice cached pages into a mid-flight task) must
+    match the blocking solo drain token for token, sharing on or off."""
+    cfg, params = setup
+    rng = np.random.default_rng(17)
+    shared = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    reqs = [Request(prompt=np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, 3 + i).astype(np.int32)]),
+                    max_new_tokens=5) for i in range(3)]
+    outs = {}
+    for mode in ("chunked", "solo"):
+        srv = Server(cfg, params,
+                     ServerConfig(max_slots=2, max_seq=256,
+                                  cache_mode="paged", prefix_cache=share,
+                                  prefill_mode=mode,
+                                  prefill_chunk_tokens=8),
+                     q_chunk=32, kv_chunk=32)
+        hs = [srv.submit(r) for r in reqs]
+        srv.run()
+        outs[mode] = [h.result().tokens.tolist() for h in hs]
+        if share == "on":
+            assert srv.stats()["prefix"]["hits"] >= 1, mode
+    assert outs["chunked"] == outs["solo"]

@@ -26,13 +26,22 @@ def setup():
 
 
 def _solo_greedy(cfg, params, prompt, n_new, eos_id=None):
-    """Independent oracle: B=1 prefill at the exact prompt length, then
-    step-by-step greedy decode, truncated at eos."""
-    lg, state = M.prefill(params, cfg, {"tokens": jnp.asarray(prompt)[None, :]},
-                          256, q_chunk=32, kv_chunk=32)
-    cur = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+    """Independent oracle: B=1 block-chunked prefill — the server's unified
+    admission semantics, where each chunk attends earlier blocks through
+    the compressed store exactly as decode will — then step-by-step greedy
+    decode, truncated at eos."""
+    prompt = np.asarray(prompt, np.int32)
+    T = M.cache_specs(cfg, 256)[0].block_size
+    state = M.init_decode_state(cfg, 1, 256)
+    lg, pos = None, 0
+    while pos < len(prompt):
+        C = min(T, len(prompt) - pos)
+        lg, state = M.prefill_chunk(params, cfg,
+                                    jnp.asarray(prompt[None, pos:pos + C]),
+                                    jnp.int32(pos), state)
+        pos += C
+    cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
     out = [int(cur[0])]
-    pos = len(prompt)
     while len(out) < n_new and (eos_id is None or out[-1] != eos_id):
         lg, state = M.decode_step(params, cfg, cur,
                                   jnp.asarray(pos, jnp.int32), state)
@@ -144,3 +153,82 @@ def test_single_token_budget_never_occupies_slot(setup):
     for p, h in zip(prompts, hs):
         assert h.result().tokens.tolist() == _solo_greedy(cfg, params, p, 1)
     assert server.active == 0
+
+
+def test_prefill_chunk_tokens_validation(setup):
+    """Satellite regression: the chunk-budget knob is validated by NAME —
+    positivity at config construction (mirroring CacheSpec's
+    window % block_size check), block-multiplicity against the resolved
+    spec at server construction."""
+    cfg, params, _ = setup
+    for bad in (0, -8):
+        with pytest.raises(ValueError, match="prefill_chunk_tokens"):
+            ServerConfig(prefill_chunk_tokens=bad)
+    with pytest.raises(ValueError, match="prefill_mode"):
+        ServerConfig(prefill_mode="sometimes")
+    T = M.cache_specs(cfg, 256)[0].block_size
+    with pytest.raises(ValueError) as e:
+        Server(cfg, params, ServerConfig(max_slots=2, max_seq=256,
+                                         prefill_chunk_tokens=T + 1),
+               q_chunk=32, kv_chunk=32)
+    assert "prefill_chunk_tokens" in str(e.value)
+    assert "block_size" in str(e.value)
+
+
+@pytest.mark.parametrize("layout", ["raw", "packed", "kivi", "huffman"])
+def test_chunked_vs_solo_admission_bit_identity_dense(setup, layout):
+    """Bit-identity matrix, dense leg: interleaved chunked admission (the
+    default) must produce the same greedy tokens as the blocking solo
+    baseline on every layout — both run the unified chunk loop, so this
+    holds exactly, not approximately."""
+    cfg, params, prompts = setup
+    cfg = dataclasses.replace(cfg, cache_layout=layout, cache_block=8)
+    outs = {}
+    for mode in ("chunked", "solo"):
+        server = Server(cfg, params,
+                        ServerConfig(max_slots=2, max_seq=256,
+                                     prefill_mode=mode,
+                                     prefill_chunk_tokens=8),
+                        q_chunk=32, kv_chunk=32)
+        hs = [server.submit(Request(prompt=p, max_new_tokens=n))
+              for p, n in zip(prompts[:3], NEWS[:3])]
+        server.run()
+        outs[mode] = [h.result().tokens.tolist() for h in hs]
+        pf = server.stats()["prefill"]
+        assert pf["mode"] == mode
+        assert pf["prefill_tokens"] == sum(len(p) for p in prompts[:3])
+        if mode == "chunked":
+            # chunked admission never freezes a live batch wholesale...
+            assert pf["stalled_decode_steps"] == 0
+            assert pf["chunks"] >= sum(-(-len(p) // 8) for p in prompts[:3])
+            assert pf["coscheduled_tokens"] > 0
+        else:
+            # ...solo admission (queue deeper than slots) always does
+            assert pf["stalled_decode_steps"] > 0
+    assert outs["chunked"] == outs["solo"]
+    for toks, n in zip(outs["chunked"], NEWS[:3]):
+        assert len(toks) == n
+
+
+def test_queue_wait_and_token_times_decomposition(setup):
+    """Satellite: Result splits queue wait from prefill+generation and
+    stamps every token — monotonic times, TTFT consistent, queued
+    requests waiting longer than slot-admitted ones."""
+    cfg, params, prompts = setup
+    cfg = dataclasses.replace(cfg, cache_layout="raw")
+    server = Server(cfg, params, ServerConfig(max_slots=1, max_seq=256),
+                    q_chunk=32, kv_chunk=32)
+    hs = [server.submit(Request(prompt=p, max_new_tokens=4))
+          for p in prompts[:3]]
+    server.run()
+    rs = [h.result() for h in hs]
+    for h, r in zip(hs, rs):
+        assert len(r.token_times) == len(r.tokens)
+        assert list(r.token_times) == sorted(r.token_times)
+        assert r.ttft_s >= r.queue_wait_s >= 0
+        # the decomposition anchors: TTFT is first-token stamp minus
+        # submit, queue wait ends when prefill work first touches the row
+        assert r.ttft_s == pytest.approx(r.token_times[0] - h._t_submit)
+        assert r.queue_wait_s == pytest.approx(h._t_first - h._t_submit)
+    # one slot: the 3rd request queues behind two full generations
+    assert rs[2].queue_wait_s > rs[0].queue_wait_s
