@@ -31,6 +31,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import pool as blockpool
 from repro.models import model as M
 from repro.models import registry
@@ -65,7 +66,8 @@ def run_mode(cfg, params, reqs, mode: str, budget: int, max_slots: int,
     wall = time.monotonic() - t0
     toks = sum(len(h.result().tokens) for h in handles)
     out = {"admitted_peak": peak, "tokens": toks, "wall_s": wall,
-           "tok_s": toks / wall}
+           "tok_s": toks / wall,
+           "metrics": obs.bench_columns(server)}
     st = server.stats()
     if "pool" in st:
         out["preemptions"] = st["preemptions"]
@@ -142,6 +144,8 @@ def main():
                   f"capacity x{ratio:.2f}  "
                   f"preempt={paged.get('preemptions', 0)}")
         bench["layouts"][layout] = entry
+        # registry-sourced columns for run.py's CSV (last paged leg)
+        bench["metrics"] = paged["metrics"]
 
     Path(args.out).write_text(json.dumps(bench, indent=2))
     print(f"wrote {args.out}")

@@ -41,6 +41,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro import obs
 from repro.models import model as M
 from repro.models import registry
 from repro.serve.scheduler import Request, Server, ServerConfig
@@ -88,7 +89,8 @@ def run_mode(cfg, params, reqs, mode: str, max_slots: int, max_seq: int,
              "reused_tokens": px["reused_tokens"],
              "hit_rate": px["hit_rate"] if mode == "on" else 0.0,
              "prefill_flops": prefill_flops(cfg, px),
-             "preemptions": st["preemptions"]}
+             "preemptions": st["preemptions"],
+             "metrics": obs.bench_columns(server)}
     return entry, outs
 
 
@@ -149,6 +151,8 @@ def main():
              / max(bench["modes"]["on"]["prefill_flops"], 1))
     bench["bit_identical"] = identical
     bench["prefill_flops_saved_x"] = saved
+    # registry-sourced columns for run.py's CSV (the sharing leg)
+    bench["metrics"] = bench["modes"]["on"]["metrics"]
     print(f"bit_identical={identical}  prefill_flops_saved=x{saved:.2f}")
 
     Path(args.out).write_text(json.dumps(bench, indent=2))

@@ -1,6 +1,9 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+Prints ``name,us_per_call,derived`` CSV plus the registry-sourced serving
+columns (``repro.obs.BENCH_COLUMNS``: TTFT/ITL p50+p99, preemptions,
+copy-on-write breaks — read from each serving suite's ``BENCH_*.json``
+``"metrics"`` block; figure suites leave them empty).
 
     PYTHONPATH=src python -m benchmarks.run                # everything
     PYTHONPATH=src python -m benchmarks.run --only ratio_k # one figure
@@ -9,10 +12,13 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
 import time
+
+from repro.obs import BENCH_COLUMNS
 
 SUITES = [
     ("accuracy_sweep", "paper Fig. 5/6: accuracy vs rel quant scale"),
@@ -30,6 +36,36 @@ SUITES = [
 ]
 
 
+# Which BENCH_*.json each script suite writes — where its registry-sourced
+# CSV columns come from (obs.bench_columns embedded under "metrics").
+BENCH_JSON = {
+    "serve_throughput": "BENCH_serve.json",
+    "decode_path": "BENCH_decode.json",
+    "pool_pressure": "BENCH_pool.json",
+    "prefix_reuse": "BENCH_prefix.json",
+    "shard_scaling": "BENCH_shard.json",
+}
+
+
+def metric_cols(mod_name: str) -> str:
+    """The trailing CSV cells for one suite row: values from the suite's
+    ``BENCH_*.json`` ``"metrics"`` block in ``BENCH_COLUMNS`` order, empty
+    cells when the suite has no serving registry behind it."""
+    path = BENCH_JSON.get(mod_name)
+    if path and os.path.exists(path):
+        m = json.loads(open(path).read()).get("metrics") or {}
+    else:
+        m = {}
+
+    def cell(k):
+        v = m.get(k)
+        if v is None:
+            return ""
+        return str(v) if isinstance(v, int) else f"{v:.6g}"
+
+    return "".join("," + cell(k) for k in BENCH_COLUMNS)
+
+
 def run_one(mod_name: str) -> int:
     """Run one suite in-process (used by the per-suite subprocess).
 
@@ -38,17 +74,18 @@ def run_one(mod_name: str) -> int:
     (``main()`` + ``--smoke``) that write their own ``BENCH_*.json`` — those
     run under ``--smoke`` and report one pass/fail CSV row here.
     """
+    empty = "," * len(BENCH_COLUMNS)
     mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
     if hasattr(mod, "run"):
         for name, us, derived in mod.run():
-            print(f"{name},{us:.1f},{derived}", flush=True)
+            print(f"{name},{us:.1f},{derived}{empty}", flush=True)
         return 0
     argv, sys.argv = sys.argv, [f"benchmarks/{mod_name}.py", "--smoke"]
     try:
         t0 = time.time()
         mod.main()
-        print(f"{mod_name},{(time.time() - t0) * 1e6:.1f},smoke_ok",
-              flush=True)
+        print(f"{mod_name},{(time.time() - t0) * 1e6:.1f},smoke_ok"
+              f"{metric_cols(mod_name)}", flush=True)
     finally:
         sys.argv = argv
     return 0
@@ -65,7 +102,7 @@ def main() -> None:
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
-    print("name,us_per_call,derived", flush=True)
+    print("name,us_per_call,derived," + ",".join(BENCH_COLUMNS), flush=True)
     failures = 0
     for mod_name, desc in SUITES:
         if want and mod_name not in want:
@@ -76,7 +113,8 @@ def main() -> None:
                 run_one(mod_name)
             except Exception as e:  # noqa: BLE001
                 failures += 1
-                print(f"{mod_name}_FAILED,0,{type(e).__name__}:{e}", flush=True)
+                print(f"{mod_name}_FAILED,0,{type(e).__name__}:{e}"
+                      + "," * len(BENCH_COLUMNS), flush=True)
         else:
             code = (
                 "from benchmarks.run import run_one; "
@@ -93,7 +131,8 @@ def main() -> None:
             sys.stdout.flush()
             if r.returncode != 0:
                 failures += 1
-                print(f"{mod_name}_FAILED,0,subprocess_exit_{r.returncode}", flush=True)
+                print(f"{mod_name}_FAILED,0,subprocess_exit_{r.returncode}"
+                      + "," * len(BENCH_COLUMNS), flush=True)
         print(f"# {mod_name} ({desc}) took {time.time() - t0:.1f}s",
               file=sys.stderr, flush=True)
     if failures:

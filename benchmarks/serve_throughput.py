@@ -38,6 +38,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro import obs
 from repro.models import model as M
 from repro.models import registry
 from repro.serve.engine import EngineConfig, LockstepEngine, Request
@@ -166,6 +167,20 @@ def main():
                     help="exit non-zero unless chunked admission cuts the "
                          "mixed leg's p99 inter-token latency >=2x vs solo "
                          "at >=0.9x aggregate tok/s (CI gate)")
+    ap.add_argument("--trace", default="off",
+                    choices=("off", "events", "full"),
+                    help="scheduler event-trace level for the Server runs "
+                         "(DESIGN.md §14); 'off' keeps the hot path "
+                         "event-free")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the last layout server's Chrome trace-event "
+                         "JSON here (needs --trace events|full)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the last layout server's metrics snapshot "
+                         "(JSON + .prom exposition sibling) here")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler device trace of the "
+                         "measured layout runs into this directory")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     if args.smoke:
@@ -190,34 +205,45 @@ def main():
                           "prompt_lens": [len(r.prompt) for r in reqs],
                           "max_new_tokens": [r.max_new_tokens for r in reqs]},
              "slots": args.slots, "layouts": {}}
-    for layout in args.layouts.split(","):
-        cfg = dataclasses.replace(cfg0, cache_layout=layout)
-        server = Server(cfg, params,
-                        ServerConfig(max_slots=args.slots, max_seq=args.max_seq,
-                                     policy="ljf"),
-                        q_chunk=32, kv_chunk=32)
-        legacy = LockstepEngine(cfg, params,
-                                EngineConfig(bucket=32, max_batch=args.slots,
-                                             max_seq=args.max_seq),
-                                q_chunk=32, kv_chunk=32)
-        run_server(server, reqs)      # jit warmup (same compiled closures)
-        run_lockstep(legacy, reqs)
-        # interleaved repeats + median: CPU walls at this scale are noisy,
-        # and alternating the engines exposes both to the same drift
-        srv_runs, old_runs = [], []
-        for _ in range(args.repeats):
-            srv_runs.append(run_server(server, reqs))
-            old_runs.append(run_lockstep(legacy, reqs))
-        srv = sorted(srv_runs, key=lambda r: r["tok_s"])[args.repeats // 2]
-        old = sorted(old_runs, key=lambda r: r["tok_s"])[args.repeats // 2]
-        srv["kv_cache_bytes"] = server.memory_report()["kv_bytes"]
-        entry = {"server": srv, "legacy_bucket": old,
-                 "speedup": srv["tok_s"] / old["tok_s"]}
-        bench["layouts"][layout] = entry
-        print(f"[{layout:8s}] server {srv['tok_s']:7.1f} tok/s  "
-              f"legacy {old['tok_s']:7.1f} tok/s  "
-              f"speedup {entry['speedup']:.2f}x  "
-              f"kv_cache {srv['kv_cache_bytes']:,}B")
+    server = None
+    with obs.trace_capture(args.profile_dir):
+        for layout in args.layouts.split(","):
+            cfg = dataclasses.replace(cfg0, cache_layout=layout)
+            server = Server(cfg, params,
+                            ServerConfig(max_slots=args.slots,
+                                         max_seq=args.max_seq,
+                                         policy="ljf", trace=args.trace),
+                            q_chunk=32, kv_chunk=32)
+            legacy = LockstepEngine(cfg, params,
+                                    EngineConfig(bucket=32,
+                                                 max_batch=args.slots,
+                                                 max_seq=args.max_seq),
+                                    q_chunk=32, kv_chunk=32)
+            run_server(server, reqs)  # jit warmup (same compiled closures)
+            run_lockstep(legacy, reqs)
+            # interleaved repeats + median: CPU walls at this scale are
+            # noisy, and alternating the engines exposes both to the same
+            # drift
+            srv_runs, old_runs = [], []
+            for _ in range(args.repeats):
+                srv_runs.append(run_server(server, reqs))
+                old_runs.append(run_lockstep(legacy, reqs))
+            srv = sorted(srv_runs, key=lambda r: r["tok_s"])[args.repeats // 2]
+            old = sorted(old_runs, key=lambda r: r["tok_s"])[args.repeats // 2]
+            srv["kv_cache_bytes"] = server.memory_report()["kv_bytes"]
+            entry = {"server": srv, "legacy_bucket": old,
+                     "speedup": srv["tok_s"] / old["tok_s"]}
+            bench["layouts"][layout] = entry
+            print(f"[{layout:8s}] server {srv['tok_s']:7.1f} tok/s  "
+                  f"legacy {old['tok_s']:7.1f} tok/s  "
+                  f"speedup {entry['speedup']:.2f}x  "
+                  f"kv_cache {srv['kv_cache_bytes']:,}B")
+    # Registry-sourced columns (last layout's server): what run.py splices
+    # into its CSV rows and the CI artifacts expose.
+    bench["metrics"] = obs.bench_columns(server)
+    if args.metrics_out or args.trace_out:
+        server.shutdown(metrics_out=args.metrics_out,
+                        trace_out=args.trace_out)
 
     walls = [(v["server"]["wall_s"], v["legacy_bucket"]["wall_s"],
               v["server"]["tokens"]) for v in bench["layouts"].values()]

@@ -41,6 +41,7 @@ def child_main(args) -> None:
     import jax
     import numpy as np
 
+    from repro import obs
     from repro.core import pool as blockpool
     from repro.launch.mesh import make_serve_mesh
     from repro.models import model as M
@@ -92,6 +93,7 @@ def child_main(args) -> None:
         "preemptions": st["preemptions"],
         "per_device_budget_bytes": per_device,
         "shards": st["shards"]["per_shard"],
+        "metrics": obs.bench_columns(server),
     }
     print(json.dumps(out))
 
@@ -157,6 +159,8 @@ def main():
     bench["capacity_ratio"] = (last["admitted_peak"]
                                / max(first["admitted_peak"], 1))
     bench["tok_s_ratio"] = last["tok_s"] / first["tok_s"]
+    # registry-sourced columns for run.py's CSV (largest mesh's run)
+    bench["metrics"] = last["metrics"]
     Path(args.out).write_text(json.dumps(bench, indent=2))
     print(f"wrote {args.out}  capacity x{bench['capacity_ratio']:.2f} "
           f"({counts[0]} -> {counts[-1]} devices)")

@@ -77,20 +77,11 @@ def main():
     paged_toks = [h.result().tokens for h in handles]
     agree = np.mean([(r.tokens == t).mean()
                      for r, t in zip(results["packed"][0], paged_toks)])
-    st = server.stats()
-    pl = st["pool"]
-    print(f"[paged   ] packed tokens agree with dense: {agree:5.1%}  "
-          f"pool={pl['pages_total']} pages x {pl['bytes_per_page']}B  "
-          f"high-water {pl['high_water_pages']} pages "
-          f"({pl['high_water_pages'] * pl['bytes_per_page']:,}B live peak)  "
-          f"preemptions={st['preemptions']}")
-    if "shards" in st:
-        # multi-device serving (DESIGN.md §12) reports per-shard pressure;
-        # on a single device this is one shard covering the whole pool.
-        sh = st["shards"]
-        per = " ".join(f"s{i}:{p['pages_live']}L/{p['pages_free']}F"
-                       for i, p in enumerate(sh["per_shard"]))
-        print(f"  shards: data={sh['n_data']} model={sh['n_model']} {per}")
+    print(f"[paged   ] packed tokens agree with dense: {agree:5.1%}")
+    # One schema, one printer (DESIGN.md §14): stats() is the registry
+    # snapshot and format_snapshot the shared renderer — pool occupancy,
+    # shard pressure, and latency quantiles in the documented layout.
+    print(api.obs.format_snapshot(server.stats()))
 
 
 if __name__ == "__main__":

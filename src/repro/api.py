@@ -28,6 +28,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs  # noqa: F401  (observability facade: DESIGN.md §14)
 from repro.core import cache as kvcache
 from repro.core import huffman, layouts, quant
 from repro.core.policy import CompressionPolicy, LayerOverride, TensorPolicy  # noqa: F401
@@ -39,7 +40,7 @@ __all__ = [
     "available_layouts", "register_layout", "make_spec", "make_cache",
     "available_backends", "register_backend",
     "compress", "decompress", "append", "attend", "estimate_ratio",
-    "serve", "Server", "ServerConfig", "Request", "Handle",
+    "serve", "Server", "ServerConfig", "Request", "Handle", "obs",
 ]
 
 register_layout = layouts.register_layout
@@ -55,6 +56,7 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
           mesh=None,
           prefill_mode: str = "chunked",
           prefill_chunk_tokens: int | None = None,
+          trace: str = "off",
           q_chunk: int = 512, kv_chunk: int = 512) -> Server:
     """Launch a continuous-batching server over ``cfg``'s cache policy.
 
@@ -95,6 +97,12 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
     prefill. Greedy outputs are bit-identical either way;
     ``server.stats()["prefill"]`` reports chunks in flight and tokens
     co-scheduled with decode.
+    ``trace`` (DESIGN.md §14) turns on the ring-buffered scheduler event
+    trace ("events" records every scheduling decision, "full" adds decode
+    dispatch spans); ``server.trace.write_chrome(path)`` — or
+    ``server.shutdown(trace_out=...)`` — exports it as Perfetto-loadable
+    Chrome trace-event JSON, and ``server.metrics`` is the typed registry
+    behind ``server.stats()``.
     """
     return Server(cfg, params,
                   ServerConfig(max_slots=max_slots, max_seq=max_seq,
@@ -105,7 +113,8 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
                                prefix_cache=prefix_cache,
                                mesh=mesh,
                                prefill_mode=prefill_mode,
-                               prefill_chunk_tokens=prefill_chunk_tokens),
+                               prefill_chunk_tokens=prefill_chunk_tokens,
+                               trace=trace),
                   q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitpack, layouts, pool
+from repro.obs.profiling import annotate
 
 Array = jax.Array
 
@@ -432,7 +433,8 @@ def attend_blockwise(cache: LayerKVCache, q: Array,
     if scale is None:
         scale = 1.0 / math.sqrt(D)
     qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
-    m, l, acc = _store_scan(cache, qg, scale, span)
+    with annotate("blockwise_span_scan"):
+        m, l, acc = _store_scan(cache, qg, scale, span)
     out = kref.combine_with_buffer_ref(
         acc.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq),
         q, cache.k_buf, cache.v_buf, cache.buf_len, scale=scale)

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitpack, huffman
+from repro.obs.profiling import annotate
 
 Array = jax.Array
 
@@ -768,7 +769,8 @@ class HuffmanLayout(PackedLayout):
             nbits = _unpack_u16_pairs(slot[:hdr_w], T)
             return huffman.decode_block_lut_jax(slot[hdr_w:], nbits, lut, D, probes)
 
-        codes = jax.vmap(dec)(store.reshape(B * H * NB, -1))
+        with annotate("huffman_lut_decode"):
+            codes = jax.vmap(dec)(store.reshape(B * H * NB, -1))
         return codes.reshape(B, H, NB, T, D)
 
     def write_blocks(self, spec, cache, slots, kb, vb):

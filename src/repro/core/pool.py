@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import Counter, Gauge
+
 Array = jax.Array
 
 STORE_FIELDS = ("k_store", "k_min", "k_step", "v_store", "v_min", "v_step")
@@ -120,7 +122,16 @@ class PagedBlockPool:
             range(self.offset + self.n_pages - 1, self.offset - 1, -1))
         self._live: set[int] = set()
         self._ref: dict[int, int] = {}  # page -> outstanding references
-        self.high_water = 0
+        # Typed metrics (DESIGN.md §14): standalone objects here, adopted by
+        # the serving Server's MetricsRegistry under ``pool.*`` names.
+        self.m_high_water = Gauge()
+        self.m_alloc_pages = Counter()
+        self.m_freed_pages = Counter()
+
+    @property
+    def high_water(self) -> int:
+        """Most pages ever simultaneously live (gauge-backed)."""
+        return int(self.m_high_water.value)
 
     def owns(self, page) -> bool:
         """Whether ``page`` falls in this pool's id range (live or not)."""
@@ -148,7 +159,8 @@ class PagedBlockPool:
         self._live.update(pages)
         for p in pages:
             self._ref[p] = 1
-        self.high_water = max(self.high_water, len(self._live))
+        self.m_alloc_pages.inc(n)
+        self.m_high_water.set_max(len(self._live))
         return pages
 
     def retain(self, pages) -> None:
@@ -178,6 +190,7 @@ class PagedBlockPool:
                 self._live.remove(p)
                 self._free.append(p)
                 freed.append(p)
+        self.m_freed_pages.inc(len(freed))
         return freed
 
     def refcount(self, page) -> int:
@@ -203,6 +216,8 @@ class PagedBlockPool:
             "pages_live": self.live_pages,
             "pages_free": self.free_pages,
             "high_water_pages": self.high_water,
+            "alloc_pages": self.m_alloc_pages.value,
+            "freed_pages": self.m_freed_pages.value,
             "refs_total": sum(self._ref.values()),
             "pages_shared": sum(1 for c in self._ref.values() if c > 1),
             "bytes_per_page": self.bytes_per_page,

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.fused_kv_attn import fused_cache_attention_pallas
 from repro.kernels.runtime import resolve_impl, resolve_interpret  # noqa: F401  (re-export)
+from repro.obs.profiling import annotate
 
 Array = jax.Array
 
@@ -156,15 +157,18 @@ def fused_cache_attention(
     if scale is None:
         scale = 1.0 / math.sqrt(D)
     kw = dict(tile=tile, block_size=block_size, scale=scale)
-    if impl == "pallas":
-        out = fused_cache_attention_pallas(
-            q, k_store, k_min, k_step, v_store, v_min, v_step,
-            k_buf, v_buf, nb_valid, buf_len, page_tab, interpret=interpret,
-            **kw)
-    else:
-        out = ref.fused_cache_attention_ref(
-            q, k_store, k_min, k_step, v_store, v_min, v_step,
-            k_buf, v_buf, nb_valid, buf_len, page_tab, **kw)
+    # Profiling attribution (DESIGN.md §14): device profiles tag this whole
+    # fused in-situ-decompression attention as one named compression stage.
+    with annotate("fused_attention"):
+        if impl == "pallas":
+            out = fused_cache_attention_pallas(
+                q, k_store, k_min, k_step, v_store, v_min, v_step,
+                k_buf, v_buf, nb_valid, buf_len, page_tab,
+                interpret=interpret, **kw)
+        else:
+            out = ref.fused_cache_attention_ref(
+                q, k_store, k_min, k_step, v_store, v_min, v_step,
+                k_buf, v_buf, nb_valid, buf_len, page_tab, **kw)
     return out.astype(q.dtype)
 
 
@@ -208,9 +212,10 @@ def quant_pack(
 ):
     """Store-stage compression of [NBLK, T, D] raw blocks."""
     impl = resolve_impl(impl)
-    if impl == "pallas":
-        from repro.kernels.pack_encode import quant_pack_pallas
+    with annotate("pack_encode"):
+        if impl == "pallas":
+            from repro.kernels.pack_encode import quant_pack_pallas
 
-        return quant_pack_pallas(x, rel_scale, bits, token_wise,
-                                 interpret=interpret)
-    return ref.quant_pack_ref(x, rel_scale, bits, token_wise)
+            return quant_pack_pallas(x, rel_scale, bits, token_wise,
+                                     interpret=interpret)
+        return ref.quant_pack_ref(x, rel_scale, bits, token_wise)

@@ -75,6 +75,18 @@ def main():
                          "heads over tp; on CPU export "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N "
                          "first")
+    ap.add_argument("--trace", default="off",
+                    choices=["off", "events", "full"],
+                    help="scheduler event trace (DESIGN.md §14): events "
+                         "records every scheduling decision in a ring "
+                         "buffer, full adds decode dispatch spans; off "
+                         "keeps the hot path event-free")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the event trace as Chrome trace-event JSON "
+                         "(open in Perfetto; needs --trace events|full)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics snapshot as JSON here, plus a "
+                         ".prom Prometheus-text sibling")
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config(args.arch)
@@ -92,7 +104,7 @@ def main():
                        prefix_cache=args.prefix_cache,
                        prefill_mode=args.prefill_mode,
                        prefill_chunk_tokens=args.prefill_chunk,
-                       mesh=mesh)
+                       mesh=mesh, trace=args.trace)
     rng = np.random.default_rng(0)
     # With the prefix cache enabled, requests share a system-prompt prefix
     # (half of --prompt-len) so the printed hit-rate exercises real reuse.
@@ -120,35 +132,13 @@ def main():
           f"requests={len(results)} slots={args.max_slots} tokens={total} "
           f"throughput={total / wall:.1f} tok/s "
           f"kv_cache_bytes={rep['kv_bytes']:,}")
-    st = server.stats()
-    pf = st["prefill"]
-    print(f"  prefill[{pf['mode']}]: chunk_tokens={pf['chunk_tokens']} "
-          f"tokens={pf['prefill_tokens']} chunks={pf['chunks']} "
-          f"coscheduled={pf['coscheduled_tokens']} "
-          f"stalled_decode_steps={pf['stalled_decode_steps']} "
-          f"preemptions={pf['prefill_preemptions']}")
-    if "pool" in st:
-        pl = st["pool"]
-        print(f"  pool: {pl['pages_total']} pages x {pl['bytes_per_page']}B "
-              f"(high water {pl['high_water_pages']}, "
-              f"{pl['bytes_total']:,}B total) "
-              f"preemptions={st['preemptions']}")
-    if "shards" in st:
-        sh = st["shards"]
-        per = " ".join(
-            f"s{i}:{p['pages_live']}L/{p['pages_free']}F"
-            f"(hw {p['high_water_pages']}, pre {p['preemptions']})"
-            for i, p in enumerate(sh["per_shard"]))
-        print(f"  shards: data={sh['n_data']} model={sh['n_model']} {per}")
-    if "prefix" in st:
-        px, pl = st["prefix"], st["pool"]
-        print(f"  prefix[{px['mode']}]: hit_rate={px['hit_rate']:.2f} "
-              f"({px['hits']}/{px['lookups']} lookups) "
-              f"reused_tokens={px['reused_tokens']} "
-              f"prefill_tokens={px['prefill_tokens']} "
-              f"resumes={px['resumes']} cow_breaks={px['cow_breaks']} "
-              f"refs_total={pl['refs_total']} "
-              f"pages_shared={pl['pages_shared']}")
+    # One schema, one printer: stats() is the registry snapshot and
+    # format_snapshot is the shared renderer (DESIGN.md §14) — the old
+    # hand-rolled section printers drifted between launchers.
+    print(api.obs.format_snapshot(server.stats()))
+    if args.metrics_out or args.trace_out:
+        server.shutdown(metrics_out=args.metrics_out,
+                        trace_out=args.trace_out)
     for i, r in enumerate(results[:4]):
         print(f"  req{i}: prompt_len={r.prompt_len} n_tokens={len(r.tokens)} "
               f"queue={r.queue_wait_s * 1e3:.0f}ms "

@@ -1,0 +1,72 @@
+"""Kernel profiling hooks: named scopes for compression stages and opt-in
+``jax.profiler`` capture (DESIGN.md §14).
+
+The Real-TPU ROADMAP item needs device profiles that attribute time to the
+*compression* stages KVComp adds — fused in-situ-decompression attention,
+the ``pack_encode`` Store path, the huffman LUT decode, the blockwise span
+loop — not one undifferentiated jit blob.  ``annotate(name)`` wraps a
+region in ``jax.named_scope`` so the XLA ops it traces carry the name into
+any profile (TensorBoard, Perfetto, ``xprof``); it is a trace-time-only
+construct with zero runtime cost, safe on every hot path.  ``annotation``
+is the *runtime* counterpart (``jax.profiler.TraceAnnotation``) for host
+regions, and ``trace_capture(dir)`` brackets a block with
+``jax.profiler.start_trace``/``stop_trace`` — the hook behind
+``benchmarks/serve_throughput.py --profile-dir``.
+
+Every entry degrades to a no-op when the running jax build lacks the
+profiler pieces, so annotated library code never gains a hard dependency.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["annotate", "annotation", "trace_capture"]
+
+SCOPE_PREFIX = "kvcomp"
+
+
+def annotate(name: str):
+    """Trace-time scope for jitted code: ops created inside carry
+    ``kvcomp/<name>`` into profiles.  Usable as context manager or
+    decorator (``jax.named_scope`` supports both)."""
+    return jax.named_scope(f"{SCOPE_PREFIX}/{name}")
+
+
+@contextlib.contextmanager
+def annotation(name: str):
+    """Runtime (host-side) profiler annotation around a region — shows up
+    as a track slice in a captured ``jax.profiler`` trace."""
+    ta = getattr(jax.profiler, "TraceAnnotation", None)
+    if ta is None:  # profiler build without annotations: free no-op
+        yield
+        return
+    with ta(f"{SCOPE_PREFIX}:{name}"):
+        yield
+
+
+@contextlib.contextmanager
+def trace_capture(log_dir: str | None):
+    """Capture a ``jax.profiler`` device+host trace into ``log_dir`` for
+    the duration of the block; ``None`` disables (the default path costs
+    nothing).  Capture failures degrade to a warning-free no-op — CI boxes
+    without profiler support must not fail the benchmark around it."""
+    if not log_dir:
+        yield
+        return
+    started = False
+    try:
+        jax.profiler.start_trace(str(log_dir))
+        started = True
+    except Exception:  # noqa: BLE001 — profiling is best-effort by design
+        pass
+    try:
+        yield
+    finally:
+        if started:
+            try:
+                jax.profiler.stop_trace()
+            except Exception:  # noqa: BLE001
+                pass

@@ -33,6 +33,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.metrics import Counter
+
 
 class _Node:
     __slots__ = ("key", "page", "parent", "children", "stamp")
@@ -55,8 +57,18 @@ class PrefixIndex:
         self._children: dict[bytes, _Node] = {}  # root's children
         self._clock = 0
         self._n_blocks = 0
-        self.inserted_blocks = 0
-        self.evicted_blocks = 0
+        # Typed metrics (DESIGN.md §14): standalone Counters, adopted under
+        # ``prefix.index.*`` by the serving Server's MetricsRegistry.
+        self.m_inserted_blocks = Counter()
+        self.m_evicted_blocks = Counter()
+
+    @property
+    def inserted_blocks(self) -> int:
+        return self.m_inserted_blocks.value
+
+    @property
+    def evicted_blocks(self) -> int:
+        return self.m_evicted_blocks.value
 
     # -- internals ------------------------------------------------------------
     def _tick(self) -> int:
@@ -115,7 +127,7 @@ class PrefixIndex:
                 children[key] = node
                 created += 1
                 self._n_blocks += 1
-                self.inserted_blocks += 1
+                self.m_inserted_blocks.inc()
             node.stamp = stamp
             parent = node
             children = node.children
@@ -143,7 +155,7 @@ class PrefixIndex:
                         else self._children)
             del siblings[victim.key]
             self._n_blocks -= 1
-            self.evicted_blocks += 1
+            self.m_evicted_blocks.inc()
             evicted += 1
         return evicted
 

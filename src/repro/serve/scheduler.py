@@ -54,6 +54,14 @@ next physical page just before the flush that needs it, and on pool
 exhaustion the youngest request is preempted — pages freed, prompt replayed
 on re-admission — leaving greedy tokens bit-identical to solo runs.
 
+Observability (DESIGN.md §14): every counter the server keeps lives in a
+``repro.obs.MetricsRegistry`` (``Server.metrics``) and ``stats()`` is a
+view over it with ONE schema — sharded and unsharded servers emit the same
+tree.  ``ServerConfig.trace`` turns on a ring-buffered structured event
+log (``Server.trace``) of every scheduler decision, stamped with the same
+monotonic floats ``Result`` timing is built from and exportable as a
+Perfetto-loadable Chrome trace (``Server.shutdown``).
+
 ``ServerConfig.prefix_cache`` (DESIGN.md §11) layers prefix sharing on top:
 admission switches to a block-chunked prefill whose per-block computation
 depends only on (params, earlier blocks' pages, block tokens), a radix
@@ -68,7 +76,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import json
 import time
+from pathlib import Path
 from typing import Iterator
 
 import jax
@@ -76,6 +86,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pool as blockpool
+from repro.obs import EventTrace, MetricsRegistry
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
@@ -166,6 +177,18 @@ class ServerConfig:
     # the cache block_size (checked against the model's spec at Server
     # construction, mirroring CacheSpec's window check).  None = 8 blocks.
     prefill_chunk_tokens: int | None = None
+    # Structured event trace (DESIGN.md §14):
+    #   "off"    — no events recorded; the trace call sites reduce to one
+    #              host branch per decision (zero events, zero added device
+    #              dispatches — greedy outputs bit-identical by construction).
+    #   "events" — every scheduler decision: admit, prefill chunk splice,
+    #              page-fault sweep outcome, CoW break, prefix hit/evict,
+    #              preempt/requeue, retire, token emission.
+    #   "full"   — "events" plus the per-step decode-dispatch firehose.
+    trace: str = "off"
+    # Ring capacity of the event trace; a longer run keeps the most recent
+    # window and reports how many events it dropped.
+    trace_capacity: int = 65536
 
     def __post_init__(self):
         if self.prefill_mode not in ("chunked", "solo"):
@@ -176,6 +199,9 @@ class ServerConfig:
             raise ValueError(
                 "prefill_chunk_tokens must be a positive multiple of the "
                 f"cache block_size, got {self.prefill_chunk_tokens}")
+        if self.trace not in ("off", "events", "full"):
+            raise ValueError(
+                f"trace must be off|events|full, got {self.trace!r}")
 
 
 class Handle:
@@ -189,6 +215,7 @@ class Handle:
     def __init__(self, server: "Server", request: Request):
         self._server = server
         self.request = request
+        self.id = -1  # request id, assigned by Server.submit (trace track)
         self._toks: list[int] = []
         self._finish: str | None = None
         self._prefill_s = 0.0
@@ -236,12 +263,24 @@ class Handle:
         """Record one generated token; returns True when the request is done
         (EOS seen or budget exhausted).  Tokens after EOS are never recorded
         — results are truncated at eos_id by construction."""
+        srv = self._server
         self._toks.append(int(tok))
         # Emission time of each NEW token index: after a (non-prefix)
         # preemption clears + replays the list, earlier indices keep the
         # stamp of their first production — the stream a caller saw.
+        # Fresh stamps feed the latency histograms and (when tracing) emit
+        # ``token`` events carrying the SAME float, so trace-reconstructed
+        # TTFT/ITL equal the Result fields exactly; replays observe nothing.
         if len(self._toks) > len(self._token_times):
-            self._token_times.append(time.monotonic())
+            t = time.monotonic()
+            self._token_times.append(t)
+            if len(self._token_times) == 1:
+                srv._h_ttft.observe(t - self._t_submit)
+            else:
+                srv._h_itl.observe(t - self._token_times[-2])
+            if srv._tr is not None:
+                srv._tr.emit("token", req=self.id, t=t,
+                             index=len(self._token_times) - 1)
         r = self.request
         if r.eos_id is not None and int(tok) == r.eos_id:
             self._finish = "eos"
@@ -250,6 +289,9 @@ class Handle:
         else:
             return False
         self._t_end = time.monotonic()
+        if srv._tr is not None:
+            srv._tr.emit("retire", req=self.id, t=self._t_end,
+                         reason=self._finish)
         return True
 
 
@@ -308,13 +350,28 @@ class Server:
         self._pos = np.zeros(B, np.int32)               # per-row decode position
         self._seq = 0                                   # admission counter
         self._row_seq = [0] * B                         # admission order per row
-        self.preemptions = 0
+        self._next_req_id = 0
+        # Observability (DESIGN.md §14): one registry carries every counter
+        # this server and its components (pool, prefix indexes) keep;
+        # ``stats()`` is a view over it.  The event trace records scheduler
+        # decisions when enabled; ``self._tr`` is the hot-path gate — None
+        # when tracing is off, so every call site is a single host branch.
+        self.metrics = MetricsRegistry()
+        self.trace = EventTrace(scfg.trace, scfg.trace_capacity)
+        self._tr = self.trace if self.trace.enabled else None
+        self._preemptions = self.metrics.counter("serve.preemptions")
+        self._h_ttft = self.metrics.histogram("serve.ttft_s")
+        self._h_itl = self.metrics.histogram("serve.itl_s")
+        self._h_queue = self.metrics.histogram("serve.queue_wait_s")
+        self._g_active = self.metrics.gauge("serve.active")
+        self._g_pending = self.metrics.gauge("serve.pending")
         # Chunked admission (DESIGN.md §13): PREFILLING rows by slot index.
         # A slot is busy while it appears in EITHER _slots or _prefill_tasks.
         self._prefill_tasks: dict[int, _PrefillTask] = {}
-        self._pf = {"prefill_tokens": 0, "chunks": 0,
-                    "coscheduled_tokens": 0, "stalled_decode_steps": 0,
-                    "prefill_preemptions": 0}
+        self._pf = {k: self.metrics.counter(f"serve.prefill.{k}")
+                    for k in ("prefill_tokens", "chunks",
+                              "coscheduled_tokens", "stalled_decode_steps",
+                              "prefill_preemptions")}
 
         # Chunk capability: the block-chunked prefill step exists only for
         # pure-KV families, and block-aligned chunks need one block_size
@@ -366,7 +423,9 @@ class Server:
         cfg_live = (dataclasses.replace(cfg, attn_backend="sharded")
                     if mesh is not None else cfg)
         self._slots_per_shard = B // self._n_data
-        self._preempt_by_shard = [0] * self._n_data
+        self._preempt_by_shard = [
+            self.metrics.counter(f"serve.shard{d}.preemptions")
+            for d in range(self._n_data)]
         if mesh is not None:
             serve_shard.set_serve_mesh(mesh, self._inner_backend)
 
@@ -400,8 +459,20 @@ class Server:
             if self._n_data > 1:
                 self.pool = serve_shard.ShardedPagedPool(
                     n_pages, per_layer, self._n_data)
+                shard_pools = self.pool.shards
             else:
                 self.pool = blockpool.PagedBlockPool(n_pages, per_layer)
+                shard_pools = [self.pool]
+            # Adopt the pools' own metric objects into this server's
+            # registry — one tree regardless of sharding (shard 0 IS the
+            # whole pool unsharded).
+            for d, p in enumerate(shard_pools):
+                self.metrics.register(
+                    f"pool.shard{d}.high_water_pages", p.m_high_water)
+                self.metrics.register(
+                    f"pool.shard{d}.alloc_pages", p.m_alloc_pages)
+                self.metrics.register(
+                    f"pool.shard{d}.freed_pages", p.m_freed_pages)
             # Host mirror of the device page tables (one logical table
             # shared by every layer): rows index slots, entries are pages.
             self._pt_host = np.full((B, nb), -1, np.int64)
@@ -444,13 +515,18 @@ class Server:
                 self._indexes = [PrefixIndex(self._spec0.block_size)
                                  for _ in range(self._n_data)]
                 self.index = self._indexes[0]
-            self._pfx = {
-                "lookups": 0, "hits": 0, "hit_blocks": 0,
-                "reused_tokens": 0, "prefill_tokens": 0,
-                "prefill_attn_pairs": 0,
-                "resumes": 0, "resume_reused_blocks": 0,
-                "cow_breaks": 0,
-            }
+                for d, ix in enumerate(self._indexes):
+                    self.metrics.register(
+                        f"prefix.index.shard{d}.inserted_blocks",
+                        ix.m_inserted_blocks)
+                    self.metrics.register(
+                        f"prefix.index.shard{d}.evicted_blocks",
+                        ix.m_evicted_blocks)
+            self._pfx = {k: self.metrics.counter(f"prefix.{k}")
+                         for k in ("lookups", "hits", "hit_blocks",
+                                   "reused_tokens", "prefill_tokens",
+                                   "prefill_attn_pairs", "resumes",
+                                   "resume_reused_blocks", "cow_breaks")}
 
         # Greedy argmax runs inside the jitted closures so each step/admit is
         # one dispatch transferring [B] token ids, not [B, V] logits.
@@ -626,6 +702,12 @@ class Server:
                     "(pool_hbm_bytes= via api.serve / --pool-bytes on the "
                     "launch.serve CLI)")
         h = Handle(self, request)
+        h.id = self._next_req_id
+        self._next_req_id += 1
+        if self._tr is not None:
+            self._tr.emit("submit", req=h.id, t=h._t_submit,
+                          prompt_len=len(request.prompt),
+                          max_new_tokens=request.max_new_tokens)
         self._queue.append(h)
         return h
 
@@ -655,6 +737,11 @@ class Server:
     def prefilling(self) -> int:
         """Rows mid-chunked-prefill (claimed but not yet decoding)."""
         return len(self._prefill_tasks)
+
+    @property
+    def preemptions(self) -> int:
+        """Total rows evicted + requeued (registry-backed)."""
+        return self._preemptions.value
 
     # -- shard-local page accounting (DESIGN.md §12) --------------------------
     # jax shards an axis into contiguous per-device chunks, so decode slot
@@ -707,10 +794,13 @@ class Server:
         if any(s is not None for s in self._slots):
             # Solo admission freezes every live decode stream for the whole
             # prompt — the stall chunked admission exists to kill.
-            self._pf["stalled_decode_steps"] += 1
+            self._pf["stalled_decode_steps"].inc()
         t0 = time.monotonic()
         if handle._t_first is None:
             handle._t_first = t0
+            self._h_queue.observe(t0 - handle._t_submit)
+        if self._tr is not None:
+            self._tr.emit("admit", req=handle.id, t=t0, row=row)
         first_tok, solo = self._prefill(self.params, prompt)
         first = int(first_tok[0])
         t1 = time.monotonic()
@@ -755,6 +845,12 @@ class Server:
         t0 = time.monotonic()
         if handle._t_first is None:
             handle._t_first = t0
+            self._h_queue.observe(t0 - handle._t_submit)
+        if self._tr is not None:
+            self._tr.emit("prefill_start", req=handle.id, t=t0, row=row,
+                          hit_blocks=j, forced_tokens=n)
+            if j:
+                self._tr.emit("prefix_hit", req=handle.id, blocks=j)
         fused = self.paged and self.mesh is None
         if fused:
             state = None
@@ -779,14 +875,14 @@ class Server:
             self._pt_host[row] = pages
         if self.prefix_mode:
             if self._share:
-                self._pfx["lookups"] += 1
+                self._pfx["lookups"].inc()
             if j:
-                self._pfx["hits"] += 1
-                self._pfx["hit_blocks"] += j
-                self._pfx["reused_tokens"] += j * self._spec0.block_size
+                self._pfx["hits"].inc()
+                self._pfx["hit_blocks"].inc(j)
+                self._pfx["reused_tokens"].inc(j * self._spec0.block_size)
             if handle._toks:
-                self._pfx["resumes"] += 1
-                self._pfx["resume_reused_blocks"] += j
+                self._pfx["resumes"].inc()
+                self._pfx["resume_reused_blocks"].inc(j)
         self._prefill_tasks[row] = _PrefillTask(
             handle=handle, row=row, forced=forced, n=n,
             pos=j * self._chunk_t, hit=hit, state=state)
@@ -817,12 +913,21 @@ class Server:
                 if existing >= 0:  # shared: only exists in prefix mode
                     self.pool.release([existing])
                     if self.prefix_mode:
-                        self._pfx["cow_breaks"] += 1
+                        self._pfx["cow_breaks"].inc()
+                        if self._tr is not None:
+                            self._tr.emit("cow_break", req=task.handle.id,
+                                          row=row, slot=slot, page=existing)
                 self._pt_host[row, slot] = page
+                if self._tr is not None:
+                    self._tr.emit("page_assign", req=task.handle.id,
+                                  row=row, slot=slot, page=page)
                 return True
-            if self._share and self._index_for(row).evict(
-                    self._shard_pool(row), 1):
-                continue
+            if self._share:
+                ev = self._index_for(row).evict(self._shard_pool(row), 1)
+                if ev:
+                    if self._tr is not None:
+                        self._tr.emit("prefix_evict", blocks=ev)
+                    continue
             victim = next(
                 (r for r in reversed(self._live_rows_by_age())
                  if self._row_shard(r) == shard
@@ -864,6 +969,7 @@ class Server:
                 if fused and not all(self._ensure_chunk_page(task, pos + j * T)
                                      for j in range(kb)):
                     break  # the reclaim preempted this very task
+                tc = time.monotonic() if self._tr is not None else 0.0
                 t = jnp.asarray(
                     task.forced[pos:pos + kb * T].reshape(kb, 1, T))
                 if fused:
@@ -873,21 +979,26 @@ class Server:
                 else:
                     tok, task.state = self._chunk_scan(
                         self.params, t, jnp.int32(pos), task.state)
+                if self._tr is not None:
+                    self._tr.emit("prefill_chunk", req=handle.id, t=tc,
+                                  dur=time.monotonic() - tc, row=row,
+                                  pos=pos, tokens=kb * T, chunks=kb)
                 task.pos = pos + kb * T
                 task.chunks += kb
                 spent += kb * T
-                self._pf["chunks"] += kb
+                self._pf["chunks"].inc(kb)
                 if self.prefix_mode:
-                    self._pfx["prefill_tokens"] += kb * T
-                    self._pfx["prefill_attn_pairs"] += sum(
+                    self._pfx["prefill_tokens"].inc(kb * T)
+                    self._pfx["prefill_attn_pairs"].inc(sum(
                         T * (pos + j * T) + T * (T + 1) // 2
-                        for j in range(kb))
+                        for j in range(kb)))
                 if task.pos == task.n:
                     self._finish_task(task, int(np.asarray(tok)[0]))
                     break
                 continue
             if fused and C == T and not self._ensure_chunk_page(task, pos):
                 break  # the reclaim preempted this very task
+            tc = time.monotonic() if self._tr is not None else 0.0
             t = jnp.asarray(task.forced[None, pos:pos + C])
             if fused:
                 pages = jnp.asarray(self._pt_host[row], jnp.int32)
@@ -901,18 +1012,23 @@ class Server:
             else:
                 tok, task.state = self._chunk(self.params, t, jnp.int32(pos),
                                               task.state)
+            if self._tr is not None:
+                self._tr.emit("prefill_chunk", req=handle.id, t=tc,
+                              dur=time.monotonic() - tc, row=row,
+                              pos=pos, tokens=C, chunks=1)
             task.pos = pos + C
             task.chunks += 1
             spent += C
-            self._pf["chunks"] += 1
+            self._pf["chunks"].inc()
             if self.prefix_mode:
-                self._pfx["prefill_tokens"] += C
-                self._pfx["prefill_attn_pairs"] += C * pos + C * (C + 1) // 2
+                self._pfx["prefill_tokens"].inc(C)
+                self._pfx["prefill_attn_pairs"].inc(
+                    C * pos + C * (C + 1) // 2)
             if task.pos == task.n:
                 self._finish_task(task, int(np.asarray(tok)[0]))
                 break
         handle._prefill_s += time.monotonic() - t0
-        self._pf["prefill_tokens"] += spent
+        self._pf["prefill_tokens"].inc(spent)
         return spent
 
     def _finish_task(self, task: _PrefillTask, first: int) -> None:
@@ -925,6 +1041,9 @@ class Server:
         del self._prefill_tasks[row]
         if handle._t_start is None:
             handle._t_start = time.monotonic()
+        if self._tr is not None:
+            self._tr.emit("prefill_finish", req=handle.id, row=row,
+                          chunks=task.chunks)
         fused = task.state is None and self.paged
         if handle._push(first):
             # Finished at admission: the slot stays free.  The fused path
@@ -967,7 +1086,7 @@ class Server:
             spent = self._advance_task(task, budget)
             budget -= spent
             if decoding:
-                self._pf["coscheduled_tokens"] += spent
+                self._pf["coscheduled_tokens"].inc(spent)
         return budget
 
     def _can_admit(self, handle: Handle, row: int) -> bool:
@@ -1085,9 +1204,12 @@ class Server:
             if not self.prefix_mode:
                 handle._toks.clear()
             self._queue.appendleft(handle)
-            self.preemptions += 1
-            self._pf["prefill_preemptions"] += 1
-            self._preempt_by_shard[self._row_shard(row)] += 1
+            self._preemptions.inc()
+            self._pf["prefill_preemptions"].inc()
+            self._preempt_by_shard[self._row_shard(row)].inc()
+            if self._tr is not None:
+                self._tr.emit("preempt", req=handle.id, row=row,
+                              prefilling=True)
             return
         handle = self._slots[row]
         self._slots[row] = None
@@ -1108,8 +1230,11 @@ class Server:
             self._release_row(row)
             handle._toks.clear()
         self._queue.appendleft(handle)
-        self.preemptions += 1
-        self._preempt_by_shard[self._row_shard(row)] += 1
+        self._preemptions.inc()
+        self._preempt_by_shard[self._row_shard(row)].inc()
+        if self._tr is not None:
+            self._tr.emit("preempt", req=handle.id, row=row,
+                          prefilling=False)
 
     def _ensure_pages(self) -> None:
         """Assign a physical page to every live row whose buffer flushes on
@@ -1143,8 +1268,15 @@ class Server:
                     page = self._alloc(1, row)[0]
                     if existing >= 0:  # shared: only exists in prefix mode
                         self.pool.release([existing])
-                        self._pfx["cow_breaks"] += 1
+                        self._pfx["cow_breaks"].inc()
+                        if self._tr is not None:
+                            self._tr.emit(
+                                "cow_break", req=self._slots[row].id,
+                                row=row, slot=slot, page=existing)
                     self._pt_host[row, slot] = page
+                    if self._tr is not None:
+                        self._tr.emit("page_assign", req=self._slots[row].id,
+                                      row=row, slot=slot, page=page)
                     rows_u.append(row)
                     slots_u.append(slot)
                     pages_u.append(page)
@@ -1162,9 +1294,12 @@ class Server:
                 # an index block, or shrinks the shard's live rows, so the
                 # loop terminates — submit() guaranteed the row fits its
                 # shard solo.
-                if self._share and self._index_for(row).evict(
-                        self._shard_pool(row), 1):
-                    continue
+                if self._share:
+                    ev = self._index_for(row).evict(self._shard_pool(row), 1)
+                    if ev:
+                        if self._tr is not None:
+                            self._tr.emit("prefix_evict", blocks=ev)
+                        continue
                 victim = next(
                     (r for r in reversed(self._live_rows_by_age())
                      if self._row_shard(r) == shard
@@ -1238,14 +1373,14 @@ class Server:
                     # here — the admission stall the chunked default kills,
                     # kept as the explicit baseline (bit-identical tokens).
                     if decoding:
-                        self._pf["stalled_decode_steps"] += 1
+                        self._pf["stalled_decode_steps"].inc()
                     if task is not None:
                         self._advance_task(task, task.n)
                 elif task is not None and pf_budget >= 1:
                     spent = self._advance_task(task, pf_budget)
                     pf_budget -= spent
                     if decoding:
-                        self._pf["coscheduled_tokens"] += spent
+                        self._pf["coscheduled_tokens"].inc(spent)
                 if self._queue and self._queue[0] is handle:
                     break  # the chunk loop preempted itself: pool too tight
                 if (row not in self._prefill_tasks
@@ -1258,10 +1393,17 @@ class Server:
         rows = [i for i, s in enumerate(self._slots) if s is not None]
         if not rows:
             return bool(self._queue) or bool(self._prefill_tasks)
+        full = self._tr is not None and self._tr.full
+        td = time.monotonic() if full else 0.0
         toks, self.state = self._decode(
             self.params, jnp.asarray(self._cur), jnp.asarray(self._pos),
             self.state)
         nxt = np.asarray(toks)
+        if full:
+            # "full" firehose: one span per batched decode dispatch (the
+            # np.asarray above synced it, so dur covers device time too).
+            self._tr.emit("decode_step", t=td, dur=time.monotonic() - td,
+                          rows=len(rows))
         for row in rows:
             tok = int(nxt[row])
             self._cur[row] = tok
@@ -1283,15 +1425,19 @@ class Server:
         return cache_memory_report(self.cfg, self.state)
 
     def stats(self) -> dict:
-        """Live serving counters; in paged mode includes pool occupancy
-        (pages live/free, refcounts, byte accounting per layer, high-water
-        mark), and in prefix mode hit-rate / reuse / CoW counters plus the
-        index's own block accounting."""
+        """The documented serving-stats tree (DESIGN.md §14) — a view over
+        ``self.metrics``.  ONE schema regardless of sharding: the key tree
+        depends only on (cache_mode, prefix_cache), never on the mesh —
+        ``shards``/``per_shard`` are always present (one entry unsharded)
+        and ``pool`` (paged) always carries aggregate + ``per_shard``.
+        ``tests/test_obs.py`` pins the exact tree."""
+        self._g_active.set(self.active)
+        self._g_pending.set(self.pending)
         s = {
             "cache_mode": "paged" if self.paged else "dense",
             "active": self.active,
             "pending": self.pending,
-            "preemptions": self.preemptions,
+            "preemptions": self._preemptions.value,
             # Admission observability (DESIGN.md §13): chunks in flight,
             # prompt tokens co-scheduled with live decoders, and how often
             # solo admissions stalled a live batch (0 by design chunked).
@@ -1301,31 +1447,43 @@ class Server:
                 "prefilling": len(self._prefill_tasks),
                 "inflight_tokens": sum(t.n - t.pos
                                        for t in self._prefill_tasks.values()),
-                **self._pf,
+                **{k: c.value for k, c in self._pf.items()},
+            },
+            # Histogram-derived serving latency (submit-relative TTFT,
+            # inter-token gaps, queue wait) — the registry's summaries, so
+            # bench scripts stop re-deriving them from Result lists.
+            "latency": {
+                "ttft_s": self._h_ttft.snapshot(),
+                "itl_s": self._h_itl.snapshot(),
+                "queue_wait_s": self._h_queue.snapshot(),
+            },
+            "trace": {
+                "level": self.trace.level,
+                "events": len(self.trace.events),
+                "dropped": self.trace.dropped,
             },
         }
+        per_pool = None
         if self.paged:
-            s["pool"] = self.pool.stats()
-        if self.paged or self.mesh is not None:
-            # Per-shard serving section (DESIGN.md §12).  Unsharded paged
-            # servers report their single "shard" too, so dashboards read
-            # one schema either way.
-            per = ([p.stats() for p in self.pool.shards]
-                   if self.paged and self._n_data > 1
-                   else [self.pool.stats()] if self.paged else [])
-            s["shards"] = {
-                "n_data": self._n_data,
-                "n_model": self._n_model,
-                "per_shard": [
-                    {"pages_live": p["pages_live"],
-                     "pages_free": p["pages_free"],
-                     "high_water_pages": p["high_water_pages"],
-                     "preemptions": self._preempt_by_shard[d]
-                     if d < len(self._preempt_by_shard) else 0}
-                    for d, p in enumerate(per)],
-            }
+            per_pool = (self.pool.shard_stats() if self._n_data > 1
+                        else [self.pool.stats()])
+            # Aggregate pool occupancy + the per-shard breakdown: the same
+            # two-level shape whether the arena is sharded or not (one
+            # entry covering the whole pool unsharded).
+            s["pool"] = {**self.pool.stats(), "per_shard": per_pool}
+        s["shards"] = {
+            "n_data": self._n_data,
+            "n_model": self._n_model,
+            "per_shard": [
+                {"preemptions": self._preempt_by_shard[d].value,
+                 **({"pages_live": per_pool[d]["pages_live"],
+                     "pages_free": per_pool[d]["pages_free"],
+                     "high_water_pages": per_pool[d]["high_water_pages"]}
+                    if per_pool is not None else {})}
+                for d in range(self._n_data)],
+        }
         if self.prefix_mode:
-            p = dict(self._pfx)
+            p = {k: c.value for k, c in self._pfx.items()}
             p["mode"] = self.scfg.prefix_cache
             p["hit_rate"] = (p["hits"] / p["lookups"]) if p["lookups"] else 0.0
             if self._share:
@@ -1333,6 +1491,27 @@ class Server:
                 p["index"] = PrefixIndex.merge_stats(self._indexes)
             s["prefix"] = p
         return s
+
+    def shutdown(self, metrics_out=None, trace_out=None) -> dict:
+        """Export final telemetry and return the snapshot (DESIGN.md §14).
+
+        ``metrics_out`` writes the JSON snapshot (``stats()`` tree plus the
+        raw registry dump) and a Prometheus text exposition next to it
+        (``<metrics_out>.prom`` sibling with the suffix swapped);
+        ``trace_out`` writes the Chrome trace-event JSON (only when tracing
+        was on) — load it at ui.perfetto.dev for per-request tracks.  The
+        server stays usable afterwards; "shutdown" names the serving
+        lifecycle hook, not a teardown.
+        """
+        snap = {"stats": self.stats(), "metrics": self.metrics.snapshot()}
+        if metrics_out:
+            out = Path(metrics_out)
+            out.write_text(json.dumps(snap, indent=2, default=float))
+            out.with_suffix(".prom").write_text(
+                self.metrics.prometheus_text())
+        if trace_out and self.trace.enabled:
+            self.trace.write_chrome(trace_out)
+        return snap
 
 
 def cache_memory_report(cfg: ModelConfig, state) -> dict:
