@@ -66,7 +66,9 @@ def _latency_block(results) -> dict:
     """Latency decomposition from per-token timestamps: queue wait split
     out of the old conflated mean latency, TTFT and inter-token gaps as
     p50/p99 (the serving tail the chunked-admission gate watches)."""
-    ttfts = [r.ttft_s for r in results]
+    # ttft_s is None for token-less results (failed/cancelled before the
+    # first token); exclude them rather than report a fictitious 0.0
+    ttfts = [r.ttft_s for r in results if r.ttft_s is not None] or [0.0]
     gaps = np.concatenate([np.diff(r.token_times) for r in results
                            if len(r.token_times) > 1] or [np.zeros(1)])
     return {

@@ -57,6 +57,12 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
           prefill_mode: str = "chunked",
           prefill_chunk_tokens: int | None = None,
           trace: str = "off",
+          max_requeues: int = 32,
+          max_pending: int | None = None,
+          backpressure: str = "reject",
+          default_deadline_s: float | None = None,
+          faults=None,
+          audit_every: int = 0,
           q_chunk: int = 512, kv_chunk: int = 512) -> Server:
     """Launch a continuous-batching server over ``cfg``'s cache policy.
 
@@ -103,6 +109,22 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
     ``server.shutdown(trace_out=...)`` — exports it as Perfetto-loadable
     Chrome trace-event JSON, and ``server.metrics`` is the typed registry
     behind ``server.stats()``.
+    Request-lifecycle hardening (DESIGN.md §15): failures are isolated —
+    pool exhaustion with nothing reclaimable requeues the affected request
+    up to ``max_requeues`` times (the same budget caps preemption storms,
+    with the oldest request always protected) and then fails ONLY that
+    request (``Result.finish_reason == "error"`` with ``Result.error``
+    naming the cause; other streams are bit-identical to an undisturbed
+    run).  ``Handle.cancel()`` and ``Request.deadline_s`` /
+    ``default_deadline_s`` retire requests in any state ("cancelled" /
+    "deadline"); ``max_pending`` bounds the admission queue, with
+    ``backpressure`` picking "reject" (submit raises ``QueueFull``) or
+    "block" (submit drives the server until the queue drains).
+    ``faults`` takes a ``repro.serve.faults.FaultPlan`` for deterministic
+    seeded fault injection at the named scheduler sites, and
+    ``audit_every=N`` cross-checks the server's pool/page-table/index
+    bookkeeping every N steps (``repro.serve.faults.InvariantAuditor``),
+    raising on the first violation.
     """
     return Server(cfg, params,
                   ServerConfig(max_slots=max_slots, max_seq=max_seq,
@@ -114,7 +136,13 @@ def serve(cfg, params, *, max_slots: int = 8, max_seq: int = 4096,
                                mesh=mesh,
                                prefill_mode=prefill_mode,
                                prefill_chunk_tokens=prefill_chunk_tokens,
-                               trace=trace),
+                               trace=trace,
+                               max_requeues=max_requeues,
+                               max_pending=max_pending,
+                               backpressure=backpressure,
+                               default_deadline_s=default_deadline_s,
+                               faults=faults,
+                               audit_every=audit_every),
                   q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 

@@ -87,6 +87,33 @@ def main():
     ap.add_argument("--metrics-out", default=None,
                     help="write the metrics snapshot as JSON here, plus a "
                          ".prom Prometheus-text sibling")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request wall-clock deadline in seconds "
+                         "(DESIGN.md §15); requests past it retire with "
+                         "finish_reason='deadline'")
+    ap.add_argument("--max-requeues", type=int, default=32,
+                    help="preemption/requeue budget per request; over "
+                         "budget a (non-oldest) request fails in isolation "
+                         "instead of requeueing (DESIGN.md §15)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="bound the admission queue; submits past the "
+                         "bound apply --backpressure")
+    ap.add_argument("--backpressure", default="reject",
+                    choices=["reject", "block"],
+                    help="full-queue policy: reject raises, block drives "
+                         "the server until the queue drains")
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="cross-check pool/page-table/prefix-index "
+                         "invariants every N steps (0 = off; DESIGN.md §15)")
+    ap.add_argument("--fault", action="append", default=[],
+                    metavar="SITE[:PROB]",
+                    help="inject deterministic faults at a named site "
+                         "(repeatable; prob defaults to 1.0), e.g. "
+                         "--fault reclaim_sweep:0.05 — sites: "
+                         "pool_alloc, reclaim_sweep, prefix_evict, "
+                         "prefix_insert, chunk_prefill, decode_dispatch")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the --fault schedule (replayable)")
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config(args.arch)
@@ -97,6 +124,14 @@ def main():
         cfg = dataclasses.replace(cfg, cache_unroll_max=args.unroll_max)
     params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
     mesh = make_serve_mesh(args.mesh) if args.mesh else None
+    faults = None
+    if args.fault:
+        from repro.serve.faults import FaultPlan
+        rates = {}
+        for spec in args.fault:
+            site, _, prob = spec.partition(":")
+            rates[site] = float(prob) if prob else 1.0
+        faults = FaultPlan(seed=args.fault_seed, rates=rates)
     server = api.serve(cfg, params, max_slots=args.max_slots,
                        max_seq=args.max_seq, attn_backend=args.backend,
                        cache_mode=args.cache_mode,
@@ -104,7 +139,13 @@ def main():
                        prefix_cache=args.prefix_cache,
                        prefill_mode=args.prefill_mode,
                        prefill_chunk_tokens=args.prefill_chunk,
-                       mesh=mesh, trace=args.trace)
+                       mesh=mesh, trace=args.trace,
+                       max_requeues=args.max_requeues,
+                       max_pending=args.max_pending,
+                       backpressure=args.backpressure,
+                       default_deadline_s=args.deadline,
+                       faults=faults,
+                       audit_every=args.audit_every)
     rng = np.random.default_rng(0)
     # With the prefix cache enabled, requests share a system-prompt prefix
     # (half of --prompt-len) so the printed hit-rate exercises real reuse.
@@ -123,7 +164,19 @@ def main():
         handles.append(server.submit(api.Request(prompt=prompt,
                                                  max_new_tokens=n_new)))
     t0 = time.monotonic()
-    server.run()
+    try:
+        server.run()
+    except KeyboardInterrupt:
+        # Ctrl-C must not lose the run's telemetry: print the final
+        # snapshot and run the shutdown exports before exiting with the
+        # conventional interrupt status.
+        wall = time.monotonic() - t0
+        print(f"\ninterrupted after {wall:.1f}s: active={server.active} "
+              f"prefilling={server.prefilling} pending={server.pending}")
+        print(api.obs.format_snapshot(server.stats()))
+        server.shutdown(metrics_out=args.metrics_out,
+                        trace_out=args.trace_out)
+        raise SystemExit(130)
     wall = time.monotonic() - t0
     results = [h.result() for h in handles]
     total = sum(len(r.tokens) for r in results)
@@ -140,9 +193,11 @@ def main():
         server.shutdown(metrics_out=args.metrics_out,
                         trace_out=args.trace_out)
     for i, r in enumerate(results[:4]):
+        # ttft_s is None for token-less (failed/cancelled/expired) requests
+        ttft = f"{r.ttft_s * 1e3:.0f}ms" if r.ttft_s is not None else "-"
         print(f"  req{i}: prompt_len={r.prompt_len} n_tokens={len(r.tokens)} "
               f"queue={r.queue_wait_s * 1e3:.0f}ms "
-              f"ttft={r.ttft_s * 1e3:.0f}ms "
+              f"ttft={ttft} "
               f"prefill={r.prefill_s * 1e3:.0f}ms gen={r.gen_s * 1e3:.0f}ms "
               f"finish={r.finish_reason} tokens={r.tokens[:8].tolist()}…")
 

@@ -48,6 +48,13 @@ def format_snapshot(stats: dict) -> str:
     lines.append(f"  serve[{stats['cache_mode']}]: active={stats['active']} "
                  f"pending={stats['pending']} "
                  f"preemptions={stats['preemptions']}")
+    lc = stats.get("lifecycle")
+    if lc:
+        lines.append(
+            f"  lifecycle: submitted={lc['submitted']} "
+            f"failures={lc['failures']} cancelled={lc['cancelled']} "
+            f"deadline_exceeded={lc['deadline_exceeded']} "
+            f"requeues={lc['requeues']} rejected={lc['rejected']}")
     pf = stats["prefill"]
     lines.append(
         f"  prefill[{pf['mode']}]: chunk_tokens={pf['chunk_tokens']} "

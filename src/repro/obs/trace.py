@@ -28,6 +28,11 @@ Event vocabulary (``kind`` / required payload):
 ``preempt``        live row evicted + requeued (``prefilling`` flags a
                    half-prefilled victim)
 ``retire``         request finished (``reason`` = eos|length)
+``fail``           request failed in isolation (``reason`` = "error",
+                   ``error`` = the human-readable cause; DESIGN.md §15)
+``cancel``         request cancelled via ``Handle.cancel()``
+``deadline``       request retired by its deadline (``deadline_s`` = the
+                   effective bound it exceeded)
 ``token``          one generated token (``t`` = its ``token_times`` stamp,
                    ``index`` = its position in the stream)
 ``decode_step``    one batched decode dispatch (level ``full`` only;
@@ -60,8 +65,12 @@ TRACE_LEVELS = ("off", "events", "full")
 EVENT_KINDS = (
     "submit", "admit", "prefill_start", "prefill_chunk", "prefill_finish",
     "page_assign", "cow_break", "prefix_hit", "prefix_evict",
-    "preempt", "retire", "token", "decode_step",
+    "preempt", "retire", "fail", "cancel", "deadline", "token", "decode_step",
 )
+
+# Kinds that end a request's lifecycle (DESIGN.md §15 state machine); the
+# reconstruction below treats them all as the request's terminal event.
+_TERMINAL_KINDS = ("retire", "fail", "cancel", "deadline")
 
 Event = collections.namedtuple("Event", ("t", "kind", "req", "step", "data"))
 
@@ -126,7 +135,7 @@ class EventTrace:
                 ts = r["token_times"]
                 if i == len(ts):
                     ts.append(e.t)
-            elif e.kind == "retire":
+            elif e.kind in _TERMINAL_KINDS:
                 r["retired"] = True
                 r["reason"] = e.data.get("reason")
         for r in out.values():
@@ -180,7 +189,7 @@ class EventTrace:
                 elif e.kind == "token":
                     s.setdefault("decode", e.t)
                     s["last"] = e.t
-                elif e.kind == "retire":
+                elif e.kind in _TERMINAL_KINDS:
                     s["retire"] = e.t
             evs.append({"name": e.kind, "ph": "i", "pid": pid, "tid": tid,
                         "ts": us(e.t), "s": "t", "args": args})

@@ -1,0 +1,324 @@
+"""Deterministic fault injection and invariant auditing for the serving
+stack (DESIGN.md §15).
+
+The scheduler/pool/prefix machinery grown across DESIGN.md §8–§13
+(preemption, CoW page sharing, refcounted prefix pages, shard-affine
+admission, chunked prefill) is complex enough that its invariants deserve
+an adversarial harness, not only happy-path tests.  This module supplies
+both halves:
+
+* ``FaultPlan`` — a *seeded*, fully deterministic schedule of failures at
+  named scheduler sites.  The Server consults ``plan.fire(site)`` at each
+  decision point; a firing site makes the scheduler take its
+  failure/reclaim path (an empty free list, a victimless reclaim sweep, a
+  failing chunk dispatch, ...) without any real resource actually
+  misbehaving.  Determinism is the contract: the same ``(seed, rates, at)``
+  produce the same firing pattern in any process, so a chaos-soak failure
+  replays exactly from its printed seed (``REPRO_CHAOS_SEED``).
+
+* ``InvariantAuditor`` — cross-checks the Server's redundant bookkeeping
+  after (periodically, or every step under test) each scheduler step:
+  pool free/live partition and refcount balance against the page tables
+  and the prefix index, host page-table mirror against the device tables,
+  page/shard affinity, and slot/queue/task accounting.  A violation is
+  reported with enough context to debug the step that introduced it; the
+  accumulated ``report()`` is the artifact the CI chaos leg uploads on
+  failure.
+
+``ServeError`` lives here too: the lifecycle error the scheduler raises
+when it can prove it is stuck (the no-progress detector, DESIGN.md §15) and
+the base of ``QueueFull`` (bounded-admission rejection).  Keeping them in
+this module lets ``scheduler.py`` import downward only.
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+__all__ = [
+    "FAULT_SITES", "FaultInjected", "FaultPlan",
+    "InvariantAuditor", "InvariantViolation",
+    "QueueFull", "ServeError",
+]
+
+# The named injection sites the scheduler consults (DESIGN.md §15).  Each
+# names a *decision*, and firing it forces the pessimistic branch:
+#
+# ==================  ======================================================
+# ``pool_alloc``      a free-page check reads 0 — the caller takes its
+#                     reclaim ladder (evict index blocks, preempt) exactly
+#                     as if the arena were full
+# ``reclaim_sweep``   the preemption victim scan comes up empty — the
+#                     terminal "pool exhausted with no reclaimable pages"
+#                     path (requeue-with-backoff, then FAILED)
+# ``prefix_evict``    a prefix-index eviction reclaims nothing this round
+# ``prefix_insert``   parking/indexing flushed blocks is skipped (the pages
+#                     release instead of entering the radix index)
+# ``chunk_prefill``   a chunked-prefill dispatch fails before launching —
+#                     the task's request is requeued (bounded) or failed
+# ``decode_dispatch`` the batched decode dispatch fails transiently before
+#                     launch — the step skips decoding and retries next
+#                     step (state untouched, tokens merely delayed)
+# ==================  ======================================================
+FAULT_SITES = ("pool_alloc", "reclaim_sweep", "prefix_evict",
+               "prefix_insert", "chunk_prefill", "decode_dispatch")
+
+
+class ServeError(RuntimeError):
+    """A request-lifecycle error the Server can attribute and explain —
+    raised (not swallowed) because it reflects a caller-visible contract
+    violation: a provably stuck server, or a rejected submit."""
+
+
+class QueueFull(ServeError):
+    """``Server.submit`` under ``ServerConfig.max_pending`` with the
+    "reject" backpressure policy: the admission queue is at capacity."""
+
+
+class FaultInjected(RuntimeError):
+    """Marker for an injected failure (never escapes the Server)."""
+
+
+class InvariantViolation(AssertionError):
+    """The auditor found the Server's redundant bookkeeping disagreeing."""
+
+
+class FaultPlan:
+    """Seeded deterministic failure schedule over the named ``FAULT_SITES``.
+
+    Two composable triggers per site:
+
+    * ``at``    — exact 1-based visit indices: ``{"reclaim_sweep": (1, 3)}``
+      fires the first and third time the scheduler consults that site.
+    * ``rates`` — per-visit probability: ``{"pool_alloc": 0.05}`` fires each
+      visit with p=0.05 from a per-site generator seeded by
+      ``(seed, crc32(site))`` — stable across processes and runs, so a
+      printed seed replays the identical schedule.
+
+    ``fire(site)`` is the only hot-path call; ``fired`` records every
+    (site, visit-index) that fired, which the chaos tests print on failure
+    next to the seed.
+    """
+
+    def __init__(self, seed: int = 0, rates: dict | None = None,
+                 at: dict | None = None):
+        self.seed = int(seed)
+        self.rates = {str(k): float(v) for k, v in (rates or {}).items()}
+        self.at = {str(k): frozenset(int(i) for i in v)
+                   for k, v in (at or {}).items()}
+        for site in (*self.rates, *self.at):
+            if site not in FAULT_SITES:
+                raise ValueError(
+                    f"unknown fault site {site!r}; sites are {FAULT_SITES}")
+        for site, p in self.rates.items():
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"rate for {site!r} must be in [0, 1], got {p}")
+        self.visits = {s: 0 for s in FAULT_SITES}
+        self.fired: list[tuple[str, int]] = []
+        # One independent generator per site: firing order at one site can
+        # never perturb another's schedule (determinism survives refactors
+        # that reorder site consultations).
+        self._rng = {s: np.random.default_rng((self.seed,
+                                               zlib.crc32(s.encode())))
+                     for s in self.rates}
+
+    def fire(self, site: str) -> bool:
+        """Count one visit to ``site`` and decide whether it faults."""
+        n = self.visits[site] = self.visits[site] + 1
+        hit = n in self.at.get(site, ())
+        rate = self.rates.get(site, 0.0)
+        if rate and self._rng[site].random() < rate:
+            hit = True
+        if hit:
+            self.fired.append((site, n))
+        return hit
+
+    def stats(self) -> dict:
+        return {"seed": self.seed,
+                "visits": dict(self.visits),
+                "fired": [list(f) for f in self.fired]}
+
+    def __repr__(self):
+        return (f"FaultPlan(seed={self.seed}, rates={self.rates}, "
+                f"at={dict((k, sorted(v)) for k, v in self.at.items())})")
+
+
+def _np_rows(a) -> np.ndarray:
+    """Host copy of a (possibly sharded, possibly layer-stacked) device
+    page table as ``int64 [L?, B, NB]``."""
+    return np.asarray(a).astype(np.int64)
+
+
+class InvariantAuditor:
+    """Cross-checks a live ``Server``'s redundant bookkeeping.
+
+    The Server keeps the same facts in several places on purpose — host
+    page-table mirror vs device tables, pool refcounts vs the rows/index
+    that hold the references, free-list vs live-set — because the device
+    side must stay jit-friendly while the host side drives admission.  The
+    auditor recomputes each fact from first principles and reports every
+    disagreement (DESIGN.md §15):
+
+    1.  **Pool partition** (per shard pool): ``free + live == n_pages``,
+        the free list holds no duplicates and no live page, every live
+        page has refcount >= 1.
+    2.  **Refcount balance**: for every page, its pool refcount equals the
+        number of row page-table entries referencing it (live *and*
+        PREFILLING rows) plus the number of prefix-index nodes holding it.
+    3.  **Aliasing / affinity**: no row references the same page twice; a
+        row's pages all come from the row's own data shard's pool slice.
+    4.  **Host/device page tables**: live decode rows' device rows equal
+        the host mirror on every layer; PREFILLING and free rows are fully
+        unassigned (-1) on device (the write-drop guarantee).
+    5.  **Slot/queue/task accounting**: slots and prefill tasks are
+        disjoint, no finished handle is still scheduled, no handle appears
+        twice, ``pending`` matches the queue.
+
+    ``audit()`` returns the violation list (empty = clean) and accumulates
+    ``report()`` — the artifact the chaos CI leg uploads on failure;
+    ``check()`` raises ``InvariantViolation`` with the full list.
+    """
+
+    def __init__(self, server):
+        self.server = server
+        self.audits = 0
+        self.violations: list[str] = []
+
+    # -- helpers --------------------------------------------------------------
+    def _shard_pools(self) -> list:
+        srv = self.server
+        if srv.pool is None:
+            return []
+        return list(getattr(srv.pool, "shards", None) or [srv.pool])
+
+    def _scheduled_rows(self) -> tuple[set, set]:
+        srv = self.server
+        live = {r for r, s in enumerate(srv._slots) if s is not None}
+        return live, set(srv._prefill_tasks)
+
+    # -- the audit ------------------------------------------------------------
+    def audit(self) -> list[str]:
+        srv = self.server
+        bad: list[str] = []
+        live_rows, task_rows = self._scheduled_rows()
+
+        # 5. slot/queue/task accounting (valid in dense mode too)
+        if live_rows & task_rows:
+            bad.append(f"rows both decoding and prefilling: "
+                       f"{sorted(live_rows & task_rows)}")
+        seen: dict[int, str] = {}
+        placements = (
+            [(h, "queue") for h in srv._queue]
+            + [(srv._slots[r], f"slot{r}") for r in live_rows]
+            + [(t.handle, f"task{r}") for r, t in srv._prefill_tasks.items()])
+        for h, where in placements:
+            if h.id in seen:
+                bad.append(f"req {h.id} scheduled twice: "
+                           f"{seen[h.id]} and {where}")
+            seen[h.id] = where
+            if h.done:
+                bad.append(f"req {h.id} is finished ({h._finish!r}) "
+                           f"but still scheduled at {where}")
+        if srv.pending != len(srv._queue):
+            bad.append(f"pending={srv.pending} != queue len {len(srv._queue)}")
+
+        if srv.paged:
+            bad += self._audit_pages(live_rows, task_rows)
+
+        self.audits += 1
+        if bad:
+            self.violations.extend(bad)
+        return bad
+
+    def _audit_pages(self, live_rows: set, task_rows: set) -> list[str]:
+        srv = self.server
+        bad: list[str] = []
+        pt = srv._pt_host
+        B = pt.shape[0]
+
+        # 1. pool partition, per shard pool
+        for pool in self._shard_pools():
+            free = pool._free
+            if len(set(free)) != len(free):
+                bad.append(f"pool@{pool.offset}: duplicate free pages")
+            overlap = set(free) & pool._live
+            if overlap:
+                bad.append(f"pool@{pool.offset}: pages both free and live: "
+                           f"{sorted(overlap)[:8]}")
+            if pool.free_pages + pool.live_pages != pool.n_pages:
+                bad.append(
+                    f"pool@{pool.offset}: free({pool.free_pages}) + "
+                    f"live({pool.live_pages}) != n_pages({pool.n_pages})")
+            if set(pool._ref) != pool._live:
+                bad.append(f"pool@{pool.offset}: refcount keys != live set")
+            for p, c in pool._ref.items():
+                if c < 1:
+                    bad.append(f"pool@{pool.offset}: live page {p} has "
+                               f"refcount {c}")
+
+        # 2./3. refcount balance, aliasing, shard affinity
+        expected: dict[int, int] = {}
+        scheduled = live_rows | task_rows
+        for row in range(B):
+            pages = pt[row][pt[row] >= 0]
+            if row not in scheduled:
+                if len(pages):
+                    bad.append(f"unscheduled row {row} still holds pages "
+                               f"{pages.tolist()}")
+                continue
+            if len(set(pages.tolist())) != len(pages):
+                bad.append(f"row {row} references a page twice: "
+                           f"{pages.tolist()}")
+            own = srv._shard_pool(row)
+            for p in pages.tolist():
+                expected[p] = expected.get(p, 0) + 1
+                if not own.owns(p):
+                    bad.append(f"row {row} (shard {srv._row_shard(row)}) "
+                               f"references foreign page {p}")
+        for ix in (getattr(srv, "_indexes", None) or []):
+            for p in ix.indexed_pages():
+                expected[p] = expected.get(p, 0) + 1
+        actual = {}
+        for pool in self._shard_pools():
+            actual.update(pool._ref)
+        for p in sorted(set(expected) | set(actual)):
+            e, a = expected.get(p, 0), actual.get(p, 0)
+            if e != a:
+                bad.append(f"page {p}: pool refcount {a} but "
+                           f"{e} referencing owners (rows + index nodes)")
+
+        # 4. device page tables mirror the host (every layer)
+        caches = srv.state.get("kv") if isinstance(srv.state, dict) else None
+        tabs = []
+        if isinstance(caches, (tuple, list)):
+            tabs = [(_np_rows(c.page_tab), f"layer{i}")
+                    for i, c in enumerate(caches)]
+        elif caches is not None:
+            stacked = _np_rows(caches.page_tab)
+            tabs = [(stacked[l], f"layer{l}") for l in range(stacked.shape[0])]
+        for dev, name in tabs:
+            for row in range(B):
+                want = pt[row] if row in live_rows else np.full_like(pt[row], -1)
+                if not np.array_equal(dev[row], want):
+                    state = ("live" if row in live_rows else
+                             "prefilling" if row in task_rows else "free")
+                    bad.append(
+                        f"{name} device page table row {row} ({state}) = "
+                        f"{dev[row].tolist()} but host expects {want.tolist()}")
+            if len(tabs) > 1 and not np.array_equal(dev, tabs[0][0]):
+                bad.append(f"{name} page table differs from layer0")
+        return bad
+
+    def check(self) -> None:
+        bad = self.audit()
+        if bad:
+            raise InvariantViolation(
+                f"invariant audit #{self.audits} found {len(bad)} "
+                "violation(s):\n  " + "\n  ".join(bad))
+
+    def report(self) -> dict:
+        return {"audits": self.audits,
+                "violations": list(self.violations),
+                "clean": not self.violations}

@@ -159,6 +159,17 @@ class PrefixIndex:
             evicted += 1
         return evicted
 
+    def indexed_pages(self) -> list[int]:
+        """Every node's retained page id (one pool reference each) — the
+        index side of the ``InvariantAuditor``'s refcount balance
+        (DESIGN.md §15)."""
+        out, stack = [], list(self._children.values())
+        while stack:
+            n = stack.pop()
+            out.append(n.page)
+            stack.extend(n.children.values())
+        return out
+
     # -- reporting ------------------------------------------------------------
     @property
     def n_blocks(self) -> int:

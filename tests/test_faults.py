@@ -1,0 +1,551 @@
+"""Request-lifecycle hardening (DESIGN.md §15): failure isolation,
+cancellation & deadlines, admission backpressure, and the deterministic
+fault-injection + invariant-audit harness.
+
+The load-bearing contracts:
+
+* A pool-exhaustion event (injected or real) fails or requeues ONLY the
+  affected request — every surviving stream's greedy tokens are
+  bit-identical to a fault-free run, and the invariant auditor stays clean
+  (refcounts balanced, pages released, host == device page tables).
+* ``FaultPlan`` is deterministic: the same ``(seed, rates, at)`` produce
+  the same firing schedule in any process, so the chaos soak replays
+  exactly from its printed seed (``REPRO_CHAOS_SEED``).
+* Cancel/deadline retire a request from ANY state (queued, PREFILLING,
+  decoding) through the same cleanup path failures use.
+* A provably stuck server raises a descriptive ``ServeError`` instead of
+  letting ``Handle.result()`` spin forever.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import zlib
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import pool as blockpool
+from repro.models import model as M
+from repro.models import registry
+from repro.serve.faults import (FAULT_SITES, FaultPlan, InvariantViolation,
+                                QueueFull, ServeError)
+from repro.serve.scheduler import Request, Server, ServerConfig
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+# The chaos soak's replay knob: a failure prints this seed, and exporting
+# it reruns the identical fault schedule.
+CHAOS_SEED = int(os.environ.get("REPRO_CHAOS_SEED", "20260808"))
+
+LENS = (7, 13, 19, 26)
+NEWS = (3, 6, 4, 5)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: pure-host determinism contracts
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_rates_deterministic_across_instances():
+    mk = lambda: FaultPlan(seed=7, rates={"reclaim_sweep": 0.3,
+                                          "pool_alloc": 0.1})
+    a, b = mk(), mk()
+    seq_a = [a.fire(s) for _ in range(200) for s in ("reclaim_sweep",
+                                                     "pool_alloc")]
+    seq_b = [b.fire(s) for _ in range(200) for s in ("reclaim_sweep",
+                                                     "pool_alloc")]
+    assert seq_a == seq_b
+    assert a.fired == b.fired
+    assert any(seq_a) and not all(seq_a)
+    # per-site independence: interleaving order does not perturb a site's
+    # own schedule (each site draws from its own generator)
+    c = FaultPlan(seed=7, rates={"reclaim_sweep": 0.3, "pool_alloc": 0.1})
+    only = [c.fire("reclaim_sweep") for _ in range(200)]
+    assert only == [f for f, s in zip(seq_a, ["reclaim_sweep",
+                                              "pool_alloc"] * 200)
+                    if s == "reclaim_sweep"]
+    # a different seed yields a different schedule
+    d = FaultPlan(seed=8, rates={"reclaim_sweep": 0.3, "pool_alloc": 0.1})
+    assert [d.fire("reclaim_sweep") for _ in range(200)] != only
+
+
+def test_fault_plan_at_exact_visits_and_stats():
+    p = FaultPlan(at={"chunk_prefill": (1, 3)})
+    fires = [p.fire("chunk_prefill") for _ in range(5)]
+    assert fires == [True, False, True, False, False]
+    assert p.fired == [("chunk_prefill", 1), ("chunk_prefill", 3)]
+    st = p.stats()
+    assert st["visits"]["chunk_prefill"] == 5
+    assert st["fired"] == [["chunk_prefill", 1], ["chunk_prefill", 3]]
+    # unconfigured sites never fire but are still counted
+    assert not p.fire("pool_alloc")
+    assert p.stats()["visits"]["pool_alloc"] == 1
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan(rates={"gpu_on_fire": 1.0})
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan(at={"nope": (1,)})
+    with pytest.raises(ValueError, match=r"in \[0, 1\]"):
+        FaultPlan(rates={"pool_alloc": 1.5})
+
+
+def test_server_config_lifecycle_validation():
+    ok = dict(max_slots=2, max_seq=64)
+    with pytest.raises(ValueError, match="max_requeues"):
+        ServerConfig(**ok, max_requeues=-1)
+    with pytest.raises(ValueError, match="max_pending"):
+        ServerConfig(**ok, max_pending=0)
+    with pytest.raises(ValueError, match="backpressure"):
+        ServerConfig(**ok, backpressure="drop")
+    with pytest.raises(ValueError, match="default_deadline_s"):
+        ServerConfig(**ok, default_deadline_s=0.0)
+    with pytest.raises(ValueError, match="audit_every"):
+        ServerConfig(**ok, audit_every=-1)
+    with pytest.raises(ValueError, match="stall_steps"):
+        ServerConfig(**ok, stall_steps=0)
+
+
+# ---------------------------------------------------------------------------
+# Server integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_smoke_config("yi_6b")
+    cfg = dataclasses.replace(cfg, cache_layout="packed", cache_block=8)
+    params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    prompts = [np.concatenate([
+        shared, rng.integers(0, cfg.vocab_size, L).astype(np.int32)])
+        for L in LENS]
+    return cfg, params, prompts
+
+
+@pytest.fixture(scope="module")
+def pressure(setup):
+    """A workload whose PRESSURE comes from decode growth, not prompt
+    size: short prompts all admit easily onto the 6-page pool, then each
+    row's ring grows toward ~5 pages — two live rows overcommit the arena
+    and the reclaim ladder genuinely runs mid-decode."""
+    cfg, _, _ = setup
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, L).astype(np.int32)
+               for L in (8, 9, 10, 11)]
+    return prompts, (40, 38, 36, 34)
+
+
+def page_bytes(cfg) -> int:
+    """One arena page's byte cost summed over layers — the unit
+    ServerConfig.pool_hbm_bytes is divided by."""
+    return sum(blockpool.page_nbytes(s, cfg.n_kv_heads, cfg.resolved_head_dim)
+               for s in M.cache_specs(cfg, 128))
+
+
+def make_server(cfg, params, **kw):
+    return Server(cfg, params, ServerConfig(max_slots=2, max_seq=128, **kw),
+                  q_chunk=32, kv_chunk=32)
+
+
+def run_all(server, prompts, news=NEWS):
+    handles = [server.submit(Request(prompt=p, max_new_tokens=n))
+               for p, n in zip(prompts, news)]
+    server.run()
+    return handles, [h.result() for h in handles]
+
+
+def lifecycle(server) -> dict:
+    return server.stats()["lifecycle"]
+
+
+@pytest.mark.parametrize("pfx", ["off", "on"])
+def test_pool_exhaustion_fails_only_the_victim(setup, pressure, pfx):
+    """The tentpole regression: with the reclaim ladder's victim sweep
+    forced to come up empty (the old hard-RuntimeError path) and zero
+    requeue budget, only the requesting stream fails — survivors are
+    bit-identical to the fault-free run under the same pool pressure, and
+    the auditor finds refcounts balanced and pages released."""
+    cfg, params, _ = setup
+    prompts, news = pressure
+    pool = dict(cache_mode="paged", prefix_cache=pfx,
+                pool_hbm_bytes=6 * page_bytes(cfg))
+    clean = make_server(cfg, params, **pool, audit_every=1)
+    _, base = run_all(clean, prompts, news)
+    assert all(r.finish_reason in ("eos", "length") for r in base)
+    assert clean.preemptions > 0  # the 6-page pool creates real pressure
+    assert clean.auditor.report()["clean"]
+
+    # Only the victim sweep is faulted: prefix-index eviction stays real
+    # (faulting it too would legitimately deadlock admission behind
+    # index-parked pages — the stall detector's job, tested separately).
+    plan = FaultPlan(rates={"reclaim_sweep": 1.0})
+    srv = make_server(cfg, params, **pool, faults=plan, max_requeues=0,
+                      audit_every=1)
+    _, res = run_all(srv, prompts, news)
+    failed = [i for i, r in enumerate(res) if r.finish_reason == "error"]
+    assert failed, "forced victimless reclaim never failed a request"
+    assert len(failed) < len(res), "failure was not isolated"
+    for i in failed:
+        assert "pool exhausted with no reclaimable pages" in res[i].error
+        assert f"request {i}" in res[i].error
+    for i, r in enumerate(res):
+        if i not in failed:  # survivors: bit-identical greedy streams
+            assert r.finish_reason == base[i].finish_reason
+            assert r.tokens.tolist() == base[i].tokens.tolist(), i
+            assert r.error is None
+    assert srv.auditor.report()["clean"], srv.auditor.report()
+    lc = lifecycle(srv)
+    assert lc["failures"] == len(failed)
+    assert plan.fired  # the schedule actually fired
+    # shutdown snapshot carries the audit + fault evidence (the CI artifact)
+    snap = srv.shutdown()
+    assert snap["audit"]["clean"] and snap["faults"]["fired"]
+
+
+def test_requeue_backoff_within_budget_is_invisible(setup, pressure):
+    """Under the same forced victimless sweeps, a nonzero requeue budget
+    absorbs every event: all four requests finish with bit-identical
+    tokens, no failures, and the requeue counter shows the absorbed
+    faults."""
+    cfg, params, _ = setup
+    prompts, news = pressure
+    pool = dict(cache_mode="paged", pool_hbm_bytes=6 * page_bytes(cfg))
+    clean = make_server(cfg, params, **pool)
+    _, base = run_all(clean, prompts, news)
+    plan = FaultPlan(rates={"reclaim_sweep": 1.0})
+    srv = make_server(cfg, params, **pool, faults=plan, max_requeues=8,
+                      audit_every=1)
+    _, res = run_all(srv, prompts, news)
+    assert [r.tokens.tolist() for r in res] == \
+        [r.tokens.tolist() for r in base]
+    assert all(r.finish_reason in ("eos", "length") for r in res)
+    lc = lifecycle(srv)
+    assert lc["failures"] == 0 and lc["requeues"] > 0
+    assert srv.auditor.report()["clean"]
+
+
+def test_chunk_prefill_fault_requeues_one_task_bit_identically(setup):
+    """An injected chunk-dispatch failure (dense mode: no pool in play)
+    requeues exactly the struck task; the replayed prefill reproduces the
+    identical stream."""
+    cfg, params, prompts = setup
+    clean = make_server(cfg, params)
+    _, base = run_all(clean, prompts)
+    plan = FaultPlan(at={"chunk_prefill": (1,)})
+    srv = make_server(cfg, params, faults=plan, audit_every=1)
+    _, res = run_all(srv, prompts)
+    assert [r.tokens.tolist() for r in res] == \
+        [r.tokens.tolist() for r in base]
+    lc = lifecycle(srv)
+    assert lc["requeues"] == 1 and lc["failures"] == 0
+    assert plan.fired == [("chunk_prefill", 1)]
+    assert srv.auditor.report()["clean"]
+
+
+def test_decode_dispatch_fault_only_delays(setup):
+    """Transient decode-dispatch failures skip the step and retry: tokens
+    are delayed, never changed or dropped."""
+    cfg, params, prompts = setup
+    clean = make_server(cfg, params)
+    _, base = run_all(clean, prompts)
+    srv = make_server(cfg, params, audit_every=1,
+                      faults=FaultPlan(seed=1,
+                                       rates={"decode_dispatch": 0.5}))
+    _, res = run_all(srv, prompts)
+    assert [r.tokens.tolist() for r in res] == \
+        [r.tokens.tolist() for r in base]
+    assert lifecycle(srv)["failures"] == 0
+    assert srv.auditor.report()["clean"]
+
+
+def test_cancel_queued_and_live(setup):
+    """Handle.cancel() retires a request from the queue (no tokens, no
+    slot) and mid-decode (partial tokens kept), through the same cleanup
+    path failures use — pages released, survivors unaffected."""
+    cfg, params, prompts = setup
+    clean = make_server(cfg, params, cache_mode="paged", prefix_cache="on")
+    _, base = run_all(clean, prompts)
+
+    srv = make_server(cfg, params, cache_mode="paged", prefix_cache="on",
+                      audit_every=1)
+    handles = [srv.submit(Request(prompt=p, max_new_tokens=n))
+               for p, n in zip(prompts, NEWS)]
+    # 2 slots: requests 2 and 3 are still queued right after submit
+    assert handles[3].cancel()
+    assert not handles[3].cancel()  # second cancel: already finished
+    srv.step()  # admits + decodes a step; request 0 is live now
+    assert handles[0].cancel()
+    srv.run()
+    res = [h.result() for h in handles]
+    assert res[3].finish_reason == "cancelled"
+    assert len(res[3].tokens) == 0 and res[3].ttft_s is None
+    assert res[3].gen_s == 0.0 and res[3].error is None
+    assert res[0].finish_reason == "cancelled"
+    # the untouched streams match the fault-free run bit for bit
+    for i in (1, 2):
+        assert res[i].finish_reason == base[i].finish_reason
+        assert res[i].tokens.tolist() == base[i].tokens.tolist()
+    lc = lifecycle(srv)
+    assert lc["cancelled"] == 2 and lc["failures"] == 0
+    # token-less results never pollute the TTFT histogram
+    n_with_tokens = sum(1 for r in res if len(r.tokens))
+    assert srv.stats()["latency"]["ttft_s"]["count"] == n_with_tokens
+    assert srv.auditor.report()["clean"]
+
+
+def test_deadlines_default_and_per_request(setup):
+    cfg, params, prompts = setup
+    # A microscopic default deadline expires everything before any token.
+    srv = make_server(cfg, params, cache_mode="paged",
+                      default_deadline_s=1e-6, audit_every=1)
+    _, res = run_all(srv, prompts)
+    assert all(r.finish_reason == "deadline" for r in res)
+    assert all(len(r.tokens) == 0 and r.ttft_s is None and r.gen_s == 0.0
+               for r in res)
+    assert lifecycle(srv)["deadline_exceeded"] == len(res)
+    assert srv.stats()["latency"]["ttft_s"]["count"] == 0
+    assert srv.auditor.report()["clean"]
+
+    # Request.deadline_s overrides per request: only the marked one dies.
+    srv2 = make_server(cfg, params, cache_mode="paged", audit_every=1)
+    hs = [srv2.submit(Request(prompt=p, max_new_tokens=n,
+                              deadline_s=1e-6 if i == 3 else None))
+          for i, (p, n) in enumerate(zip(prompts, NEWS))]
+    srv2.run()
+    res2 = [h.result() for h in hs]
+    assert res2[3].finish_reason == "deadline"
+    assert all(r.finish_reason in ("eos", "length") for r in res2[:3])
+    assert lifecycle(srv2)["deadline_exceeded"] == 1
+    with pytest.raises(ValueError, match="deadline_s"):
+        srv2.submit(Request(prompt=prompts[0], max_new_tokens=2,
+                            deadline_s=0.0))
+
+
+def test_backpressure_reject_and_block(setup):
+    cfg, params, prompts = setup
+    srv = make_server(cfg, params, max_pending=2)
+    hs = [srv.submit(Request(prompt=prompts[i], max_new_tokens=NEWS[i]))
+          for i in range(2)]
+    with pytest.raises(QueueFull, match="max_pending=2"):
+        srv.submit(Request(prompt=prompts[2], max_new_tokens=3))
+    assert lifecycle(srv)["rejected"] == 1
+    srv.run()
+    assert all(h.result().finish_reason in ("eos", "length") for h in hs)
+
+    # "block" drives the server inside submit until the queue drains —
+    # every request is accepted and completes.
+    srv2 = make_server(cfg, params, max_pending=1, backpressure="block")
+    hs2 = [srv2.submit(Request(prompt=p, max_new_tokens=n))
+           for p, n in zip(prompts, NEWS)]
+    srv2.run()
+    assert all(h.result().finish_reason in ("eos", "length") for h in hs2)
+    assert lifecycle(srv2)["rejected"] == 0
+
+
+def test_no_progress_raises_descriptive_serve_error(setup):
+    """A server that can never admit (persistent injected exhaustion at
+    the admission check) must raise a ServeError naming the stuck request
+    instead of letting Handle.result() spin forever."""
+    cfg, params, prompts = setup
+    srv = make_server(cfg, params, cache_mode="paged", stall_steps=16,
+                      faults=FaultPlan(rates={"pool_alloc": 1.0}))
+    h = srv.submit(Request(prompt=prompts[0], max_new_tokens=2))
+    with pytest.raises(ServeError, match=r"no progress for 16 .*request 0"):
+        h.result()
+    assert not h.done  # the request is stuck, not silently failed
+
+
+def test_deadline_exempts_stall_detection(setup):
+    """While an unexpired deadline pends, zero-progress steps are not a
+    stall — wall-clock time retires the request, and the server drains
+    instead of raising."""
+    cfg, params, prompts = setup
+    srv = make_server(cfg, params, cache_mode="paged", stall_steps=4,
+                      default_deadline_s=0.2,
+                      faults=FaultPlan(rates={"pool_alloc": 1.0}))
+    h = srv.submit(Request(prompt=prompts[0], max_new_tokens=2))
+    assert h.result().finish_reason == "deadline"
+
+
+# ---------------------------------------------------------------------------
+# Seeded chaos soak (replayable via REPRO_CHAOS_SEED)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,pfx", [("dense", "off"), ("paged", "off"),
+                                      ("paged", "on")])
+def test_chaos_soak(setup, mode, pfx):
+    """Random fault rates at EVERY site, derived from one printed seed,
+    against every cache mode: whatever fires, every request reaches a
+    terminal state, failures carry attribution, survivors are bit-identical
+    to the fault-free run, and the per-step audit stays clean.  Failures
+    print the seed; ``REPRO_CHAOS_SEED=<seed> pytest ...`` replays the
+    identical schedule."""
+    cfg, params, prompts = setup
+    rng = np.random.default_rng((CHAOS_SEED,
+                                 zlib.crc32(f"{mode}/{pfx}".encode())))
+    rates = {s: round(float(u), 3) for s, u in
+             zip(FAULT_SITES, rng.uniform(0.02, 0.2, len(FAULT_SITES)))}
+    kw = dict(cache_mode=mode, prefix_cache=pfx)
+    if mode == "paged":
+        kw["pool_hbm_bytes"] = 8 * page_bytes(cfg)  # real pressure too
+    plan = FaultPlan(seed=CHAOS_SEED, rates=rates)
+    try:
+        clean = make_server(cfg, params, **kw)
+        _, base = run_all(clean, prompts)
+        srv = make_server(cfg, params, **kw, faults=plan, max_requeues=4,
+                          audit_every=1)
+        _, res = run_all(srv, prompts)
+        for i, r in enumerate(res):
+            assert r.finish_reason in ("eos", "length", "error"), i
+            if r.finish_reason == "error":
+                assert r.error and f"request {i}" in r.error
+            else:
+                assert r.tokens.tolist() == base[i].tokens.tolist(), i
+        assert srv.auditor.report()["clean"], srv.auditor.report()
+        assert plan.fired, "soak rates never fired — not a soak"
+    except BaseException:
+        print(f"\nchaos soak [{mode}/{pfx}] failed; replay with "
+              f"REPRO_CHAOS_SEED={CHAOS_SEED}\nplan: {plan!r}\n"
+              f"fired: {plan.stats()['fired']}", file=sys.stderr)
+        # CI uploads these as the failure artifact (auditor report + the
+        # exact schedule); local runs skip the write unless asked.
+        rep_dir = os.environ.get("REPRO_CHAOS_REPORT_DIR")
+        if rep_dir:
+            report = {"seed": CHAOS_SEED, "mode": mode, "prefix": pfx,
+                      "plan": plan.stats()}
+            if "srv" in locals():
+                report["audit"] = srv.auditor.report()
+            path = Path(rep_dir) / f"chaos_{mode}_{pfx}.json"
+            path.write_text(json.dumps(report, indent=2, default=str))
+        raise
+
+
+def test_chaos_soak_sharded_subprocess():
+    """The 4-device leg: forced victimless reclaim on a sharded paged
+    arena (2 data shards x 6 pages, prefix sharing on) fails only the
+    struck streams; survivors match the clean sharded run bit for bit and
+    the auditor holds across every step.  Runs in a subprocess so the
+    forced device count cannot leak into this process's jax runtime."""
+    prog = textwrap.dedent(f"""
+        import dataclasses, json
+        import numpy as np, jax
+        from repro import api
+        from repro.core import pool as blockpool
+        from repro.models import model as M, registry
+        from repro.launch.mesh import make_serve_mesh
+        from repro.serve.faults import FaultPlan
+
+        cfg = dataclasses.replace(registry.get_smoke_config("yi_6b"),
+                                  cache_layout="packed", cache_block=8)
+        params, _ = M.init_params(cfg, jax.random.PRNGKey(0))
+        bpp = sum(blockpool.page_nbytes(s, cfg.n_kv_heads,
+                                        cfg.resolved_head_dim)
+                  for s in M.cache_specs(cfg, 128))
+        # Pressure from decode growth (short prompts admit easily, rings
+        # grow to ~4 pages each; 2 rows/shard x 6 pages/shard overcommits)
+        rng = np.random.default_rng(7)
+        work = [(rng.integers(0, cfg.vocab_size, L).astype(np.int32), n)
+                for L, n in [(8, 28), (9, 26), (10, 24),
+                             (11, 22), (12, 20), (13, 18)]]
+
+        def run(faults, max_requeues, audit_every):
+            server = api.serve(cfg, params, max_slots=4, max_seq=128,
+                               q_chunk=32, kv_chunk=32, cache_mode="paged",
+                               prefix_cache="on",
+                               mesh=make_serve_mesh("2,2"),
+                               pool_hbm_bytes=12 * bpp,
+                               faults=faults, max_requeues=max_requeues,
+                               audit_every=audit_every)
+            hs = [server.submit(api.Request(prompt=p, max_new_tokens=n))
+                  for p, n in work]
+            server.run()
+            return server, [h.result() for h in hs]
+
+        csrv, base = run(None, 32, 1)
+        plan = FaultPlan(seed={CHAOS_SEED},
+                         rates={{"reclaim_sweep": 1.0, "prefix_evict": 1.0}})
+        fsrv, res = run(plan, 0, 1)
+        out = {{
+            "clean_reasons": [r.finish_reason for r in base],
+            "clean_audit": csrv.auditor.report()["clean"],
+            "preemptions": int(csrv.preemptions),
+            "reasons": [r.finish_reason for r in res],
+            "errors": [r.error for r in res],
+            "survivors_match": all(
+                res[i].tokens.tolist() == base[i].tokens.tolist()
+                for i in range(len(res))
+                if res[i].finish_reason != "error"),
+            "audit": fsrv.auditor.report(),
+            "fired": len(plan.fired),
+            "failures": fsrv.stats()["lifecycle"]["failures"],
+        }}
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=540)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert all(r in ("eos", "length") for r in res["clean_reasons"]), res
+    assert res["clean_audit"] and res["preemptions"] > 0, res
+    failed = [i for i, r in enumerate(res["reasons"]) if r == "error"]
+    assert failed and len(failed) < len(res["reasons"]), res
+    for i in failed:
+        assert "pool exhausted with no reclaimable pages" in res["errors"][i]
+    assert res["survivors_match"], res
+    assert res["audit"]["clean"], res["audit"]
+    assert res["fired"] > 0 and res["failures"] == len(failed), res
+
+
+# ---------------------------------------------------------------------------
+# The auditor catches real corruption (it is not a rubber stamp)
+# ---------------------------------------------------------------------------
+
+
+def test_auditor_detects_seeded_corruption(setup):
+    """Sabotage a live server's bookkeeping in the ways the auditor
+    claims to cover and verify each is reported."""
+    cfg, params, prompts = setup
+    srv = make_server(cfg, params, cache_mode="paged", prefix_cache="on",
+                      audit_every=1)
+    hs = [srv.submit(Request(prompt=p, max_new_tokens=n))
+          for p, n in zip(prompts, NEWS)]
+    srv.step()
+    srv.step()
+    assert srv.auditor.audit() == []  # clean mid-flight
+    # 1. leak a refcount: retain a live page nobody else references
+    live = next(iter(srv.pool._live))
+    srv.pool.retain([live])
+    bad = srv.auditor.audit()
+    assert any("refcount" in b for b in bad), bad
+    srv.pool.release([live])
+    assert srv.auditor.audit() == []
+    # 2. host/device divergence: flip one host page-table entry
+    row = next(r for r, s in enumerate(srv._slots) if s is not None)
+    slot = int(np.argmax(srv._pt_host[row] >= 0))
+    keep = srv._pt_host[row, slot]
+    srv._pt_host[row, slot] = -1
+    bad = srv.auditor.audit()
+    assert any("device page table" in b or "refcount" in b for b in bad), bad
+    srv._pt_host[row, slot] = keep
+    # 3. a finished handle left scheduled
+    h = srv._slots[row]
+    h._finish = "length"
+    with pytest.raises(InvariantViolation, match="still scheduled"):
+        srv.auditor.check()
+    h._finish = None
+    srv.run()
+    for h in hs:
+        h.result()
+    assert srv.auditor.audit() == []

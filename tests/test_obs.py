@@ -226,7 +226,7 @@ def test_stats_schema_across_modes(setup):
         stats[(mode, pfx)] = server.stats()
     for (mode, pfx), st in stats.items():
         base = {"cache_mode", "active", "pending", "preemptions",
-                "prefill", "latency", "trace", "shards"}
+                "prefill", "latency", "trace", "shards", "lifecycle"}
         want = base | ({"pool"} if mode == "paged" else set())
         want |= {"prefix"} if pfx != "off" else set()
         assert set(st) == want, (mode, pfx)
@@ -373,8 +373,8 @@ def test_bench_columns_schema(traced):
 def test_format_snapshot_renders_all_sections(traced):
     server, _, _ = traced
     text = obs.format_snapshot(server.stats())
-    for frag in ("serve[paged]", "prefill[", "latency:", "pool:",
-                 "shards:", "prefix[on]", "trace[full]"):
+    for frag in ("serve[paged]", "lifecycle:", "prefill[", "latency:",
+                 "pool:", "shards:", "prefix[on]", "trace[full]"):
         assert frag in text, frag
 
 
